@@ -1,0 +1,50 @@
+"""Beyond-paper ablation: which of DCQCN-Rev's mechanisms buys what?
+
+Cross the marking stage {CP, ECP} with the reaction stage {RP, ERP}
+(notification follows reaction: NP with RP, ENP with ERP) on the paper's
+equal-work scenario (roll=0).  (CP,RP) = DCQCN; (ECP,ERP) = DCQCN-Rev.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CCConfig, CCScheme, paper_incast_volume, run
+
+COMBOS = [("cp", "rp"), ("ecp", "rp"), ("cp", "erp"), ("ecp", "erp")]
+
+
+def run_ablation() -> list[dict]:
+    out = []
+    for marking, reaction in COMBOS:
+        cfg = CCConfig(scheme=CCScheme.DCQCN, marking=marking,
+                       reaction=reaction)
+        scn = paper_incast_volume(cfg, roll=0)
+        res = run(scn, cfg, n_steps=18000)
+        thr = res.mean_throughput_while_active() / 1e9
+        out.append({
+            "marking": marking.upper(),
+            "reaction": reaction.upper(),
+            "completion_ms": res.completion_time() * 1e3,
+            "victim_gbps": float(thr[4]),
+            "victim_marks": int(res.marked[:, 4].sum()),
+            "aggregate_gbps": float(thr.sum()),
+        })
+    return out
+
+
+def main() -> list[tuple]:
+    rows = []
+    for r in run_ablation():
+        name = f"ablation.{r['marking']}+{r['reaction']}"
+        rows.append((name, r["completion_ms"] * 1e3,
+                     f"done={r['completion_ms']:.2f}ms "
+                     f"victim={r['victim_gbps']:.2f}GB/s "
+                     f"vmarks={r['victim_marks']} "
+                     f"agg={r['aggregate_gbps']:.2f}GB/s"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(",".join(str(x) for x in row))

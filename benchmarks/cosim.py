@@ -1,0 +1,86 @@
+"""Co-simulation: the dry-run's collective bytes, pushed through the
+paper's CC mechanisms on the CLOS fabric model.
+
+This is the integration benchmark that ties the two halves of the repo
+together: for a training step of each architecture, take the cross-pod
+collective volume from the compiled artifact, model it as concurrent
+flows between pod leaf groups (the DCN incast pattern), and measure the
+collective completion time under PFC / DCQCN / DCQCN-Rev — with and
+without ERP-paced chunking.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.core import CCConfig, CCScheme, collective_flows, run
+
+ART = "artifacts/dryrun/pod2x16x16"
+
+
+def _pod_bytes(rec: dict) -> float:
+    """Cross-pod share of the collective traffic (upper-bound model:
+    1/pod-fraction of the total collective bytes move on DCN)."""
+    return max(rec.get("collective_bytes_total", 0.0) / 2.0, 1e6)
+
+
+def cosim_cell(rec: dict, n_sources: int = 8,
+               budget_ms: float = 2.0) -> dict:
+    """Reduce-phase incast: n_sources pod-0 aggregators funnel the
+    cell's DCN bytes into the pod-1 ingress node, beside a victim
+    tenant flow.  The volume is clipped to what a `budget_ms` window
+    can carry so every scheme gets a comparable, bounded run."""
+    vol = min(_pod_bytes(rec), budget_ms * 1e-3 * 12.5e9 * 2)
+    out = {"arch": rec["arch"], "shape": rec["shape"], "dcn_bytes": vol}
+    srcs = [i if i < 3 else i + 1 for i in range(n_sources)]
+    pairs = [(s, 16) for s in srcs]
+    pairs.append((3, 12))                      # victim tenant (leaf 0)
+    per_flow = vol / n_sources
+    horizon = max(3e-3, 4 * vol / 12.5e9)
+    for scheme in CCScheme:
+        cfg = CCConfig(scheme=scheme)
+        scn = collective_flows(cfg, pairs, per_flow)
+        res = run(scn, cfg, n_steps=int(horizon / cfg.sim.dt))
+        ct = res.completion_times()
+        thr = res.mean_throughput_while_active()
+        out[scheme.name + "_ms"] = float(
+            __import__("numpy").nanmax(ct[:-1])) * 1e3
+        out[scheme.name + "_victim_gbps"] = float(thr[-1]) / 1e9
+    return out
+
+
+def main(limit: int = 3) -> list[tuple]:
+    paths = sorted(glob.glob(os.path.join(ART, "*__train_4k.json")))
+    out = []
+    done = 0
+    for p in paths:
+        with open(p) as f:
+            rec = json.load(f)
+        if rec.get("skipped") or "collective_bytes_total" not in rec:
+            continue
+        r = cosim_cell(rec)
+        speedup = r["DCQCN_ms"] / max(r["DCQCN_REV_ms"], 1e-9)
+        out.append((f"cosim.{r['arch']}",
+                    r["DCQCN_REV_ms"] * 1e3,
+                    f"pfc={r['PFC_ONLY_ms']:.2f}ms "
+                    f"dcqcn={r['DCQCN_ms']:.2f}ms "
+                    f"rev={r['DCQCN_REV_ms']:.2f}ms "
+                    f"rev_vs_dcqcn={speedup:.2f}x "
+                    f"victim_rev={r['DCQCN_REV_victim_gbps']:.1f}GB/s "
+                    f"victim_dcqcn={r['DCQCN_victim_gbps']:.1f}GB/s"))
+        done += 1
+        if done >= limit:
+            break
+    if not out:
+        out.append(("cosim.skipped", 0.0,
+                    "no dry-run artifacts yet — run repro.launch.dryrun"))
+    return out
+
+
+if __name__ == "__main__":
+    for row in main(limit=10):
+        print(",".join(str(x) for x in row))

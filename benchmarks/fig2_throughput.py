@@ -1,0 +1,63 @@
+"""Paper Fig. 2 — aggregate network throughput + completion times.
+
+Runs the §II.A scenario under PFC / DCQCN / DCQCN-Rev on both wirings
+(roll=0: shared-wire, the Fig. 3 HoL narrative; roll=1: victim-disjoint,
+the Fig. 2 25 GB/s aggregate).  Writes the throughput timelines to
+artifacts/paper/fig2_<roll>.csv and returns the headline numbers.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import (CCScheme, PAPER_CONFIG, paper_incast,
+                        paper_incast_volume, run)
+
+OUT = "artifacts/paper"
+
+
+def run_fig2(roll: int = 1, n_steps: int = 14000) -> dict:
+    cfg = PAPER_CONFIG
+    os.makedirs(OUT, exist_ok=True)
+    scn_w = paper_incast(cfg, roll=roll)          # window mode: plateaus
+    scn_v = paper_incast_volume(cfg, roll=roll)   # equal work: completion
+    res = {}
+    rows = None
+    for scheme in CCScheme:
+        rw = run(scn_w, cfg.replace(scheme=scheme), n_steps=n_steps)
+        rv = run(scn_v, cfg.replace(scheme=scheme), n_steps=n_steps + 4000)
+        agg = rw.aggregate_throughput(window=100) / 1e9
+        if rows is None:
+            rows = [rw.times * 1e3]
+        rows.append(agg)
+        thr = rw.mean_throughput_while_active() / 1e9
+        res[scheme.name] = {
+            "aggregate_gbps": float(thr.sum()),
+            "victim_gbps": float(thr[4]),
+            "completion_ms": rv.completion_time() * 1e3,
+            "peak_queue_kb": float(rw.max_q.max() / 1e3),
+        }
+    header = "time_ms," + ",".join(s.name for s in CCScheme)
+    np.savetxt(os.path.join(OUT, f"fig2_roll{roll}.csv"),
+               np.stack(rows, 1), delimiter=",", header=header, fmt="%.4f")
+    return res
+
+
+def main() -> list[tuple]:
+    out = []
+    for roll in (0, 1):
+        r = run_fig2(roll)
+        for scheme, v in r.items():
+            out.append((f"fig2.roll{roll}.{scheme}",
+                        v["completion_ms"] * 1e3,   # us per "call" (= run)
+                        f"agg={v['aggregate_gbps']:.2f}GB/s "
+                        f"victim={v['victim_gbps']:.2f}GB/s "
+                        f"done={v['completion_ms']:.2f}ms"))
+    return out
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,49 @@
+"""Paper Fig. 3 — per-flow bandwidth under each CC scheme (roll=0, the
+shared-wire wiring where the HoL pathology lives).
+
+Reproduces: PFC parking-lot on F0/F1 vs F4/F8, DCQCN throttling the
+victim alongside congesting flows, DCQCN-Rev keeping the victim at its
+max-min share while fair-sharing the incast flows.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import (CCScheme, PAPER_CONFIG, PAPER_FLOW_NAMES,
+                        paper_incast, run)
+
+OUT = "artifacts/paper"
+
+
+def run_fig3(n_steps: int = 14000) -> dict:
+    cfg = PAPER_CONFIG
+    os.makedirs(OUT, exist_ok=True)
+    scn = paper_incast(cfg, roll=0)
+    res = {}
+    for scheme in CCScheme:
+        r = run(scn, cfg.replace(scheme=scheme), n_steps=n_steps)
+        thr = r.flow_throughput(window=100) / 1e9
+        header = "time_ms," + ",".join(PAPER_FLOW_NAMES)
+        np.savetxt(os.path.join(OUT, f"fig3_{scheme.name}.csv"),
+                   np.concatenate([r.times[:, None] * 1e3, thr], 1),
+                   delimiter=",", header=header, fmt="%.4f")
+        means = r.mean_throughput_while_active() / 1e9
+        res[scheme.name] = dict(zip(PAPER_FLOW_NAMES, map(float, means)))
+    return res
+
+
+def main() -> list[tuple]:
+    r = run_fig3()
+    out = []
+    for scheme, flows in r.items():
+        for name, gbps in flows.items():
+            out.append((f"fig3.{scheme}.{name}", 0.0, f"{gbps:.3f}GB/s"))
+    return out
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,100 @@
+"""Render artifact tables into EXPERIMENTS.md at the <!-- X --> markers.
+
+  PYTHONPATH=src python -m benchmarks.report
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+from .roofline import build_table, to_markdown
+
+
+def dryrun_table() -> str:
+    rows = []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        for p in sorted(glob.glob(f"artifacts/dryrun/{mesh}/*.json")):
+            r = json.load(open(p))
+            if r.get("skipped"):
+                continue
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | "
+                f"{r['compile_s']:.0f}s | "
+                f"{r['memory'].get('argument_size_in_bytes', 0)/2**30:.2f} | "
+                f"{r['memory'].get('temp_size_in_bytes', 0)/2**30:.2f} | "
+                f"{r['flops_total']:.3g} | "
+                f"{r['collective_bytes_total']:.3g} |")
+    n1 = len(glob.glob("artifacts/dryrun/pod16x16/*.json"))
+    n2 = len(glob.glob("artifacts/dryrun/pod2x16x16/*.json"))
+    head = (f"**{n1} single-pod + {n2} multi-pod cells compiled** "
+            "(34 runnable of 40; 6 documented skips).\n\n"
+            "| arch | shape | mesh | compile | args GiB/dev | temp GiB/dev "
+            "| flops/dev | coll B/dev |\n|---|---|---|---|---|---|---|---|\n")
+    return head + "\n".join(rows) + "\n"
+
+
+def cosim_table() -> str:
+    try:
+        from .cosim import main as cosim_main
+        rows = cosim_main(limit=10)
+    except Exception as e:   # noqa: BLE001
+        return f"(co-sim unavailable: {e})\n"
+    out = "| arch | PFC | DCQCN | DCQCN-Rev |\n|---|---|---|---|\n"
+    for name, _, derived in rows:
+        if ".section" in name or "skipped" in name:
+            continue
+        arch = name.split(".", 1)[1]
+        d = dict(kv.split("=") for kv in derived.split() if "=" in kv)
+        out += (f"| {arch} | {d.get('pfc','-')} | {d.get('dcqcn','-')} | "
+                f"{d.get('rev','-')} ({d.get('rev_vs_dcqcn','-')} vs "
+                f"DCQCN) |\n")
+    return out
+
+
+def perf_log() -> str:
+    paths = sorted(glob.glob("artifacts/perf/*.json"))
+    if not paths:
+        return "(perf iterations pending)\n"
+    out = ""
+    for p in paths:
+        r = json.load(open(p))
+        out += (f"* `{r['arch']} x {r['shape']}` **{r['tag']}** "
+                f"({', '.join(r['overrides'])}): "
+                f"flops {r['flops_total']:.3g}, "
+                f"bytes {r['bytes_accessed_total']:.3g}, "
+                f"coll {r['collective_bytes_total']:.3g}, "
+                f"temp {r['memory'].get('temp_size_in_bytes',0)/2**30:.1f} "
+                f"GiB\n")
+    return out
+
+
+def inject(markdown: str, marker: str, content: str) -> str:
+    tag = f"<!-- {marker} -->"
+    if tag not in markdown:
+        return markdown
+    pattern = re.escape(tag) + r".*?(?=\n## |\Z)"
+    return re.sub(pattern, tag + "\n\n" + content, markdown,
+                  flags=re.DOTALL)
+
+
+def main():
+    path = "EXPERIMENTS.md"
+    md = open(path).read()
+    md = inject(md, "DRYRUN_TABLE", dryrun_table())
+    rows = build_table()
+    os.makedirs("artifacts", exist_ok=True)
+    with open("artifacts/roofline.md", "w") as f:
+        f.write(to_markdown(rows))
+    md = inject(md, "ROOFLINE_TABLE", to_markdown(rows))
+    md = inject(md, "COSIM_TABLE", cosim_table())
+    md = inject(md, "PERF_LOG", perf_log())
+    open(path, "w").write(md)
+    print(f"EXPERIMENTS.md updated "
+          f"({len(rows)} roofline rows).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Benchmark entrypoint — one section per paper table/figure + the
+beyond-paper harnesses.  Prints ``name,us_per_call,derived`` CSV.
+
+  fig2.*      paper Fig. 2 (aggregate throughput, completion times)
+  fig3.*      paper Fig. 3 (per-flow bandwidth)
+  cc_scale.*  DC-scale reaction-point + fluid stepping throughput
+  roofline.*  §Roofline terms per (arch x shape) from dry-run artifacts
+  cosim.*     collective traffic x CC scheme co-simulation
+  train.*     tiny end-to-end training-step wall time (CPU)
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def _section(name: str, fn):
+    t0 = time.perf_counter()
+    try:
+        rows = fn()
+    except Exception as e:   # noqa: BLE001 — a bench must not kill the run
+        rows = [(f"{name}.ERROR", 0.0, repr(e)[:120])]
+    dt = time.perf_counter() - t0
+    rows.append((f"{name}.section_wall_s", dt * 1e6, f"{dt:.1f}s"))
+    return rows
+
+
+def bench_train_step() -> list[tuple]:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.models import transformer
+    from repro.models.layers import init_params
+    from repro.train.step import (StepConfig, init_train_state,
+                                  make_train_step)
+    from repro.data import DataConfig, SyntheticLM
+
+    out = []
+    for arch in ("qwen2.5-32b", "mixtral-8x22b", "falcon-mamba-7b"):
+        cfg = get_smoke_config(arch)
+        params = init_params(transformer.param_defs(cfg), 0, jnp.float32)
+        sc = StepConfig()
+        state = init_train_state(cfg, params, sc)
+        step = jax.jit(make_train_step(cfg, sc))
+        ds = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                    global_batch=4))
+        b = ds.batch_at(0)
+        state, m = step(state, b)          # compile
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for i in range(5):
+            state, m = step(state, ds.batch_at(i + 1))
+        jax.block_until_ready(m["loss"])
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        out.append((f"train.smoke.{arch}", us,
+                    f"loss={float(m['loss']):.3f}"))
+    return out
+
+
+def main() -> None:
+    from . import (ablation, cc_scale, cosim, fig2_throughput,
+                   fig3_perflow, roofline)
+
+    all_rows = []
+    all_rows += _section("fig2", fig2_throughput.main)
+    all_rows += _section("fig3", fig3_perflow.main)
+    all_rows += _section("ablation", ablation.main)
+    all_rows += _section("cc_scale", cc_scale.main)
+    all_rows += _section("roofline", roofline.main)
+    all_rows += _section("cosim", cosim.main)
+    all_rows += _section("train", bench_train_step)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in all_rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Fault-tolerance walkthrough: train, 'crash', resume bit-exactly, then
+restore the same checkpoint onto a *different* mesh (elastic scaling).
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+
+import os
+import shutil
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.data import DataConfig
+from repro.models import ModelConfig
+from repro.models.layers import init_params
+from repro.models.transformer import param_defs
+from repro.optim import AdamWConfig
+from repro.train.loop import TrainLoopConfig, train_loop
+from repro.train.step import StepConfig, init_train_state, make_train_step
+
+CKPT = "/tmp/repro_elastic"
+
+
+def main():
+    shutil.rmtree(CKPT, ignore_errors=True)
+    cfg = ModelConfig(name="elastic-demo", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab=512)
+    params = init_params(param_defs(cfg), 0, jnp.float32)
+    sc = StepConfig(opt=AdamWConfig(lr=1e-3), warmup_steps=5,
+                    total_steps=100)
+    state = init_train_state(cfg, params, sc)
+    step = jax.jit(make_train_step(cfg, sc))
+    data = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4,
+                      kind="markov")
+
+    # --- phase 1: train 25 steps, checkpoint every 10, then "crash" ----
+    out1 = train_loop(step, state, data,
+                      TrainLoopConfig(total_steps=25, ckpt_dir=CKPT,
+                                      ckpt_every=10))
+    print(f"phase1: reached step {out1['final_step']} "
+          f"(last committed ckpt: step 20); simulating crash...")
+
+    # --- phase 2: restart; loop auto-resumes from step 20 --------------
+    out2 = train_loop(step, state, data,
+                      TrainLoopConfig(total_steps=40, ckpt_dir=CKPT,
+                                      ckpt_every=10))
+    print(f"phase2: auto-resumed and reached step {out2['final_step']} "
+          f"({len(out2['losses'])} new steps — exact data continuation)")
+    assert out2["final_step"] == 40
+
+    # --- phase 3: elastic restore onto an explicit 1-device mesh -------
+    from repro.ckpt import load_checkpoint
+    from repro.train.loop import NT_REGISTRY
+    mesh = jax.make_mesh((1,), ("data",))
+    flat_restored, extra = load_checkpoint(CKPT, nt_registry=NT_REGISTRY)
+    resharded = jax.tree.map(
+        lambda a: jax.device_put(
+            a, NamedSharding(mesh, PartitionSpec())), flat_restored.params)
+    print(f"phase3: restored step-{extra['data_step']} params onto mesh "
+          f"{dict(mesh.shape)} — {len(jax.tree.leaves(resharded))} arrays "
+          f"resharded")
+    # verify restored == in-memory final params
+    same = jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()),
+        resharded, out2["state"].params)
+    print(f"max |restored - live| = {max(jax.tree.leaves(same)):.2e}")
+    print("elastic restart demo complete.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""The paper's mechanism applied to training traffic: ERP-paced chunked
+cross-pod gradient reduction.
+
+    PYTHONPATH=src python examples/paced_collectives.py
+
+1. Builds a gradient-sized pytree, splits it into chunks (the injection
+   quanta a NIC rate-limiter can pace).
+2. Runs the CLOS fluid model with one flow per (pod-pair, chunk) under
+   PFC / DCQCN / DCQCN-Rev and prints the collective completion times —
+   the schedule that `repro.dist.pacer` would program into the NICs.
+3. Shows the int8+EF compression interaction (4x fewer bytes to pace).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+
+from repro.dist.pacer import chunk_bytes_of, erp_chunk_schedule
+
+
+def main():
+    # a ~100M-param gradient tree (fp32), reduced cross-pod each step
+    grads = {f"layer{i}": jnp.zeros((1024, 1024)) for i in range(25)}
+    for compressed in (False, True):
+        chunks = chunk_bytes_of(grads, 8)
+        if compressed:
+            chunks = [c // 4 for c in chunks]     # int8 + EF (4x)
+        label = "int8+EF" if compressed else "fp32"
+        print(f"\n--- reduce phase, {sum(chunks)/1e6:.0f} MB ({label}), "
+              f"8-to-1 DCN incast + victim tenant ---")
+        print(f"{'scheme':10s} {'collective done':>16s} "
+              f"{'victim tenant':>14s}")
+        for scheme in ("PFC_ONLY", "DCQCN", "DCQCN_REV"):
+            s = erp_chunk_schedule(chunks, n_pods=2, scheme_name=scheme)
+            print(f"{scheme:10s} {s['completion_ms']:13.2f} ms "
+                  f"{s['victim_gbps']:11.2f} GB/s")
+    print("\nDCQCN-Rev finishes the reduction at the incast floor while "
+          "the victim tenant\nkeeps its max-min share — the paper's claim, on "
+          "the framework's own traffic.")
+
+
+if __name__ == "__main__":
+    main()

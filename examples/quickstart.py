@@ -1,0 +1,74 @@
+"""Quickstart: train a small LM end-to-end on CPU with the full stack —
+config registry, synthetic data pipeline, AdamW + cosine schedule,
+microbatch accumulation, int8+EF compressed gradients, async atomic
+checkpoints, straggler detection, exact resume.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 300] [--big]
+
+``--big`` trains a ~100M-param model (slow on CPU but the real thing);
+the default is a ~3M-param model that converges visibly in ~2 minutes.
+"""
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import DataConfig
+from repro.models import ModelConfig
+from repro.models.layers import init_params
+from repro.models.transformer import param_defs
+from repro.optim import AdamWConfig
+from repro.train.loop import TrainLoopConfig, train_loop
+from repro.train.step import StepConfig, init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--big", action="store_true",
+                    help="~100M params instead of ~3M")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_quickstart")
+    args = ap.parse_args()
+
+    if args.big:
+        cfg = ModelConfig(name="quickstart-100m", n_layers=12, d_model=768,
+                          n_heads=12, n_kv_heads=4, head_dim=64, d_ff=2048,
+                          vocab=32768)
+    else:
+        cfg = ModelConfig(name="quickstart-3m", n_layers=4, d_model=128,
+                          n_heads=4, n_kv_heads=2, head_dim=32, d_ff=512,
+                          vocab=1024)
+    print(f"model: {cfg.name}  params ~{cfg.param_count()/1e6:.1f}M")
+
+    params = init_params(param_defs(cfg), seed=0, dtype=jnp.float32)
+    sc = StepConfig(opt=AdamWConfig(lr=1e-2, weight_decay=0.01),
+                    microbatches=2, compress_grads=True,
+                    warmup_steps=20, total_steps=args.steps)
+    state = init_train_state(cfg, params, sc)
+    step = jax.jit(make_train_step(cfg, sc))
+
+    data = DataConfig(vocab=cfg.vocab, seq_len=128, global_batch=8,
+                      kind="markov")
+    loop = TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                           ckpt_every=100, log_every=20)
+
+    def on_metrics(s, m):
+        print(f"step {s:4d}  loss {float(m['loss']):.4f}  "
+              f"lr {float(m['lr']):.2e}  "
+              f"gnorm {float(m['grad_norm']):.2f}  "
+              f"{m['step_time']*1e3:.0f} ms")
+
+    out = train_loop(step, state, data, loop, on_metrics=on_metrics)
+    print(f"\ndone: steps={out['final_step']} "
+          f"loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f} "
+          f"(stragglers: {out['stragglers']})")
+    print(f"checkpoints in {args.ckpt_dir} — rerun to resume exactly.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,377 @@
+"""Dense fluid model of the CC closed loop (PFC / DCQCN / DCQCN-Rev).
+
+TPU-native adaptation of the paper's event-driven evaluation (DESIGN.md §2):
+the whole network is a fixed-shape state advanced by one fused, branch-free
+update per ``dt``.  No event queue exists; flows x hops are vectorised.
+
+Representation (compact, scales to DC-size):
+  * ``routes[F, H]`` — link id crossed at each hop (PAD = -1).
+  * ``qh[F, H]``     — bytes of flow f queued at the *sink* of wire h
+                       (the input buffer of the downstream switch), waiting
+                       to cross wire h+1.  The last wire delivers to the
+                       host, so qh[:, hops-1] is always 0.
+  * ``nicq[F]``      — host backlog (generated, not yet injected).
+
+Per step (Jacobi, from pre-step state):
+  1. generation into nicq (rate-limited window generator, finite NIC buf);
+  2. transfers: every wire w serves the queues feeding it proportionally
+     to their backlog, capped by C_w*dt, gated by PFC pause, and scaled by
+     a strict-FIFO HoL factor (a queue whose head bytes belong to a paused
+     flow stalls everyone — the paper's victim pathology);
+  3. PFC: a wire pauses when its sink queue crosses XOFF (hysteresis XON),
+     plus a shared-pool pause per switch;
+  4. marking: CP (occupancy only) vs ECP (occupancy AND flow rate above
+     its waterfilled fair grant on its next wire — victims never marked);
+  5. notification: NP (50us suppression) vs ENP (fast coalescing +
+     severity payload = fair grant at the marking queue);
+  6. reaction: RP (DCQCN alpha/stage machine) vs ERP (set to signalled
+     fair share, hold, desynchronised additive recovery).
+
+All arrays are float32; the update is pure jnp and runs inside lax.scan.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .params import CCConfig, CCScheme
+from .routing import PAD
+
+
+class Scenario(NamedTuple):
+    """Static per-run tensors (host numpy; moved to device once)."""
+
+    routes: np.ndarray        # [F, H] int32 link ids, PAD = -1
+    hops: np.ndarray          # [F] int32
+    gen_rate: np.ndarray      # [F] f32 B/s offered by the generator
+    t_start: np.ndarray       # [F] f32 s
+    t_stop: np.ndarray        # [F] f32 s (generator closes)
+    volume: np.ndarray        # [F] f32 B total work (inf = window-limited)
+    capacity: np.ndarray      # [L] f32 B/s per directed link
+    sink_switch: np.ndarray   # [L] int32 (-1 for host sinks)
+    n_switches: int
+    rtt_steps: np.ndarray     # [F] int32 CNP feedback delay in dt steps
+    nic_buffer: float = 4e6   # B of host NIC queue
+
+
+class FluidState(NamedTuple):
+    qh: jnp.ndarray           # [F, H] bytes at hop queues
+    nicq: jnp.ndarray         # [F]
+    delivered: jnp.ndarray    # [F]
+    offered: jnp.ndarray      # [F] bytes the generator admitted into nicq
+    dropped: jnp.ndarray      # [F] generator overflow (app backpressure)
+    est: jnp.ndarray          # [F, H] EWMA crossing rate per wire (B/s)
+    paused: jnp.ndarray       # [L] bool
+    # reaction-point state (DCQCN RP and ERP share slots where sensible)
+    rate: jnp.ndarray         # [F] current injection rate
+    rp_target: jnp.ndarray    # [F]
+    alpha: jnp.ndarray        # [F]
+    byte_cnt: jnp.ndarray     # [F]
+    tmr: jnp.ndarray          # [F]
+    alpha_tmr: jnp.ndarray    # [F]
+    bc_stage: jnp.ndarray     # [F] int32
+    t_stage: jnp.ndarray      # [F] int32
+    hold: jnp.ndarray         # [F] ERP hold-down timer
+    np_tmr: jnp.ndarray       # [F] time since last CNP emission
+    trig_buf: jnp.ndarray     # [D, F] CNP in flight (delay line)
+    tgt_buf: jnp.ndarray      # [D, F] severity payload in flight
+    t: jnp.ndarray            # [] int32 step counter
+
+
+class StepTrace(NamedTuple):
+    delivered: jnp.ndarray    # [F] cumulative bytes
+    rate: jnp.ndarray         # [F] RP rate
+    inst_thr: jnp.ndarray     # [F] delivery rate this step (B/s)
+    max_q: jnp.ndarray        # [] hottest queue (bytes)
+    n_paused: jnp.ndarray     # [] paused wires
+    marked: jnp.ndarray       # [F] marked this step?
+    cnp: jnp.ndarray          # [F] CNP received this step?
+
+
+DELAY_SLOTS = 32              # max CNP feedback delay in steps
+
+
+def _flow_jitter(n: int) -> np.ndarray:
+    """Deterministic per-flow jitter in [-1, 1] (Weyl sequence)."""
+    x = (np.arange(n, dtype=np.uint64) * np.uint64(2654435761)) % np.uint64(2**32)
+    return (x.astype(np.float64) / 2**31 - 1.0).astype(np.float32)
+
+
+def init_state(scn: Scenario, cfg: CCConfig) -> FluidState:
+    F, H = scn.routes.shape
+    L = scn.capacity.shape[0]
+    line = jnp.asarray(np.minimum(scn.gen_rate, cfg.link.line_rate),
+                       jnp.float32)
+    z_f = jnp.zeros((F,), jnp.float32)
+    return FluidState(
+        qh=jnp.zeros((F, H), jnp.float32),
+        nicq=z_f, delivered=z_f, offered=z_f, dropped=z_f,
+        est=jnp.zeros((F, H), jnp.float32),
+        paused=jnp.zeros((L,), bool),
+        rate=line,
+        rp_target=line,
+        alpha=jnp.full((F,), cfg.dcqcn.alpha_init, jnp.float32),
+        byte_cnt=z_f, tmr=z_f, alpha_tmr=z_f,
+        bc_stage=jnp.zeros((F,), jnp.int32),
+        t_stage=jnp.zeros((F,), jnp.int32),
+        hold=z_f, np_tmr=jnp.full((F,), 1.0, jnp.float32),
+        trig_buf=jnp.zeros((DELAY_SLOTS, F), jnp.float32),
+        tgt_buf=jnp.zeros((DELAY_SLOTS, F), jnp.float32),
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_step_fn(scn: Scenario, cfg: CCConfig):
+    """Returns step(state) -> (state, StepTrace). Pure; closes over statics."""
+    scheme = cfg.scheme
+    dt = jnp.float32(cfg.sim.dt)
+    F, H = scn.routes.shape
+    L = int(scn.capacity.shape[0])
+
+    routes = jnp.asarray(scn.routes, jnp.int32)
+    valid = routes != PAD
+    # safe indices: PAD -> L (extra scratch slot in scatter targets)
+    widx = jnp.where(valid, routes, L)
+    hops = jnp.asarray(scn.hops, jnp.int32)
+    arange_h = jnp.arange(H, dtype=jnp.int32)[None, :]
+    is_last = valid & (arange_h == (hops[:, None] - 1))
+    holds_queue = valid & (arange_h < (hops[:, None] - 1))   # qh slots in use
+
+    cap = jnp.asarray(np.concatenate([scn.capacity, [np.inf]]), jnp.float32)
+    sink_sw = jnp.asarray(np.concatenate([scn.sink_switch, [-1]]), jnp.int32)
+    n_sw = int(scn.n_switches)
+
+    gen_rate = jnp.asarray(scn.gen_rate, jnp.float32)
+    t_start = jnp.asarray(scn.t_start, jnp.float32)
+    t_stop = jnp.asarray(scn.t_stop, jnp.float32)
+    volume = jnp.asarray(scn.volume, jnp.float32)
+    line_rate = jnp.float32(cfg.link.line_rate)
+    nic_buf = jnp.float32(scn.nic_buffer)
+    rtt = jnp.asarray(scn.rtt_steps % DELAY_SLOTS, jnp.int32)
+    fidx = jnp.arange(F, dtype=jnp.int32)
+
+    xoff = jnp.float32(cfg.link.port_buffer * cfg.link.pfc_xoff_frac)
+    xon = jnp.float32(cfg.link.port_buffer * cfg.link.pfc_xon_frac)
+    pool_xoff = jnp.float32(cfg.link.shared_buffer * cfg.link.pfc_xoff_frac)
+    marking_kind = cfg.marking_kind
+    reaction_kind = cfg.reaction_kind
+    v_thresh = jnp.float32(cfg.dcqcn.kmin if marking_kind == "cp"
+                           else cfg.rev.detect_threshold)
+
+    p = cfg.dcqcn
+    r = cfg.rev
+    jitter = jnp.asarray(1.0 + r.erp_jitter * _flow_jitter(F), jnp.float32)
+    erp_slope = jnp.float32(r.erp_rai) * jitter
+    eps_rate = jnp.float32(1e6)      # B/s: "active" demand threshold
+
+    def scat(values_fh, init=0.0):
+        """Scatter-add a [F,H] quantity onto per-link slots [L+1]."""
+        out = jnp.full((L + 1,), init, jnp.float32)
+        return out.at[widx].add(values_fh)
+
+    def step(st: FluidState):
+        t_sec = st.t.astype(jnp.float32) * dt
+
+        # ---- 1. generation ------------------------------------------------
+        active = (t_sec >= t_start) & (t_sec < t_stop)
+        gen = jnp.where(active, gen_rate, 0.0) * dt
+        gen = jnp.minimum(gen, jnp.maximum(volume - st.offered, 0.0))
+        nicq = st.nicq + gen
+        over = jnp.maximum(nicq - nic_buf, 0.0)
+        nicq = nicq - over
+        offered = st.offered + gen - over
+        dropped = st.dropped + over
+
+        # ---- 2. transfers -------------------------------------------------
+        # source quantity eligible to cross wire h this step
+        src_inj = jnp.minimum(nicq, jnp.minimum(st.rate, line_rate) * dt)
+        src_q = jnp.concatenate([src_inj[:, None], st.qh[:, :-1]], axis=1)
+        src_q = jnp.where(valid, src_q, 0.0)
+
+        pause_l = jnp.concatenate([st.paused, jnp.zeros((1,), bool)])
+        wire_open = ~pause_l[widx]                         # [F,H]
+
+        # strict-FIFO HoL factor per link queue: share of the queue whose
+        # *next* wire is currently drainable.
+        next_open = jnp.concatenate(
+            [wire_open[:, 1:], jnp.ones((F, 1), bool)], axis=1)
+        q_here = jnp.where(holds_queue, st.qh, 0.0)        # queue at sink(h)
+        num = scat(q_here * next_open)
+        den = scat(q_here)
+        fifo_ok = jnp.where(den > 0, num / jnp.maximum(den, 1e-9), 1.0)
+
+        weight = jnp.where(wire_open, src_q, 0.0)
+        sum_w = scat(weight)
+        budget = cap[widx] * dt * fifo_ok[widx]
+        share = jnp.where(sum_w[widx] > 0,
+                          budget * weight / jnp.maximum(sum_w[widx], 1e-9),
+                          0.0)
+        T = jnp.minimum(weight, share)                     # bytes crossing h
+
+        nicq = nicq - T[:, 0]
+        qh = st.qh - jnp.pad(T[:, 1:], ((0, 0), (0, 1)))   # drain from h-1
+        qh = qh + jnp.where(holds_queue, T, 0.0)           # land at sink(h)
+        qh = jnp.maximum(qh, 0.0)
+        deliv_step = jnp.sum(jnp.where(is_last, T, 0.0), axis=1)
+        delivered = st.delivered + deliv_step
+
+        # crossing-rate EWMA (doubles as arrival-into-queue estimate)
+        beta = jnp.float32(r.ecp_rate_ewma)
+        est = (1 - beta) * st.est + beta * (T / dt)
+
+        # ---- 3. PFC -------------------------------------------------------
+        B = scat(jnp.where(holds_queue, qh, 0.0))[:L]      # [L] sink queues
+        paused = jnp.where(B > xoff, True,
+                           jnp.where(B < xon, False, st.paused))
+        pool = jnp.zeros((n_sw,), jnp.float32).at[
+            jnp.maximum(sink_sw[:L], 0)].add(jnp.where(sink_sw[:L] >= 0, B, 0.0))
+        pool_hot = pool > pool_xoff
+        paused = paused | jnp.where(sink_sw[:L] >= 0, pool_hot[
+            jnp.maximum(sink_sw[:L], 0)], False)
+
+        # ---- 4. marking ---------------------------------------------------
+        B1 = jnp.concatenate([B, jnp.zeros((1,), jnp.float32)])
+        q_over = B1[widx] > v_thresh                       # [F,H] queue hot?
+        present = (qh > 0) | (T > 0)
+
+        # Demand to cross wire h = arrival rate into the queue feeding it
+        # (pre-stall, so FIFO-blocked victims keep their true demand).
+        dem = jnp.concatenate([est[:, :1], est[:, :-1]], axis=1)
+        dem = jnp.where(valid, dem, 0.0)
+        act = (dem > eps_rate) & valid
+        n_act = scat(act.astype(jnp.float32), init=0.0)
+        caps_w = cap[widx]
+        sum_dem = scat(jnp.where(act, dem, 0.0))
+        share0 = caps_w / jnp.maximum(n_act[widx], 1.0)
+        under = dem < share0
+        surplus = scat(jnp.where(act & under, share0 - dem, 0.0))
+        n_heavy = scat((act & ~under).astype(jnp.float32))
+        grant = jnp.where(
+            under, dem,
+            share0 + surplus[widx] / jnp.maximum(n_heavy[widx], 1.0))
+        grant = jnp.where(act, grant, caps_w)
+        oversub = sum_dem[widx] > caps_w          # wire h oversubscribed?
+        # ... all shifted to the *next* wire (the flow's requested output)
+        inf_col = jnp.full((F, 1), jnp.inf, jnp.float32)
+        grant_next = jnp.concatenate([grant[:, 1:], inf_col], axis=1)
+        grant_next = jnp.where(holds_queue, grant_next, jnp.inf)
+        dem_next = jnp.concatenate([dem[:, 1:], inf_col * 0], axis=1)
+        over_next = jnp.concatenate(
+            [oversub[:, 1:], jnp.zeros((F, 1), bool)], axis=1)
+
+        if marking_kind == "cp":
+            mark_fh = q_over & present & holds_queue
+        else:
+            # ECP: queue over threshold AND the flow's requested output is
+            # oversubscribed AND its own demand exceeds its fair grant there.
+            congesting = over_next & (
+                dem_next > jnp.float32(r.ecp_fairness_slack) * grant_next)
+            mark_fh = q_over & present & congesting & holds_queue
+        marked = jnp.any(mark_fh, axis=1)
+        # severity payload: fair grant at the marking queue, scaled down by
+        # the queue's excess over V so standing backlog drains (ENP carries
+        # "timely congestion severity", ERP converges to fair as B -> V).
+        qexc = jnp.clip((B1[widx] - v_thresh)
+                        / jnp.float32(cfg.link.port_buffer), 0.0, 1.0)
+        sev = grant_next * (1.0 - jnp.float32(r.erp_drain_gain) * qexc)
+        tgt = jnp.min(jnp.where(mark_fh, sev, jnp.inf), axis=1)
+        tgt = jnp.where(jnp.isfinite(tgt), tgt, line_rate)
+
+        # ---- 5. notification (NP / ENP) ----------------------------------
+        window = jnp.float32(p.cnp_window if reaction_kind == "rp"
+                             else r.enp_coalesce)
+        np_tmr = st.np_tmr + dt
+        emit = marked & (np_tmr >= window)
+        np_tmr = jnp.where(emit, 0.0, np_tmr)
+        wslot = (st.t + rtt) % DELAY_SLOTS
+        trig_buf = st.trig_buf.at[wslot, fidx].add(emit.astype(jnp.float32))
+        tgt_buf = st.tgt_buf.at[wslot, fidx].set(
+            jnp.where(emit, tgt, st.tgt_buf[wslot, fidx]))
+        rslot = st.t % DELAY_SLOTS
+        cnp = trig_buf[rslot] > 0
+        tgt_rx = tgt_buf[rslot]
+        trig_buf = trig_buf.at[rslot].set(0.0)
+
+        # ---- 6. reaction (RP / ERP) ---------------------------------------
+        if scheme == CCScheme.PFC_ONLY:
+            rate = jnp.full((F,), 1.0, jnp.float32) * jnp.minimum(
+                gen_rate, line_rate)
+            rp_target, alpha = st.rp_target, st.alpha
+            byte_cnt, tmr, alpha_tmr = st.byte_cnt, st.tmr, st.alpha_tmr
+            bc_stage, t_stage, hold = st.bc_stage, st.t_stage, st.hold
+        elif reaction_kind == "rp":
+            g = jnp.float32(p.g)
+            # alpha update timer (runs when no CNP)
+            alpha_tmr = st.alpha_tmr + dt
+            a_tick = alpha_tmr >= jnp.float32(p.timer_T)
+            alpha = jnp.where(a_tick, (1 - g) * st.alpha, st.alpha)
+            alpha_tmr = jnp.where(a_tick, 0.0, alpha_tmr)
+            # on CNP: cut
+            rp_target = jnp.where(cnp, st.rate, st.rp_target)
+            rate = jnp.where(
+                cnp,
+                st.rate * (1 - alpha * jnp.float32(p.rate_decrease_factor)),
+                st.rate)
+            alpha = jnp.where(cnp, (1 - g) * alpha + g, alpha)
+            byte_cnt = jnp.where(cnp, 0.0, st.byte_cnt + st.rate * dt)
+            tmr = jnp.where(cnp, 0.0, st.tmr + dt)
+            alpha_tmr = jnp.where(cnp, 0.0, alpha_tmr)
+            bc_stage = jnp.where(cnp, 0, st.bc_stage)
+            t_stage = jnp.where(cnp, 0, st.t_stage)
+            # increase events
+            b_ev = byte_cnt >= jnp.float32(p.byte_counter_B)
+            t_ev = tmr >= jnp.float32(p.timer_T)
+            byte_cnt = jnp.where(b_ev, 0.0, byte_cnt)
+            tmr = jnp.where(t_ev, 0.0, tmr)
+            bc_stage = bc_stage + b_ev.astype(jnp.int32)
+            t_stage = t_stage + t_ev.astype(jnp.int32)
+            ev = b_ev | t_ev
+            imax = jnp.maximum(bc_stage, t_stage)
+            imin = jnp.minimum(bc_stage, t_stage)
+            frs = jnp.int32(p.fr_stages)
+            in_fr = imax <= frs
+            in_hyper = imin > frs
+            rp_target = jnp.where(
+                ev & ~in_fr & ~in_hyper, rp_target + jnp.float32(p.rai),
+                rp_target)
+            rp_target = jnp.where(
+                ev & in_hyper,
+                rp_target + jnp.float32(p.rhai)
+                * (imin - frs).astype(jnp.float32),
+                rp_target)
+            rate = jnp.where(ev, 0.5 * (rate + rp_target), rate)
+            rate = jnp.clip(rate, jnp.float32(p.min_rate), line_rate)
+            rp_target = jnp.clip(rp_target, jnp.float32(p.min_rate), line_rate)
+            hold = st.hold
+        else:  # DCQCN_REV / ERP
+            rate = jnp.where(
+                cnp,
+                jnp.maximum(jnp.float32(r.erp_settle) * tgt_rx,
+                            jnp.float32(r.min_rate)),
+                st.rate)
+            hold = jnp.where(cnp, jnp.float32(r.erp_hold),
+                             jnp.maximum(st.hold - dt, 0.0))
+            rate = jnp.where(~cnp & (hold <= 0), rate + erp_slope * dt, rate)
+            rate = jnp.clip(rate, jnp.float32(r.min_rate), line_rate)
+            rp_target, alpha = st.rp_target, st.alpha
+            byte_cnt, tmr, alpha_tmr = st.byte_cnt, st.tmr, st.alpha_tmr
+            bc_stage, t_stage = st.bc_stage, st.t_stage
+
+        new = FluidState(
+            qh=qh, nicq=nicq, delivered=delivered, offered=offered,
+            dropped=dropped, est=est, paused=paused, rate=rate,
+            rp_target=rp_target, alpha=alpha, byte_cnt=byte_cnt, tmr=tmr,
+            alpha_tmr=alpha_tmr, bc_stage=bc_stage, t_stage=t_stage,
+            hold=hold, np_tmr=np_tmr, trig_buf=trig_buf, tgt_buf=tgt_buf,
+            t=st.t + 1)
+        trace = StepTrace(
+            delivered=delivered, rate=rate, inst_thr=deliv_step / dt,
+            max_q=jnp.max(B), n_paused=jnp.sum(paused.astype(jnp.int32)),
+            marked=marked, cnp=cnp)
+        return new, trace
+
+    return step

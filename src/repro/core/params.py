@@ -1,0 +1,134 @@
+"""Congestion-control parameters for the DCQCN / DCQCN-Rev closed loop.
+
+All constants follow the paper (§II.A) and, where the paper defers, the
+original DCQCN fluid model (Zhu et al., SIGCOMM'15, [6]):
+
+* 100 Gbps serial full-duplex pipelined links, 25 ns propagation delay.
+* Tomahawk-3-like switches: 64 MB shared buffer, >= 512 KB per port.
+* MTU 1 KB;  Kmin = Kmax = V = 15 KB  (step marking).
+* DCQCN RP constants from [6]: g = 1/256, timer T = 55 us, byte counter
+  B = 10 MB, RAI = 40 Mbps, RHAI = 200 Mbps, rate-decrease factor 1/2,
+  NP CNP window 50 us.
+
+Everything is a frozen dataclass of plain floats so that configs hash and
+jit caches key cleanly; arrays live in the simulator state, not here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+
+class CCScheme(enum.IntEnum):
+    """Which closed loop is active (static python-level switch)."""
+
+    PFC_ONLY = 0      # no end-to-end CC; only hop-by-hop PFC backpressure
+    DCQCN = 1         # CP/NP/RP per [6]
+    DCQCN_REV = 2     # ECP/ENP/ERP per the paper
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkParams:
+    """Physical link + switch buffer constants (paper §II.A)."""
+
+    line_rate: float = 12.5e9          # B/s  (100 Gbps)
+    propagation_delay: float = 25e-9   # s, per hop
+    mtu: float = 1024.0                # B
+    port_buffer: float = 512 * 1024.0  # B, per-port guaranteed share
+    shared_buffer: float = 64 * 1024 * 1024.0  # B, switch total (Tomahawk 3)
+    # PFC thresholds (fractions of the per-port buffer). XOFF below XON is a
+    # config error; hysteresis keeps pause from chattering at the boundary.
+    pfc_xoff_frac: float = 0.75
+    pfc_xon_frac: float = 0.50
+
+
+@dataclasses.dataclass(frozen=True)
+class DCQCNParams:
+    """CP/NP/RP constants per [6]; Kmin=Kmax=V per the paper's §II.A."""
+
+    # --- CP (switch marking) ---
+    kmin: float = 15 * 1024.0          # B
+    kmax: float = 15 * 1024.0          # B
+    pmax: float = 1.0                  # marking prob at kmax (step since kmin==kmax)
+    # --- NP (destination NIC) ---
+    cnp_window: float = 50e-6          # s, min gap between CNPs of one flow
+    # --- RP (source NIC) ---
+    g: float = 1.0 / 256.0             # alpha EWMA gain
+    alpha_init: float = 1.0
+    rate_decrease_factor: float = 0.5  # R <- R * (1 - alpha * f)
+    timer_T: float = 55e-6             # s, rate-increase timer period
+    byte_counter_B: float = 10e6       # B, rate-increase byte period
+    rai: float = 5e6                   # B/s additive increase (40 Mbps)
+    rhai: float = 25e6                 # B/s hyper increase   (200 Mbps)
+    fr_stages: int = 5                 # fast-recovery stages before AI
+    min_rate: float = 1e6              # B/s floor so flows never starve
+
+
+@dataclasses.dataclass(frozen=True)
+class RevParams:
+    """ECP/ENP/ERP constants (the paper's contribution).
+
+    ECP: a flow is marked only if its measured arrival rate at the congested
+    egress exceeds ``ecp_fairness_slack`` x fair-share of the drain rate.
+    ENP: CNPs are immediate (coalesced at ``enp_coalesce``) and carry
+    (drain bandwidth, n_contributors) severity.
+    ERP: on CNP the rate is set to the signalled fair share scaled by
+    ``erp_settle``; recovery is additive with a deterministic per-flow
+    jitter in [1-j, 1+j] to desynchronise flows.
+    """
+
+    detect_threshold: float = 15 * 1024.0  # B, same V as DCQCN for parity
+    ecp_fairness_slack: float = 1.10       # >1: tolerate small overshoot
+    ecp_rate_ewma: float = 0.2             # per-dt EWMA for arrival estimate
+    enp_coalesce: float = 5e-6             # s, CNP coalescing interval
+    erp_settle: float = 0.98               # target = settle * fair_share
+    erp_rai: float = 5e12                  # B/s^2 additive recovery slope
+    #   (full 12.5 GB/s ramp in ~2.5 ms — same timescale DCQCN's staged
+    #    recovery needs, but desynchronised and starting from fair share)
+    erp_jitter: float = 0.5                # +-50% per-flow slope jitter
+    erp_hold: float = 50e-6                # s, hold at target before recovery
+    erp_drain_gain: float = 0.5            # severity: scale target below
+    #   fair share in proportion to queue excess over V, so standing
+    #   queues drain and the rate converges to fair as occupancy -> V
+    min_rate: float = 1e6                  # B/s floor
+
+
+@dataclasses.dataclass(frozen=True)
+class SimParams:
+    """Integrator constants."""
+
+    dt: float = 1e-6                   # s, fluid step
+    t_end: float = 14e-3               # s, simulate past DCQCN's 12.5 ms tail
+    trace_every: int = 10              # record a trace sample every N steps
+
+
+@dataclasses.dataclass(frozen=True)
+class CCConfig:
+    scheme: CCScheme = CCScheme.DCQCN_REV
+    link: LinkParams = dataclasses.field(default_factory=LinkParams)
+    dcqcn: DCQCNParams = dataclasses.field(default_factory=DCQCNParams)
+    rev: RevParams = dataclasses.field(default_factory=RevParams)
+    sim: SimParams = dataclasses.field(default_factory=SimParams)
+    # ablation overrides (None -> derived from scheme): isolate the
+    # paper's mechanisms — marking in {cp, ecp}, reaction in {rp, erp}
+    marking: str | None = None
+    reaction: str | None = None
+
+    def replace(self, **kw) -> "CCConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def marking_kind(self) -> str:
+        if self.marking:
+            return self.marking
+        return "ecp" if self.scheme == CCScheme.DCQCN_REV else "cp"
+
+    @property
+    def reaction_kind(self) -> str:
+        if self.reaction:
+            return self.reaction
+        return "erp" if self.scheme == CCScheme.DCQCN_REV else "rp"
+
+
+PAPER_CONFIG = CCConfig()

@@ -1,0 +1,102 @@
+"""Deterministic D-mod-K routing over the 3-stage CLOS.
+
+The paper: "we have also modeled a deterministic routing similar to
+D-mod-K, which balances the routes of the flows so that the links at a
+given stage are crossed by a similar number of flow routes."
+
+For the 3-stage CLOS with arity ``a`` and destination node ``d``:
+
+* at the leaf, the uplink is chosen as ``d mod a``;
+* at the agg, the uplink (spine digit) is ``(d // a) mod a``.
+
+With the paper's flows this puts F0,F1 (→N16) and F3 (→N12) on the *same*
+leaf-0 uplink (16 mod 4 == 12 mod 4 == 0), i.e. they share the wire into
+the input buffer of switch 16 — exactly the HoL scene of §II.  The
+alternative selector (``roll=1``) uses digit ``(d // a) mod a`` at the
+leaf, which makes the victim's path wire-disjoint from the congesting
+flows (needed to reach Fig. 2's 25 GB/s aggregate — see DESIGN.md §4 for
+why both wirings are provided).
+
+Routes are returned as padded link-id sequences ``[H_MAX]`` with -1
+padding; H_MAX = 6 covers the worst case nic→leaf→agg→spine→agg→leaf→node.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .topology import ClosIndex, Topology
+
+H_MAX = 6
+PAD = -1
+
+
+def clos_route(idx: ClosIndex, src: int, dst: int, roll: int = 0) -> list[int]:
+    """Directed-link id sequence for src node -> dst node (D-mod-K)."""
+    a = idx.arity
+    if src == dst:
+        return []
+    s_leaf, d_leaf = src // a, dst // a
+    s_grp, d_grp = s_leaf // a, d_leaf // a
+    # digit selectors for up-path balancing
+    digit0 = (dst // (a ** roll)) % a            # leaf uplink choice
+    digit1 = (dst // (a ** (1 - 0))) % a if roll == 0 else dst % a
+    # (roll=0: leaf uses d%a, agg uses (d//a)%a.  roll=1: swapped.)
+
+    path = [idx.nic_up(src)]
+    if d_leaf == s_leaf:
+        path.append(idx.leaf_dn(dst))
+        return path
+    u0 = digit0
+    path.append(idx.leaf_up(s_leaf, u0))         # -> agg(s_grp, u0)
+    if d_grp == s_grp:
+        path.append(idx.agg_dn(s_grp, u0, d_leaf % a))
+        path.append(idx.leaf_dn(dst))
+        return path
+    u1 = digit1
+    spine = u0 * a + u1
+    path.append(idx.agg_up(s_grp, u0, u1))       # -> spine u0*a+u1
+    path.append(idx.spine_dn(spine, d_grp))      # -> agg(d_grp, u0)
+    path.append(idx.agg_dn(d_grp, u0, d_leaf % a))
+    path.append(idx.leaf_dn(dst))
+    return path
+
+
+def build_flow_routes(topo: Topology, pairs: list[tuple[int, int]],
+                      arity: int = 4, roll: int = 0) -> np.ndarray:
+    """[F, H_MAX] int32 link-id matrix (PAD-filled) for (src,dst) pairs."""
+    idx = ClosIndex(arity)
+    routes = np.full((len(pairs), H_MAX), PAD, dtype=np.int32)
+    for f, (s, d) in enumerate(pairs):
+        p = clos_route(idx, s, d, roll=roll)
+        if len(p) > H_MAX:
+            raise ValueError(f"path longer than H_MAX for flow {f}: {p}")
+        routes[f, : len(p)] = p
+    return routes
+
+
+def route_hops(routes: np.ndarray) -> np.ndarray:
+    """Number of real hops per flow."""
+    return (routes != PAD).sum(axis=1).astype(np.int32)
+
+
+def validate_routes(topo: Topology, routes: np.ndarray) -> None:
+    """Each consecutive link pair must share an entity (sink == src)."""
+    for f in range(routes.shape[0]):
+        hops = [h for h in routes[f] if h != PAD]
+        for i in range(len(hops) - 1):
+            if topo.link_dst[hops[i]] != topo.link_src[hops[i + 1]]:
+                raise AssertionError(
+                    f"flow {f}: link {hops[i]} sink "
+                    f"{topo.link_dst[hops[i]]} != link {hops[i+1]} src "
+                    f"{topo.link_src[hops[i+1]]}")
+
+
+def stage_load(routes: np.ndarray, n_links: int) -> np.ndarray:
+    """How many flow routes cross each link (balance diagnostic)."""
+    load = np.zeros((n_links,), dtype=np.int64)
+    for f in range(routes.shape[0]):
+        for h in routes[f]:
+            if h != PAD:
+                load[h] += 1
+    return load

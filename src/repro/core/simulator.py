@@ -1,0 +1,118 @@
+"""Scan driver + result analysis for the CC fluid model."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fluid import FluidState, Scenario, init_state, make_step_fn
+from .params import CCConfig, CCScheme
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Host-side view of a finished run."""
+
+    cfg: CCConfig
+    scn: Scenario
+    times: np.ndarray          # [T] seconds
+    delivered: np.ndarray      # [T, F] cumulative bytes
+    rate: np.ndarray           # [T, F] RP rate (B/s)
+    inst_thr: np.ndarray       # [T, F] instantaneous delivery rate (B/s)
+    max_q: np.ndarray          # [T]
+    n_paused: np.ndarray       # [T]
+    marked: np.ndarray         # [T, F]
+    cnp: np.ndarray            # [T, F]
+    final: Any                 # FluidState (host)
+
+    # -- derived metrics ----------------------------------------------------
+    def flow_throughput(self, window: int = 50) -> np.ndarray:
+        """[T, F] delivery rate smoothed over `window` samples (B/s)."""
+        k = np.ones(window) / window
+        return np.stack(
+            [np.convolve(self.inst_thr[:, f], k, mode="same")
+             for f in range(self.inst_thr.shape[1])], axis=1)
+
+    def aggregate_throughput(self, window: int = 50) -> np.ndarray:
+        return self.flow_throughput(window).sum(axis=1)
+
+    def completion_times(self, frac: float = 0.999) -> np.ndarray:
+        """[F] time when `frac` of the flow's work was delivered.
+
+        Volume-mode flows are measured against their declared volume
+        (NaN if the run ended early); window-mode flows against the
+        admitted bytes."""
+        offered = np.asarray(self.final.offered)
+        vol = np.asarray(self.scn.volume, dtype=np.float64)
+        total = np.where(np.isfinite(vol), vol, offered)
+        out = np.full((total.shape[0],), np.nan)
+        for f in range(total.shape[0]):
+            if total[f] <= 0:
+                continue
+            hit = np.nonzero(self.delivered[:, f] >= frac * total[f])[0]
+            if hit.size:
+                out[f] = self.times[hit[0]]
+        return out
+
+    def completion_time(self, frac: float = 0.999) -> float:
+        ct = self.completion_times(frac)
+        return float(np.nanmax(ct)) if np.isfinite(ct).any() else float("nan")
+
+    def mean_throughput_while_active(self) -> np.ndarray:
+        """[F] mean delivery rate while the flow is live.
+
+        Window mode: averaged over [t_start, t_stop).  Volume mode
+        (t_stop = inf): volume / (completion - t_start).
+        """
+        t0 = np.asarray(self.scn.t_start)
+        t1 = np.asarray(self.scn.t_stop)
+        ct = self.completion_times()
+        out = np.zeros(t0.shape)
+        for f in range(t0.shape[0]):
+            if np.isfinite(t1[f]):
+                m = (self.times >= t0[f]) & (self.times < t1[f])
+                out[f] = self.inst_thr[m, f].mean() if m.any() else 0.0
+            elif np.isfinite(ct[f]) and ct[f] > t0[f]:
+                out[f] = self.delivered[-1, f] / (ct[f] - t0[f])
+        return out
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def _run_scan(state: FluidState, dummy, step_fn, n_steps: int):
+    def body(st, _):
+        return step_fn(st)
+    return jax.lax.scan(body, state, None, length=n_steps)
+
+
+def run(scn: Scenario, cfg: CCConfig, n_steps: int | None = None) -> SimResult:
+    """Simulate and pull traces to host."""
+    if n_steps is None:
+        n_steps = int(round(cfg.sim.t_end / cfg.sim.dt))
+    step = make_step_fn(scn, cfg)
+    st0 = init_state(scn, cfg)
+    final, tr = _run_scan(st0, None, step, n_steps)
+    times = (np.arange(n_steps) + 1) * cfg.sim.dt
+    return SimResult(
+        cfg=cfg, scn=scn, times=times,
+        delivered=np.asarray(tr.delivered),
+        rate=np.asarray(tr.rate),
+        inst_thr=np.asarray(tr.inst_thr),
+        max_q=np.asarray(tr.max_q),
+        n_paused=np.asarray(tr.n_paused),
+        marked=np.asarray(tr.marked),
+        cnp=np.asarray(tr.cnp),
+        final=jax.device_get(final),
+    )
+
+
+def run_all_schemes(scn: Scenario, cfg: CCConfig,
+                    n_steps: int | None = None) -> dict[str, SimResult]:
+    out = {}
+    for scheme in (CCScheme.PFC_ONLY, CCScheme.DCQCN, CCScheme.DCQCN_REV):
+        out[scheme.name] = run(scn, cfg.replace(scheme=scheme), n_steps)
+    return out

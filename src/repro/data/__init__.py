@@ -1,0 +1,5 @@
+"""repro.data — deterministic sharded token pipeline."""
+
+from .pipeline import DataConfig, SyntheticLM, make_batches
+
+__all__ = ["DataConfig", "SyntheticLM", "make_batches"]

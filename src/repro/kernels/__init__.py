@@ -1,0 +1,16 @@
+"""repro.kernels — Pallas TPU kernels + jnp oracles.
+
+  flash_attention  — blockwise causal/SWA/softcap attention (train/prefill)
+  decode_attention — single-token GQA decode over long KV caches
+  cc_step          — DCQCN RP / paper-ERP rate updates at DC flow counts
+  ops              — jit'd dispatchers (pallas | interpret | ref)
+  ref              — pure-jnp ground truth for all of the above
+"""
+
+from . import ops, ref
+from .flash_attention import flash_attention
+from .decode_attention import decode_attention
+from .cc_step import erp_step, rp_step
+
+__all__ = ["ops", "ref", "flash_attention", "decode_attention",
+           "erp_step", "rp_step"]

@@ -1,0 +1,107 @@
+"""Single-token GQA decode attention — Pallas TPU kernel.
+
+The decode_32k / long_500k hot spot: one query token against a long KV
+cache.  Memory-bound by the KV stream (arithmetic intensity ~ g, the
+GQA group size), so the kernel's job is a clean pipeline: KV tiles
+stream HBM -> VMEM along the innermost sequential grid axis while the
+online-softmax state (m, l, acc) lives in VMEM scratch.
+
+Grid = (batch * kv_heads, kv_blocks).  q rows are the g group heads
+(padded to >= 8 rows for TPU sublane alignment by the wrapper).  The
+valid-mask handles ring-buffer caches (arbitrary valid-slot patterns).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   block_k: int, softcap: float, scale: float, seq_k: int):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # [g, d]
+    k = k_ref[0].astype(jnp.float32)                     # [bk, d]
+    v = v_ref[0].astype(jnp.float32)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (k.shape[0], 1), 0)
+    ok = (valid_ref[0] > 0) & (kpos[:, 0] < seq_k)       # [bk]
+    v = jnp.where(ok[:, None], v, 0.0)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # [g, bk]
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    logits = jnp.where(ok[None, :], logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=1))
+    corr = jnp.where(m_prev == NEG_INF, 1.0, jnp.exp(m_prev - m_new))
+    pexp = jnp.exp(logits - m_new[:, None]) * ok[None, :]
+    l_ref[...] = l_ref[...] * corr + pexp.sum(axis=1)
+    acc_ref[...] = (acc_ref[...] * corr[:, None]
+                    + jax.lax.dot_general(
+                        pexp, v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, valid, *, softcap: float = 0.0,
+                     scale: float | None = None, block_k: int = 512,
+                     interpret: bool = False):
+    """q: [b, h, d]; k, v: [b, s, kv, d]; valid: [b, s] -> [b, h, d]."""
+    b, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    block_k = min(block_k, s)
+    nk = pl.cdiv(s, block_k)
+
+    qr = q.reshape(b, kv, g, d).reshape(b * kv, g, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    validr = jnp.repeat(valid.astype(jnp.int32), kv, axis=0)  # [b*kv, s]
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k,
+                               softcap=softcap, scale=scale, seq_k=s)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kv, nk),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda bh, ki: (bh, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k), lambda bh, ki: (bh, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda bh, ki: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr, validr)
+    return out.reshape(b, kv, g, d).reshape(b, h, d)

@@ -1,0 +1,151 @@
+"""Blockwise fused attention (forward) — Pallas TPU kernel.
+
+Grid = (batch * kv_heads, q_blocks, kv_blocks); the kv axis is the
+innermost (sequential / "arbitrary") dimension, carrying the online-
+softmax accumulators in VMEM scratch.  Q/K/V tiles are MXU-aligned
+(block_q x d and block_k x d with d = head_dim, multiples of 128 for
+bf16-friendly layouts); GQA is handled by folding the q-per-kv group into
+the q-block rows, so each grid cell is a dense [bq*g, d] x [d, bk] matmul.
+
+Causal + sliding-window masking skips fully-masked kv blocks via
+``pl.when`` (no wasted MXU issue slots); logit softcap (gemma2) is fused.
+
+VMEM footprint per cell (defaults bq=bk=128, d=128, g<=8, f32 scratch):
+  q (bq*g x d) + k,v (bk x d) + acc (bq*g x d) + m,l (bq*g)
+  ~= (2*128*8 + 2*128) * 128 * 4B ~= 1.2 MB  << 16 MB v5e VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_k: int, causal: bool,
+                  window: int | None, softcap: float, scale: float,
+                  seq_q: int, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # can this kv block contribute at all?
+    relevant = jnp.bool_(True)
+    if causal:
+        relevant = k_start <= q_start + block_q - 1       # not fully future
+    if window is not None:
+        relevant = jnp.logical_and(
+            relevant, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(relevant)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                  # [bq*g, d]
+        k = k_ref[0].astype(jnp.float32)                  # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        # zero padded KV rows: 0-weighted garbage (inf/nan) would still
+        # poison the pexp @ v dot (0 * inf = nan)
+        kvalid = (k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (v.shape[0], 1), 0) < seq_k)
+        v = jnp.where(kvalid, v, 0.0)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [bq*g, bk]
+        if softcap > 0:
+            logits = jnp.tanh(logits / softcap) * softcap
+
+        # rows are laid out q-position-major: row = pos * g + group
+        g = q.shape[0] // block_q
+        rows = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+        qpos = q_start + rows // max(g, 1)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        mask = kpos < seq_k
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_ref[...]                               # [bq*g]
+        m_new = jnp.maximum(m_prev, logits.max(axis=1))
+        # all-masked rows keep m == NEG_INF; freeze them so exp() of a
+        # (NEG_INF - NEG_INF) difference can't mint phantom mass
+        corr = jnp.where(m_prev == NEG_INF, 1.0, jnp.exp(m_prev - m_new))
+        pexp = jnp.exp(logits - m_new[:, None]) * mask
+        l_ref[...] = l_ref[...] * corr + pexp.sum(axis=1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            pexp, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, softcap: float = 0.0,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: [b, t, h, d]; k, v: [b, s, kv, d] -> [b, t, h, d].
+
+    GQA: h = kv * g; q rows are interleaved (position-major) so each
+    (batch, kv-head) pair runs as one grid row.
+    """
+    b, t, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    block_q = min(block_q, t)
+    block_k = min(block_k, s)
+    nq = pl.cdiv(t, block_q)
+    nk = pl.cdiv(s, block_k)
+
+    # [b, t, kv, g, d] -> [b*kv, t*g, d] with rows position-major
+    qr = (q.reshape(b, t, kv, g, d).transpose(0, 2, 1, 3, 4)
+          .reshape(b * kv, t * g, d))
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, causal=causal,
+        window=window, softcap=softcap, scale=scale, seq_q=t, seq_k=s)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q * g, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q * g, d),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, t * g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * g,), jnp.float32),      # running max m
+            pltpu.VMEM((block_q * g,), jnp.float32),      # running sum l
+            pltpu.VMEM((block_q * g, d), jnp.float32),    # accumulator
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+
+    return (out.reshape(b, kv, t, g, d).transpose(0, 2, 1, 3, 4)
+            .reshape(b, t, h, d))

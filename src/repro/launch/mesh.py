@@ -1,0 +1,36 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state — required because
+only dryrun.py forces 512 host devices while tests/benches see one CPU.
+
+Axes:
+  * pod   — 2  (cross-pod DCN axis; ERP-paced collectives live here)
+  * data  — 16 (in-pod DP/FSDP)
+  * model — 16 (TP/SP/EP)
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh for elastic-scaling experiments and tests."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def describe(mesh) -> str:
+    return " x ".join(f"{k}={v}" for k, v in mesh.shape.items())

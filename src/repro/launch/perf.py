@@ -1,0 +1,122 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ first lines, same contract as dryrun.py (512 placeholder devices).
+
+"""§Perf hillclimb driver: re-lower a dry-run cell with optimization
+overrides and report the roofline-term deltas vs the recorded baseline.
+
+  python -m repro.launch.perf --arch falcon-mamba-7b --shape train_4k \
+      --tag chunk256 --set ssm_chunk=256 --set loss_chunk=512
+
+Writes artifacts/perf/<arch>__<shape>__<tag>.json and prints a
+before/after table (baseline read from artifacts/dryrun/pod16x16)."""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from ..configs import ARCHS, SHAPES, get_config
+from .dryrun import _compile_cell, _with_groups, collective_stats
+from .mesh import make_production_mesh
+
+PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
+
+
+def _apply_overrides(cfg, sets: list[str]):
+    for s in sets:
+        key, val = s.split("=", 1)
+        for cast in (int, float):
+            try:
+                val = cast(val)
+                break
+            except ValueError:
+                continue
+        if "." in key:
+            sec, leaf = key.split(".", 1)
+            cfg = dataclasses.replace(
+                cfg, **{sec: dataclasses.replace(
+                    getattr(cfg, sec), **{leaf: val})})
+        else:
+            cfg = dataclasses.replace(cfg, **{key: val})
+    return cfg
+
+
+def _terms(rec):
+    return {
+        "compute_s": rec["flops_total"] / PEAK_FLOPS,
+        "memory_s": rec["bytes_accessed_total"] / HBM_BW,
+        "collective_s": rec["collective_bytes_total"] / ICI_BW,
+        "temp_gib": rec["memory"].get("temp_size_in_bytes", 0) / 2**30,
+    }
+
+
+def measure(arch: str, shape: str, sets: list[str], tag: str) -> dict:
+    from ..models.transformer import layer_plan
+    cfg = _apply_overrides(get_config(arch), sets)
+    mesh = make_production_mesh(multi_pod=False)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        full = _compile_cell(cfg, shape, mesh)
+        n_groups = (cfg.n_layers if cfg.encdec is not None
+                    else layer_plan(cfg)[2])
+        if n_groups > 4:
+            c2 = _compile_cell(_with_groups(cfg, 2), shape, mesh)
+            c4 = _compile_cell(_with_groups(cfg, 4), shape, mesh)
+
+            def scale(f2, f4):
+                per = max(0.0, (f4 - f2) / 2.0)
+                return max(0.0, f2 - 2 * per) + per * n_groups
+
+            full["flops_total"] = scale(c2["flops"], c4["flops"])
+            full["bytes_accessed_total"] = scale(
+                c2["bytes_accessed"], c4["bytes_accessed"])
+            full["collective_bytes_total"] = scale(
+                c2["collectives"]["total_bytes"],
+                c4["collectives"]["total_bytes"])
+        else:
+            full["flops_total"] = full["flops"]
+            full["bytes_accessed_total"] = full["bytes_accessed"]
+            full["collective_bytes_total"] = \
+                full["collectives"]["total_bytes"]
+    rec = dict(full)
+    rec.update({"arch": arch, "shape": shape, "tag": tag,
+                "overrides": sets,
+                "compile_s": round(time.time() - t0, 1)})
+    os.makedirs("artifacts/perf", exist_ok=True)
+    path = f"artifacts/perf/{arch}__{shape}__{tag}.json"
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCHS)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", action="append", default=[])
+    args = ap.parse_args()
+
+    base_path = f"artifacts/dryrun/pod16x16/{args.arch}__{args.shape}.json"
+    base = json.load(open(base_path)) if os.path.exists(base_path) else None
+
+    rec = measure(args.arch, args.shape, args.set, args.tag)
+    new = _terms(rec)
+    print(f"\n{args.arch} x {args.shape}  [{args.tag}]  "
+          f"overrides={args.set}")
+    if base:
+        old = _terms(base)
+        for k in new:
+            delta = (new[k] / old[k] - 1) * 100 if old[k] else float("nan")
+            print(f"  {k:14s} {old[k]:12.4g} -> {new[k]:12.4g}  "
+                  f"({delta:+.1f}%)")
+    else:
+        for k, v in new.items():
+            print(f"  {k:14s} {v:12.4g}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Production train launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch <id> \
+        [--smoke] [--steps N] [--ckpt-dir DIR] [--compress] [--microbatches M]
+
+On this CPU container, use --smoke (reduced config).  On a real fleet the
+same entrypoint builds the production mesh, shards TrainState with the
+logical rules, and runs the fault-tolerant loop; the cross-pod gradient
+axis is ERP-paced + int8-EF compressed when --compress is set.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, get_config, get_smoke_config
+from ..data import DataConfig
+from ..models import encdec, transformer, vlm
+from ..models.layers import init_params
+from ..optim import AdamWConfig
+from ..train.loop import TrainLoopConfig, train_loop
+from ..train.step import StepConfig, init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCHS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(
+        args.arch)
+    if cfg.encdec is not None or cfg.vlm is not None:
+        raise SystemExit(
+            "train.py drives decoder-only LMs; use examples/ for "
+            "whisper/internvl training (their loss_fns are wired in "
+            "repro.train.step.model_loss).")
+    print(f"training {cfg.name}{' (smoke)' if args.smoke else ''}: "
+          f"{cfg.n_layers}L d{cfg.d_model} "
+          f"~{cfg.param_count()/1e6:.1f}M params on "
+          f"{len(jax.devices())} device(s)")
+
+    params = init_params(transformer.param_defs(cfg), 0, jnp.float32)
+    sc = StepConfig(opt=AdamWConfig(lr=args.lr),
+                    microbatches=args.microbatches,
+                    compress_grads=args.compress,
+                    warmup_steps=max(args.steps // 20, 5),
+                    total_steps=args.steps)
+    state = init_train_state(cfg, params, sc)
+    step = jax.jit(make_train_step(cfg, sc))
+    data = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                      global_batch=args.global_batch, kind="markov")
+    loop = TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                           log_every=args.log_every)
+
+    out = train_loop(step, state, data, loop,
+                     on_metrics=lambda s, m: print(
+                         f"step {s:5d} loss {float(m['loss']):.4f} "
+                         f"({m['step_time']*1e3:.0f} ms)"))
+    print(f"final loss {out['losses'][-1]:.4f} after "
+          f"{out['final_step']} steps; "
+          f"mean step {out['mean_step_time']*1e3:.0f} ms; "
+          f"stragglers {out['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

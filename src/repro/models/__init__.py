@@ -1,0 +1,13 @@
+"""repro.models — every assigned architecture, from scratch in JAX."""
+
+from .config import (EncDecConfig, ModelConfig, MoEConfig, RGLRUConfig,
+                     SSMConfig, VLMConfig)
+from . import attention, encdec, layers, moe, rglru, ssm, transformer, vlm
+from .layers import abstract_params, init_params, param_specs, param_shapes
+
+__all__ = [
+    "EncDecConfig", "ModelConfig", "MoEConfig", "RGLRUConfig", "SSMConfig",
+    "VLMConfig", "attention", "encdec", "layers", "moe", "rglru", "ssm",
+    "transformer", "vlm", "abstract_params", "init_params", "param_specs",
+    "param_shapes",
+]

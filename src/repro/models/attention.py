@@ -1,0 +1,277 @@
+"""GQA attention: causal / sliding-window / encoder / cross variants.
+
+KV cache layout: ``k,v: [batch, cache_len, n_kv, head_dim]`` plus an
+int32 ``pos`` scalar (tokens seen so far).  For sliding-window layers the
+cache is a ring buffer of length ``window`` — decode cost and memory are
+O(window), which is what makes 500k-token decoding feasible for the
+SWA/hybrid architectures (DESIGN.md §6).
+
+Sharding: query/output activations are sequence-sharded over ``model``
+(SP) in train/prefill; decode shards the KV cache length over ``model``
+with a numerically exact two-pass softmax (psum of max then of num/den)
+expressed via sharding constraints — XLA inserts the collectives.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import shard
+from .config import ModelConfig
+from .layers import ParamDef, rope, softcap
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # [b, cache_len, n_kv, head_dim]
+    v: jax.Array
+    pos: jax.Array        # [] int32 — absolute tokens already cached
+
+
+def attn_defs(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, h, hd), ("fsdp", "heads", None), "scaled"),
+        "wk": ParamDef((d, kv, hd), ("fsdp", "kv_heads", None), "scaled"),
+        "wv": ParamDef((d, kv, hd), ("fsdp", "kv_heads", None), "scaled"),
+        "wo": ParamDef((h, hd, d), ("heads", None, "fsdp"), "scaled"),
+    }
+    if cfg.qkv_bias:
+        defs |= {
+            "bq": ParamDef((h, hd), ("heads", None), "zeros"),
+            "bk": ParamDef((kv, hd), ("kv_heads", None), "zeros"),
+            "bv": ParamDef((kv, hd), ("kv_heads", None), "zeros"),
+        }
+    return defs
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, kind: str,
+               dtype) -> KVCache:
+    """kind: 'attn' full cache; 'local' ring buffer bounded by window."""
+    length = min(max_len, cfg.window) if kind in ("local", "moe_local") else max_len
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   pos=jnp.zeros((), jnp.int32))
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int, kind: str):
+    """Logical dims for the cache (SP over length when heads indivisible)."""
+    return KVCache(k=("cache_batch", "kv_seq", None, None),
+                   v=("cache_batch", "kv_seq", None, None),
+                   pos=())
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, x: jax.Array):
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def _scale(cfg: ModelConfig) -> float:
+    return cfg.query_scale or 1.0 / math.sqrt(cfg.head_dim)
+
+
+def _mha(q, k, v, cfg: ModelConfig, mask) -> jax.Array:
+    """q: [b,t,h,hd]; k,v: [b,s,kv,hd]; mask: [b,t,s] bool or None."""
+    b, t, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    qg = q.reshape(b, t, kv, h // kv, hd)
+    logits = jnp.einsum("btkgd,bskd->bkgts", qg, k).astype(jnp.float32)
+    logits = logits * _scale(cfg)
+    logits = softcap(logits, cfg.softcap_attn)
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", w, v)
+    return out.reshape(b, t, h, hd)
+
+
+def _blockwise_attn(q, k, v, cfg: ModelConfig, *, causal: bool,
+                    window: int | None, q_offset: int = 0):
+    """Online-softmax attention via lax.scan over KV blocks — the
+    XLA-compilable twin of kernels/flash_attention (same math).  Peak
+    memory is O(t x block_k) instead of O(t x s): this is the §Perf fix
+    for the 32k-prefill score-materialisation blowup."""
+    b, t, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    bk = min(cfg.attn_block_k, s)
+    nb = -(-s // bk)
+    pad = nb * bk - s
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = kp.reshape(b, nb, bk, kv, hd).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(b, nb, bk, kv, hd).transpose(1, 0, 2, 3, 4)
+
+    qg = (q.reshape(b, t, kv, g, hd) * _scale(cfg)).astype(jnp.float32)
+    qpos = q_offset + jnp.arange(t)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        i, kblk, vblk = xs
+        logits = jnp.einsum("btkgd,bskd->bkgts", qg,
+                            kblk.astype(jnp.float32))
+        logits = softcap(logits, cfg.softcap_attn)
+        kpos = i * bk + jnp.arange(bk)
+        mask = kpos[None, :] < s
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        corr = jnp.where(m == -jnp.inf, 1.0, jnp.exp(m - m_new))
+        p = jnp.exp(logits - m_new[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        l_new = l * corr + p.sum(-1)
+        acc_new = (acc * corr[..., None]
+                   + jnp.einsum("bkgts,bskd->bkgtd", p,
+                                vblk.astype(jnp.float32)))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, g, t), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, t), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, t, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(nb), kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return (out.transpose(0, 3, 1, 2, 4)
+            .reshape(b, t, h, hd).astype(q.dtype))
+
+
+def _causal_mask(t: int, s: int, q_offset, window: int | None):
+    qpos = jnp.arange(t)[:, None] + q_offset       # absolute query pos
+    kpos = jnp.arange(s)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m                                        # [t, s]
+
+
+def attention(p: dict, cfg: ModelConfig, kind: str, x: jax.Array,
+              positions: jax.Array,
+              cache: Optional[KVCache] = None,
+              use_rope: bool = True):
+    """Self-attention for train / prefill / decode.
+
+    Train/prefill: cache is None or empty -> returns (out, new_cache-ish)
+    Decode:        x is [b, 1, d], cache holds history.
+    """
+    window = cfg.window if kind in ("local", "moe_local") else None
+    q, k, v = _project_qkv(p, cfg, x)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "act_heads", None)
+
+    def _self_attn(qq, kk, vv):
+        if cfg.use_pallas:
+            from ..kernels import ops
+            return ops.attention(qq, kk, vv, causal=True, window=window,
+                                 softcap=cfg.softcap_attn,
+                                 scale=_scale(cfg))
+        if cfg.attn_impl == "blockwise":
+            return _blockwise_attn(qq, kk, vv, cfg, causal=True,
+                                   window=window)
+        mask = _causal_mask(qq.shape[1], kk.shape[1], 0, window)[None]
+        return _mha(qq, kk, vv, cfg, mask)
+
+    if cache is None:
+        # training / full prefill without cache return
+        out = _self_attn(q, k, v)
+    elif x.shape[1] > 1:
+        # prefill: write into cache, attend within the prefix
+        out = _self_attn(q, k, v)
+        cache = _cache_write_prefill(cache, k, v, kind, cfg)
+    else:
+        # single-token decode against ring/full cache
+        cache = _cache_write_step(cache, k, v, kind, cfg)
+        ck = shard(cache.k, "cache_batch", "kv_seq", None, None)
+        cv = shard(cache.v, "cache_batch", "kv_seq", None, None)
+        valid = _decode_mask(cache, kind, cfg)       # [1, clen]
+        if cfg.use_pallas:
+            from ..kernels import ops
+            b = x.shape[0]
+            out = ops.decode_attn(
+                q[:, 0], ck, cv,
+                jnp.broadcast_to(valid, (b, valid.shape[-1])),
+                softcap=cfg.softcap_attn, scale=_scale(cfg))[:, None]
+        else:
+            mask = jnp.broadcast_to(valid[:, None, :],
+                                    (x.shape[0], 1, valid.shape[-1]))
+            out = _mha(q, ck, cv, cfg, mask)
+    out = shard(out, "batch", "seq", "act_heads", None)
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype))
+    return y, cache
+
+
+# Ring-buffer invariant: the K/V of the token at absolute position ``a``
+# lives at slot ``a % clen``.  Prefill and decode both honour it, so a
+# prefill of any length can be continued by single-token decode steps.
+
+def _cache_write_prefill(cache: KVCache, k, v, kind: str,
+                         cfg: ModelConfig) -> KVCache:
+    t = k.shape[1]
+    clen = cache.k.shape[1]
+    if kind in ("local", "moe_local") and t > clen:
+        k, v = k[:, -clen:], v[:, -clen:]            # last `window` tokens
+        slots = (t - clen + jnp.arange(clen)) % clen
+        nk = cache.k.at[:, slots].set(k)
+        nv = cache.v.at[:, slots].set(v)
+    else:
+        nk = jax.lax.dynamic_update_slice_in_dim(cache.k, k, 0, axis=1)
+        nv = jax.lax.dynamic_update_slice_in_dim(cache.v, v, 0, axis=1)
+    return KVCache(k=nk, v=nv, pos=cache.pos + t)
+
+
+def _cache_write_step(cache: KVCache, k, v, kind: str,
+                      cfg: ModelConfig) -> KVCache:
+    clen = cache.k.shape[1]
+    if kind in ("local", "moe_local"):
+        slot = cache.pos % clen
+    else:
+        slot = jnp.minimum(cache.pos, clen - 1)
+    nk = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+    nv = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+    return KVCache(k=nk, v=nv, pos=cache.pos + 1)
+
+
+def _decode_mask(cache: KVCache, kind: str, cfg: ModelConfig):
+    """Valid-slot mask [1, clen]; cache.pos counts tokens incl. current."""
+    clen = cache.k.shape[1]
+    idx = jnp.arange(clen)
+    if kind in ("local", "moe_local"):
+        newest = (cache.pos - 1) % clen
+        age = (newest - idx) % clen                  # 0 = newest
+        valid = age < jnp.minimum(cache.pos, clen)
+    else:
+        valid = idx < cache.pos
+    return valid[None, :]
+
+
+def cross_attention(p: dict, cfg: ModelConfig, x: jax.Array,
+                    enc_kv: tuple[jax.Array, jax.Array]) -> jax.Array:
+    """Decoder cross-attn over precomputed encoder K/V (whisper)."""
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    k, v = enc_kv
+    out = _mha(q, k, v, cfg, None)
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype))
+
+
+def encode_kv(p: dict, cfg: ModelConfig, enc_out: jax.Array):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    if "bk" in p:
+        k = k + p["bk"].astype(enc_out.dtype)
+        v = v + p["bv"].astype(enc_out.dtype)
+    return k, v

@@ -1,0 +1,180 @@
+"""Primitive layers + the ParamDef descriptor system.
+
+Params are described by trees of ``ParamDef(shape, dims, init)`` where
+``dims`` are *logical* sharding axes (see repro.dist.sharding).  The same
+tree materialises three ways:
+
+  * ``init_params``      — real arrays (seeded, for training/smoke tests)
+  * ``abstract_params``  — ShapeDtypeStructs (dry-run: zero allocation)
+  * ``param_specs``      — logical-dims tree (for in_shardings)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import shard
+
+
+class ParamDef(NamedTuple):
+    shape: tuple
+    dims: tuple                   # logical axis per dim (str | None)
+    init: str = "normal"          # normal | zeros | ones | scaled
+    scale: float = 0.02
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_one(d: ParamDef, key, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "normal":
+        return (d.scale * jax.random.normal(key, d.shape)).astype(dtype)
+    if d.init == "scaled":  # fan-in scaled
+        fan_in = d.shape[0] if len(d.shape) > 1 else max(d.shape[0], 1)
+        s = 1.0 / math.sqrt(fan_in)
+        return (s * jax.random.normal(key, d.shape)).astype(dtype)
+    raise ValueError(d.init)
+
+
+def init_params(defs, seed: int, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    vals = [_init_one(d, k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(defs, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=is_def)
+
+
+def param_specs(defs):
+    return jax.tree.map(lambda d: tuple(d.dims), defs, is_leaf=is_def)
+
+
+def param_shapes(defs):
+    return jax.tree.map(lambda d: tuple(d.shape), defs, is_leaf=is_def)
+
+
+# ---------------------------------------------------------------------------
+# normalisation
+# ---------------------------------------------------------------------------
+
+def rmsnorm_defs(dim: int) -> dict:
+    return {"scale": ParamDef((dim,), (None,), "ones")}
+
+
+def layernorm_defs(dim: int) -> dict:
+    return {"scale": ParamDef((dim,), (None,), "ones"),
+            "bias": ParamDef((dim,), (None,), "zeros")}
+
+
+def norm_defs(kind: str, dim: int) -> dict:
+    return rmsnorm_defs(dim) if kind == "rms" else layernorm_defs(dim)
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        nrm = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (nrm * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+    nrm = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (nrm * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+
+def embed_defs(vocab: int, d_model: int) -> dict:
+    return {"table": ParamDef((vocab, d_model), ("vocab", "embed"),
+                              "normal", 0.01)}
+
+
+def embed_lookup(p: dict, ids: jax.Array, scale: bool, d: int) -> jax.Array:
+    x = jnp.take(p["table"], ids, axis=0)
+    if scale:
+        x = x * jnp.asarray(math.sqrt(d), x.dtype)
+    return shard(x, "batch", "seq", "act_embed")
+
+
+def logits_defs(vocab: int, d_model: int, tied: bool) -> dict:
+    if tied:
+        return {}
+    return {"out": ParamDef((d_model, vocab), ("embed", "vocab"), "scaled")}
+
+
+def apply_logits(p: dict, embed_p: dict, x: jax.Array, tied: bool,
+                 softcap: float) -> jax.Array:
+    w = embed_p["table"].T if tied else p["out"]
+    logits = jnp.einsum("btd,dv->btv", x, w.astype(x.dtype))
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_defs(d_model: int, d_ff: int, kind: str) -> dict:
+    if kind in ("swiglu", "geglu"):
+        return {
+            "wi": ParamDef((d_model, d_ff), ("fsdp", "mlp"), "scaled"),
+            "wg": ParamDef((d_model, d_ff), ("fsdp", "mlp"), "scaled"),
+            "wo": ParamDef((d_ff, d_model), ("mlp", "fsdp"), "scaled"),
+        }
+    return {  # plain gelu MLP (starcoder2, whisper)
+        "wi": ParamDef((d_model, d_ff), ("fsdp", "mlp"), "scaled"),
+        "bi": ParamDef((d_ff,), ("mlp",), "zeros"),
+        "wo": ParamDef((d_ff, d_model), ("mlp", "fsdp"), "scaled"),
+        "bo": ParamDef((d_model,), (None,), "zeros"),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, kind: str) -> jax.Array:
+    if kind in ("swiglu", "geglu"):
+        h = jnp.einsum("btd,df->btf", x, p["wi"].astype(x.dtype))
+        g = jnp.einsum("btd,df->btf", x, p["wg"].astype(x.dtype))
+        act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
+        h = shard(h * act, "batch", "seq", "mlp")
+        return jnp.einsum("btf,fd->btd", h, p["wo"].astype(x.dtype))
+    h = jnp.einsum("btd,df->btf", x, p["wi"].astype(x.dtype))
+    h = jax.nn.gelu(h + p["bi"].astype(x.dtype))
+    h = shard(h, "batch", "seq", "mlp")
+    return (jnp.einsum("btf,fd->btd", h, p["wo"].astype(x.dtype))
+            + p["bo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [b, t, heads, head_dim]; positions: [b, t] int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # [b,t,half]
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x

@@ -1,0 +1,108 @@
+"""RG-LRU recurrent block (RecurrentGemma).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_r x_t)                    (recurrence gate)
+    i_t = sigmoid(W_i x_t)                    (input gate)
+    a_t = a^(c * r_t),  a = sigmoid(Lambda)   (per-channel decay)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The block wraps it with a temporal conv1d and a linear in/out projection,
+per the Griffin/RecurrentGemma recipe.  Train/prefill uses an associative
+scan; decode carries (conv_state [b, cw-1, w], h [b, w]) — O(1)/token,
+so the hybrid runs the 500k decode shape.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import shard
+from .config import ModelConfig
+from .layers import ParamDef
+
+C_SCALE = 8.0   # the Griffin `c` constant
+
+
+class RGLRUState(NamedTuple):
+    conv: jax.Array    # [b, conv_width-1, width]
+    h: jax.Array       # [b, width] f32
+
+
+def rglru_defs(cfg: ModelConfig) -> dict:
+    w = cfg.lru_width
+    d = cfg.d_model
+    cw = cfg.rglru.conv_width
+    return {
+        "in_x": ParamDef((d, w), ("fsdp", "mlp"), "scaled"),
+        "in_gate": ParamDef((d, w), ("fsdp", "mlp"), "scaled"),
+        "conv_w": ParamDef((cw, w), ("conv", "mlp"), "scaled"),
+        "conv_b": ParamDef((w,), ("mlp",), "zeros"),
+        "w_r": ParamDef((w, w), ("mlp", None), "scaled"),
+        "w_i": ParamDef((w, w), ("mlp", None), "scaled"),
+        "lam": ParamDef((w,), ("mlp",), "ones"),
+        "out": ParamDef((w, d), ("mlp", "fsdp"), "scaled"),
+    }
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype) -> RGLRUState:
+    w, cw = cfg.lru_width, cfg.rglru.conv_width
+    return RGLRUState(conv=jnp.zeros((batch, cw - 1, w), dtype),
+                      h=jnp.zeros((batch, w), jnp.float32))
+
+
+def rglru_state_spec(cfg: ModelConfig) -> RGLRUState:
+    return RGLRUState(conv=("cache_batch", None, "mlp"),
+                      h=("cache_batch", "mlp"))
+
+
+def apply_rglru(p: dict, cfg: ModelConfig, x: jax.Array,
+                state: RGLRUState | None = None):
+    """x: [b, t, d] -> (y, new_state)."""
+    cw = cfg.rglru.conv_width
+    b, t, _ = x.shape
+
+    gate = jax.nn.gelu(jnp.einsum(
+        "btd,dw->btw", x, p["in_gate"].astype(x.dtype)))
+    xi = jnp.einsum("btd,dw->btw", x, p["in_x"].astype(x.dtype))
+    xi = shard(xi, "batch", "seq", "mlp")
+
+    # temporal conv
+    if state is not None:
+        xpad = jnp.concatenate([state.conv.astype(xi.dtype), xi], axis=1)
+    else:
+        xpad = jnp.pad(xi, ((0, 0), (cw - 1, 0), (0, 0)))
+    conv_w = p["conv_w"].astype(xi.dtype)
+    xc = sum(xpad[:, i:i + t, :] * conv_w[i][None, None, :]
+             for i in range(cw))
+    xc = xc + p["conv_b"].astype(xc.dtype)
+    new_conv = xpad[:, -(cw - 1):, :] if cw > 1 else xpad[:, :0]
+
+    r = jax.nn.sigmoid(jnp.einsum(
+        "btw,wv->btv", xc, p["w_r"].astype(xc.dtype)).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum(
+        "btw,wv->btv", xc, p["w_i"].astype(xc.dtype)).astype(jnp.float32))
+    log_a0 = jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))  # log a
+    a = jnp.exp(C_SCALE * r * log_a0[None, None])              # a^(c r)
+    gated = i * xc.astype(jnp.float32)
+    u = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+
+    h0 = (state.h if state is not None
+          else jnp.zeros((b, xc.shape[-1]), jnp.float32))
+    if t == 1:
+        h = a[:, 0] * h0 + u[:, 0]
+        hs = h[:, None]
+    else:
+        def combine(lhs, rhs):
+            a1, u1 = lhs
+            a2, u2 = rhs
+            return a1 * a2, a2 * u1 + u2
+        u = u.at[:, 0].add(a[:, 0] * h0)
+        _, hs = jax.lax.associative_scan(combine, (a, u), axis=1)
+        h = hs[:, -1]
+
+    y = hs.astype(x.dtype) * gate
+    out = jnp.einsum("btw,wd->btd", y, p["out"].astype(x.dtype))
+    return out, RGLRUState(conv=new_conv.astype(x.dtype), h=h)

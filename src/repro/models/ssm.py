@@ -1,0 +1,158 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b).
+
+Train/prefill uses an associative scan over the sequence (TPU-friendly:
+log-depth, no per-step HBM round-trips); decode is a single recurrence
+step on the carried ``(conv_state, ssm_state)`` — O(1) per token, which
+is why the SSM arch runs the 500k-token decode shape.
+
+State per layer: conv_state [b, d_conv-1, d_inner],
+                 ssm_state  [b, d_inner, d_state].
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import shard
+from .config import ModelConfig
+from .layers import ParamDef
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array    # [b, d_conv-1, d_inner]
+    ssm: jax.Array     # [b, d_inner, d_state]
+
+
+def ssm_defs(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d, di, dr, ds = cfg.d_model, cfg.d_inner, cfg.dt_rank, s.d_state
+    return {
+        "in_proj": ParamDef((d, 2 * di), ("fsdp", "mlp"), "scaled"),
+        "conv_w": ParamDef((s.d_conv, di), ("conv", "mlp"), "scaled"),
+        "conv_b": ParamDef((di,), ("mlp",), "zeros"),
+        "x_proj": ParamDef((di, dr + 2 * ds), ("mlp", None), "scaled"),
+        "dt_proj_w": ParamDef((dr, di), (None, "mlp"), "scaled"),
+        "dt_proj_b": ParamDef((di,), ("mlp",), "ones"),
+        # A stored as log so A = -exp(log_a) < 0 (stability)
+        "log_a": ParamDef((di, ds), ("mlp", "state"), "zeros"),
+        "d_skip": ParamDef((di,), ("mlp",), "ones"),
+        "out_proj": ParamDef((di, d), ("mlp", "fsdp"), "scaled"),
+    }
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    s = cfg.ssm
+    return SSMState(
+        conv=jnp.zeros((batch, s.d_conv - 1, cfg.d_inner), dtype),
+        ssm=jnp.zeros((batch, cfg.d_inner, s.d_state), jnp.float32))
+
+
+def ssm_state_spec(cfg: ModelConfig) -> SSMState:
+    return SSMState(conv=("cache_batch", None, "mlp"),
+                    ssm=("cache_batch", "mlp", "state"))
+
+
+def _ssm_params(p: dict, cfg: ModelConfig, xc: jax.Array):
+    """Input-dependent (dt, B, C) from the conv output xc [..., di]."""
+    s = cfg.ssm
+    dr = cfg.dt_rank
+    proj = jnp.einsum("...i,ir->...r", xc, p["x_proj"].astype(xc.dtype))
+    dt_low, Bm, Cm = (proj[..., :dr], proj[..., dr:dr + s.d_state],
+                      proj[..., dr + s.d_state:])
+    dt = jnp.einsum("...r,ri->...i", dt_low,
+                    p["dt_proj_w"].astype(xc.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_proj_b"].astype(jnp.float32))
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def apply_ssm(p: dict, cfg: ModelConfig, x: jax.Array,
+              state: SSMState | None = None):
+    """x: [b, t, d].  Returns (y, new_state)."""
+    s = cfg.ssm
+    b, t, d = x.shape
+    di = cfg.d_inner
+
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"].astype(x.dtype))
+    xi, z = xz[..., :di], xz[..., di:]
+    if cfg.ssm_shard == "channel":
+        # recurrence is elementwise in d_inner: shard channels so the
+        # associative scan over t needs no cross-shard communication
+        xi = shard(xi, "batch", None, "mlp")
+    else:
+        xi = shard(xi, "batch", "seq", "mlp")
+
+    # depthwise causal conv1d (width d_conv)
+    if state is not None:
+        hist = state.conv.astype(xi.dtype)          # [b, dc-1, di]
+        xpad = jnp.concatenate([hist, xi], axis=1)
+    else:
+        xpad = jnp.pad(xi, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+    conv_w = p["conv_w"].astype(xi.dtype)            # [dc, di]
+    xc = sum(xpad[:, i:i + t, :] * conv_w[i][None, None, :]
+             for i in range(s.d_conv))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(xc.dtype))
+    new_conv = xpad[:, -(s.d_conv - 1):, :] if s.d_conv > 1 else xpad[:, :0]
+
+    dt, Bm, Cm = _ssm_params(p, cfg, xc)             # [b,t,di],[b,t,ds]x2
+    A = -jnp.exp(p["log_a"].astype(jnp.float32))     # [di, ds]
+    da = jnp.exp(dt[..., None] * A[None, None])      # [b,t,di,ds] decay
+    db = dt[..., None] * Bm[:, :, None, :]           # [b,t,di,ds]
+    u = db * xc.astype(jnp.float32)[..., None]       # input injection
+    scan_dt = jnp.dtype(cfg.ssm_scan_dtype)
+    da, u = da.astype(scan_dt), u.astype(scan_dt)
+
+    h0 = (state.ssm if state is not None
+          else jnp.zeros((b, di, s.d_state), jnp.float32))
+
+    def combine(lhs, rhs):
+        # associative pair op: (a2, u2) o (a1, u1) = (a1*a2, a2*u1 + u2)
+        a1, u1 = lhs
+        a2, u2 = rhs
+        return a1 * a2, a2 * u1 + u2
+
+    if t == 1:
+        h = (da[:, 0].astype(jnp.float32) * h0
+             + u[:, 0].astype(jnp.float32))          # single decode step
+        hs = h[:, None]
+        y = jnp.einsum("btis,bts->bti", hs, Cm)
+    elif cfg.ssm_chunk and t > cfg.ssm_chunk and t % cfg.ssm_chunk == 0:
+        # §Perf: chunked selective scan — lax.scan over chunks carrying
+        # the state, assoc-scan within; temporaries drop from O(t) to
+        # O(chunk) in the [.., d_inner, d_state] axis.
+        ck = cfg.ssm_chunk
+        nc = t // ck
+        mlp_ax = "mlp" if cfg.ssm_shard == "channel" else None
+        da_c = da.reshape(b, nc, ck, di, -1).transpose(1, 0, 2, 3, 4)
+        u_c = u.reshape(b, nc, ck, di, -1).transpose(1, 0, 2, 3, 4)
+        da_c = shard(da_c, None, "batch", None, mlp_ax, None)
+        u_c = shard(u_c, None, "batch", None, mlp_ax, None)
+        cm_c = Cm.reshape(b, nc, ck, -1).transpose(1, 0, 2, 3)
+
+        def chunk_body(hc, xs):
+            da_i, u_i, cm_i = xs
+            da_i = shard(da_i, "batch", None, mlp_ax, None)
+            u_i = shard(u_i, "batch", None, mlp_ax, None)
+            u_i = u_i.at[:, 0].add((da_i[:, 0].astype(jnp.float32)
+                                    * hc).astype(u_i.dtype))
+            _, hs_i = jax.lax.associative_scan(combine, (da_i, u_i),
+                                               axis=1)
+            y_i = jnp.einsum("btis,bts->bti", hs_i, cm_i)
+            return (hs_i[:, -1].astype(jnp.float32),
+                    shard(y_i, "batch", None, mlp_ax))
+
+        h, y = jax.lax.scan(chunk_body, h0, (da_c, u_c, cm_c))
+        y = y.transpose(1, 0, 2, 3).reshape(b, t, di)
+    else:
+        u = u.at[:, 0].add((da[:, 0].astype(jnp.float32)
+                            * h0).astype(u.dtype))   # fold carried state
+        _, hs = jax.lax.associative_scan(combine, (da, u), axis=1)
+        h = hs[:, -1].astype(jnp.float32)
+        y = jnp.einsum("btis,bts->bti", hs, Cm)      # C read-out
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bti,id->btd", y, p["out_proj"].astype(x.dtype))
+    return out, SSMState(conv=new_conv.astype(x.dtype), ssm=h)

@@ -1,0 +1,353 @@
+"""Decoder-only LM trunk shared by 8 of the 10 architectures.
+
+Layer stack = [head (unrolled)] + [groups (lax.scan)] + [tail (unrolled)],
+where a *group* is one period of ``cfg.block_pattern`` (e.g. gemma2's
+(local, attn) pair, recurrentgemma's (rec, rec, attn) triple) and params
+for scanned groups are stacked on a leading "layers" axis.  Scanning keeps
+the HLO O(1) in depth — essential for compiling 64-layer full-size models
+in the dry-run.
+
+Entry points:
+  * param_defs(cfg)                      — ParamDef tree
+  * forward(params, cfg, tokens)        — train/eval logits
+  * prefill(params, cfg, tokens)        — logits + caches
+  * decode_step(params, cfg, token, caches) — one-token serve step
+  * init_caches / cache_specs           — serving state + sharding specs
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import shard
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .config import ModelConfig
+from .layers import (ParamDef, apply_mlp, apply_norm, embed_defs,
+                     embed_lookup, is_def, logits_defs, apply_logits,
+                     mlp_defs, norm_defs)
+
+# ---------------------------------------------------------------------------
+# structure helpers
+# ---------------------------------------------------------------------------
+
+
+def layer_plan(cfg: ModelConfig):
+    """(head_kinds, pattern, n_groups, tail_kinds)."""
+    head = []
+    if cfg.moe is not None and cfg.moe.first_k_dense:
+        head = ["dense_attn"] * cfg.moe.first_k_dense
+    remaining = cfg.n_layers - len(head)
+    pat = tuple(cfg.block_pattern)
+    if not cfg.scan_layers:
+        return head + [pat[i % len(pat)] for i in range(remaining)], pat, 0, []
+    n_groups = remaining // len(pat)
+    tail_n = remaining - n_groups * len(pat)
+    tail = [pat[i % len(pat)] for i in range(n_groups * len(pat),
+                                             n_groups * len(pat) + tail_n)]
+    return head, pat, n_groups, tail
+
+
+def _block_defs(cfg: ModelConfig, kind: str) -> dict:
+    nk, d = cfg.norm_kind, cfg.d_model
+    if kind == "ssm":
+        return {"norm": norm_defs(nk, d), "ssm": ssm_mod.ssm_defs(cfg)}
+    defs: dict[str, Any] = {"norm1": norm_defs(nk, d)}
+    if kind in ("attn", "local", "moe_attn", "moe_local",
+                "dense_attn"):
+        defs["attn"] = attn_mod.attn_defs(cfg)
+    elif kind == "rec":
+        defs["rglru"] = rglru_mod.rglru_defs(cfg)
+    defs["norm2"] = norm_defs(nk, d)
+    if kind in ("moe_attn", "moe_local"):
+        defs["moe"] = moe_mod.moe_defs(cfg)
+    elif kind == "dense_attn":
+        defs["mlp"] = mlp_defs(d, cfg.moe.d_ff_dense, cfg.mlp_kind)
+    elif kind != "ssm":
+        defs["mlp"] = mlp_defs(d, cfg.d_ff, cfg.mlp_kind)
+    if cfg.post_block_norm:
+        defs["post1"] = norm_defs(nk, d)
+        if kind != "ssm":
+            defs["post2"] = norm_defs(nk, d)
+    return defs
+
+
+def _stack_defs(defs: dict, n: int) -> dict:
+    return jax.tree.map(
+        lambda p: ParamDef((n,) + p.shape, ("layers",) + p.dims,
+                           p.init, p.scale),
+        defs, is_leaf=is_def)
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    head, pat, n_groups, tail = layer_plan(cfg)
+    defs: dict[str, Any] = {"embed": embed_defs(cfg.vocab, cfg.d_model)}
+    defs["head_blocks"] = [_block_defs(cfg, k) for k in head]
+    if n_groups:
+        defs["groups"] = {
+            f"p{j}": _stack_defs(_block_defs(cfg, k), n_groups)
+            for j, k in enumerate(pat)}
+    defs["tail_blocks"] = [_block_defs(cfg, k) for k in tail]
+    defs["final_norm"] = norm_defs(cfg.norm_kind, cfg.d_model)
+    defs["logits"] = logits_defs(cfg.vocab, cfg.d_model, cfg.tie_embeddings)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def _blk_cache(cfg, kind, batch, max_len, dtype, mode):
+    """mode: 'init' arrays | 'spec' logical dims."""
+    if kind in ("attn", "local", "moe_attn", "moe_local",
+                "dense_attn"):
+        if mode == "init":
+            return attn_mod.init_cache(cfg, batch, max_len, kind, dtype)
+        return attn_mod.cache_spec(cfg, batch, max_len, kind)
+    if kind == "ssm":
+        return (ssm_mod.init_ssm_state(cfg, batch, dtype) if mode == "init"
+                else ssm_mod.ssm_state_spec(cfg))
+    if kind == "rec":
+        return (rglru_mod.init_rglru_state(cfg, batch, dtype)
+                if mode == "init" else rglru_mod.rglru_state_spec(cfg))
+    raise ValueError(kind)
+
+
+def _stack_cache(c, n):
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), c)
+
+
+def _stack_cache_spec(c, n):
+    return jax.tree.map(lambda dims: ("layers",) + tuple(dims), c,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    head, pat, n_groups, tail = layer_plan(cfg)
+    caches: dict[str, Any] = {
+        "head": [_blk_cache(cfg, k, batch, max_len, dtype, "init")
+                 for k in head]}
+    if n_groups:
+        caches["groups"] = {
+            f"p{j}": _stack_cache(
+                _blk_cache(cfg, k, batch, max_len, dtype, "init"), n_groups)
+            for j, k in enumerate(pat)}
+    caches["tail"] = [_blk_cache(cfg, k, batch, max_len, dtype, "init")
+                      for k in tail]
+    return caches
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    head, pat, n_groups, tail = layer_plan(cfg)
+    specs: dict[str, Any] = {
+        "head": [_blk_cache(cfg, k, batch, max_len, None, "spec")
+                 for k in head]}
+    if n_groups:
+        specs["groups"] = {
+            f"p{j}": _stack_cache_spec(
+                _blk_cache(cfg, k, batch, max_len, None, "spec"), n_groups)
+            for j, k in enumerate(pat)}
+    specs["tail"] = [_blk_cache(cfg, k, batch, max_len, None, "spec")
+                     for k in tail]
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(bp: dict, cfg: ModelConfig, kind: str, x, positions,
+                 cache, aux):
+    nk, eps = cfg.norm_kind, cfg.norm_eps
+    if kind == "ssm":
+        h, cache = ssm_mod.apply_ssm(
+            bp["ssm"], cfg, apply_norm(bp["norm"], x, nk, eps), cache)
+        if cfg.post_block_norm:
+            h = apply_norm(bp["post1"], h, nk, eps)
+        return x + h, cache, aux
+
+    h = apply_norm(bp["norm1"], x, nk, eps)
+    if kind == "rec":
+        h, cache = rglru_mod.apply_rglru(bp["rglru"], cfg, h, cache)
+    else:
+        h, cache = attn_mod.attention(bp["attn"], cfg, kind, h, positions,
+                                      cache)
+    if cfg.post_block_norm:
+        h = apply_norm(bp["post1"], h, nk, eps)
+    x = x + h
+
+    h = apply_norm(bp["norm2"], x, nk, eps)
+    if kind in ("moe_attn", "moe_local"):
+        h, a = moe_mod.apply_moe(bp["moe"], cfg, h)
+        aux = aux + a
+    else:
+        h = apply_mlp(bp["mlp"], h, cfg.mlp_kind)
+    if cfg.post_block_norm:
+        h = apply_norm(bp["post2"], h, nk, eps)
+    return x + h, cache, aux
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# trunk
+# ---------------------------------------------------------------------------
+
+
+def _trunk(params, cfg: ModelConfig, x, positions, caches):
+    """Shared by forward/prefill/decode. caches=None for pure training."""
+    head, pat, n_groups, tail = layer_plan(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    new_caches: dict[str, Any] = {"head": [], "tail": []}
+
+    def get(cs, part, i):
+        return None if cs is None else cs[part][i]
+
+    for i, kind in enumerate(head):
+        x, c, aux = _apply_block(params["head_blocks"][i], cfg, kind, x,
+                                 positions, get(caches, "head", i), aux)
+        new_caches["head"].append(c)
+
+    if n_groups:
+        gparams = params["groups"]
+        gcaches = None if caches is None else caches["groups"]
+
+        def body(carry, xs):
+            xc, auxc = carry
+            gp, gc = xs
+            for j, kind in enumerate(pat):
+                cj = None if gc is None else gc[f"p{j}"]
+                xc, cj, auxc = _apply_block(gp[f"p{j}"], cfg, kind, xc,
+                                            positions, cj, auxc)
+                if gc is not None:
+                    gc[f"p{j}"] = cj
+            return (xc, auxc), gc
+
+        body = _remat(body, cfg)
+        (x, aux), gcaches_new = jax.lax.scan(
+            body, (x, aux), (gparams, gcaches))
+        new_caches["groups"] = gcaches_new
+
+    for i, kind in enumerate(tail):
+        x, c, aux = _apply_block(params["tail_blocks"][i], cfg, kind, x,
+                                 positions, get(caches, "tail", i), aux)
+        new_caches["tail"].append(c)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    return x, (None if caches is None else new_caches), aux
+
+
+def _embed_in(params, cfg, tokens):
+    x = embed_lookup(params["embed"], tokens, cfg.embed_scale, cfg.d_model)
+    return shard(x, "batch", "seq", "act_embed")
+
+
+def forward(params, cfg: ModelConfig, tokens: jax.Array,
+            embeds: Optional[jax.Array] = None):
+    """Training/eval forward: tokens [b, t] -> (logits f32, aux)."""
+    x = _embed_in(params, cfg, tokens) if embeds is None else embeds
+    b, t = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    x, _, aux = _trunk(params, cfg, x, positions, None)
+    logits = apply_logits(params["logits"], params["embed"], x,
+                          cfg.tie_embeddings, cfg.softcap_final)
+    return logits, aux
+
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array, max_len: int,
+            embeds: Optional[jax.Array] = None):
+    """Prefill: fills caches, returns last-position logits + caches."""
+    x = _embed_in(params, cfg, tokens) if embeds is None else embeds
+    b, t = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    caches = init_caches(cfg, b, max_len, x.dtype)
+    x, caches, aux = _trunk(params, cfg, x, positions, caches)
+    logits = apply_logits(params["logits"], params["embed"], x[:, -1:],
+                          cfg.tie_embeddings, cfg.softcap_final)
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, caches,
+                pos: jax.Array):
+    """One serve step: token [b, 1], pos [] int32 -> (logits, caches)."""
+    x = _embed_in(params, cfg, token)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+    x, caches, _ = _trunk(params, cfg, x, positions, caches)
+    logits = apply_logits(params["logits"], params["embed"], x,
+                          cfg.tie_embeddings, cfg.softcap_final)
+    return logits, caches
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens: jax.Array,
+                   embeds: Optional[jax.Array] = None):
+    """Trunk output before the LM head (for chunked-loss heads)."""
+    x = _embed_in(params, cfg, tokens) if embeds is None else embeds
+    b, t = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    x, _, aux = _trunk(params, cfg, x, positions, None)
+    return x, aux
+
+
+def _ce(logits, labels):
+    mask = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, lab[..., None], -1)[..., 0]
+    return jnp.sum(nll * mask), jnp.sum(mask)
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, labels,
+            embeds: Optional[jax.Array] = None):
+    """Next-token cross-entropy (labels = -1 ignored) + MoE aux.
+
+    cfg.loss_chunk > 0 streams the LM head over sequence chunks so the
+    [b, t, vocab] logits tensor is never materialised (§Perf: at 256k
+    vocab the f32 logits + softmax grads dominate train memory)."""
+    if cfg.loss_chunk <= 0:
+        logits, aux = forward(params, cfg, tokens, embeds)
+        tot, cnt = _ce(logits, labels)
+        loss = tot / jnp.maximum(cnt, 1)
+        return loss + aux, (loss, aux)
+
+    x, aux = forward_hidden(params, cfg, tokens, embeds)
+    b, t, d = x.shape
+    c = min(cfg.loss_chunk, t)
+    nc = t // c
+    xc = x[:, :nc * c].reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    lc = labels[:, :nc * c].reshape(b, nc, c).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        xi, li = xs
+        logits = apply_logits(params["logits"], params["embed"], xi,
+                              cfg.tie_embeddings, cfg.softcap_final)
+        tot, cnt = _ce(logits, li)
+        return (carry[0] + tot, carry[1] + cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros(())), (xc, lc))
+    if nc * c < t:   # ragged tail
+        logits = apply_logits(params["logits"], params["embed"],
+                              x[:, nc * c:], cfg.tie_embeddings,
+                              cfg.softcap_final)
+        t2, c2 = _ce(logits, labels[:, nc * c:])
+        tot, cnt = tot + t2, cnt + c2
+    loss = tot / jnp.maximum(cnt, 1)
+    return loss + aux, (loss, aux)

@@ -1,0 +1,74 @@
+"""InternVL2-style VLM: ViT-stub -> MLP projector -> InternLM2 trunk.
+
+The InternViT frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed patch embeddings [b, n_patches, vit_dim].  This
+module owns the projector (vit_dim -> d_model) and splices the projected
+patches in front of the token embeddings before running the standard
+decoder trunk from ``transformer.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import shard
+from .config import ModelConfig
+from .layers import ParamDef, apply_norm, embed_lookup, norm_defs
+from . import transformer
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    v = cfg.vlm
+    defs = transformer.param_defs(cfg)
+    defs["projector"] = {
+        "norm": norm_defs("ln", v.vit_dim),
+        "w1": ParamDef((v.vit_dim, cfg.d_model), ("fsdp", "tensor"),
+                       "scaled"),
+        "b1": ParamDef((cfg.d_model,), (None,), "zeros"),
+        "w2": ParamDef((cfg.d_model, cfg.d_model), ("fsdp", "tensor"),
+                       "scaled"),
+        "b2": ParamDef((cfg.d_model,), (None,), "zeros"),
+    }
+    return defs
+
+
+def project_patches(params, cfg: ModelConfig, patches: jax.Array):
+    """[b, p, vit_dim] -> [b, p, d_model]."""
+    pp = params["projector"]
+    x = apply_norm(pp["norm"], patches, "ln", cfg.norm_eps)
+    x = jnp.einsum("bpv,vd->bpd", x, pp["w1"].astype(x.dtype))
+    x = jax.nn.gelu(x + pp["b1"].astype(x.dtype))
+    x = jnp.einsum("bpd,de->bpe", x, pp["w2"].astype(x.dtype))
+    return x + pp["b2"].astype(x.dtype)
+
+
+def fuse_inputs(params, cfg: ModelConfig, patches, tokens):
+    """Patch embeds ++ token embeds -> [b, p + t, d_model]."""
+    img = project_patches(params, cfg, patches)
+    txt = embed_lookup(params["embed"], tokens, cfg.embed_scale,
+                       cfg.d_model)
+    x = jnp.concatenate([img.astype(txt.dtype), txt], axis=1)
+    return shard(x, "batch", "seq", "act_embed")
+
+
+def forward(params, cfg: ModelConfig, patches, tokens):
+    embeds = fuse_inputs(params, cfg, patches, tokens)
+    return transformer.forward(params, cfg, tokens=None, embeds=embeds)
+
+
+def loss_fn(params, cfg: ModelConfig, patches, tokens, labels):
+    """labels align with the fused sequence; patch positions use -1."""
+    logits, aux = forward(params, cfg, patches, tokens)
+    mask = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, -1)
+    nll = -jnp.take_along_axis(logp, lab[..., None], -1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return loss + aux, (loss, aux)
+
+
+def prefill(params, cfg: ModelConfig, patches, tokens, max_len: int):
+    embeds = fuse_inputs(params, cfg, patches, tokens)
+    return transformer.prefill(params, cfg, tokens=None, max_len=max_len,
+                               embeds=embeds)

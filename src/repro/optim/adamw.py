@@ -1,0 +1,104 @@
+"""AdamW from scratch, sharding-aware.
+
+Optimizer moments inherit each param's logical sharding (ZeRO-style: the
+FSDP axis shards them 16-way, tensor axis another 16-way), and the fp32
+master copy is optional (bf16 training keeps masters; fp32 training
+reuses params).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    use_master: bool = True       # fp32 master weights for bf16 params
+
+
+class OptState(NamedTuple):
+    step: jax.Array               # [] int32
+    mu: Any                       # first moment  (fp32)
+    nu: Any                       # second moment (fp32)
+    master: Any                   # fp32 master params or None
+
+
+def adamw_init(params, cfg: AdamWConfig) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if cfg.use_master else None)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def opt_state_specs(param_spec_tree, cfg: AdamWConfig):
+    """Logical-dims tree for the optimizer state (mirrors params)."""
+    leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    copy = jax.tree.map(lambda d: tuple(d), param_spec_tree, is_leaf=leaf)
+    return OptState(step=(), mu=copy,
+                    nu=jax.tree.map(lambda d: tuple(d), param_spec_tree,
+                                    is_leaf=leaf),
+                    master=copy if cfg.use_master else None)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(grads, opt: OptState, params, cfg: AdamWConfig,
+                 lr: Optional[jax.Array] = None):
+    """Returns (new_params, new_opt, metrics)."""
+    step = opt.step + 1
+    lr_t = cfg.lr if lr is None else lr
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p, pm):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        mhat = m / bc1
+        vhat = v / bc2
+        base = (pm if pm is not None else p.astype(jnp.float32))
+        new = base - lr_t * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                             + cfg.weight_decay * base)
+        return new.astype(p.dtype), m, v, new
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(opt.mu)
+    flat_v = jax.tree.leaves(opt.nu)
+    flat_p = jax.tree.leaves(params)
+    flat_pm = (jax.tree.leaves(opt.master) if opt.master is not None
+               else [None] * len(flat_p))
+    outs = [upd(g, m, v, p, pm) for g, m, v, p, pm in
+            zip(flat_g, flat_m, flat_v, flat_p, flat_pm)]
+    new_params = tdef.unflatten([o[0] for o in outs])
+    new_mu = tdef.unflatten([o[1] for o in outs])
+    new_nu = tdef.unflatten([o[2] for o in outs])
+    new_master = (tdef.unflatten([o[3] for o in outs])
+                  if opt.master is not None else None)
+    new_opt = OptState(step=step, mu=new_mu, nu=new_nu, master=new_master)
+    return new_params, new_opt, {"grad_norm": gnorm,
+                                 "lr": jnp.asarray(lr_t, jnp.float32)}

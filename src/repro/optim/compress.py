@@ -1,0 +1,57 @@
+"""Int8 gradient compression with error feedback.
+
+Used on the cross-pod (DCN) axis: gradients are quantised to int8 with a
+per-tensor scale before the pod all-reduce, and the quantisation residual
+is carried into the next step (error feedback keeps convergence —
+tests/test_optim.py verifies the EF accumulator bounds the bias).
+
+4x byte reduction on exactly the axis the paper's CC pacer manages; the
+co-sim benchmark quantifies both together.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any                 # same tree as grads, fp32
+
+
+def ef_init(grads_like) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def compress_int8(x: jax.Array):
+    """-> (int8 values, f32 scale). Symmetric per-tensor quantisation."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_update(grads, ef: EFState):
+    """Quantise (grads + residual); return (dequantised grads, new EF).
+
+    The dequantised value is what enters the cross-pod reduction; the
+    residual keeps what quantisation lost.
+    """
+    def one(g, r):
+        tot = g.astype(jnp.float32) + r
+        q, s = compress_int8(tot)
+        deq = decompress_int8(q, s)
+        return deq.astype(g.dtype), tot - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(ef.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            EFState(residual=tdef.unflatten([o[1] for o in outs])))

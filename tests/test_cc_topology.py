@@ -1,0 +1,89 @@
+"""Topology + routing invariants for the CC core."""
+
+import numpy as np
+import pytest
+
+from repro.core import (CCConfig, ClosIndex, build_flow_routes, clos_route,
+                        make_clos3, make_paper_clos)
+from repro.core.routing import route_hops, stage_load, validate_routes
+
+
+def test_paper_clos_counts():
+    topo = make_paper_clos()
+    assert topo.n_nodes == 64
+    assert topo.n_switches == 48
+    assert topo.n_links == 6 * 64
+
+
+def test_clos_radix_bound():
+    """No switch may use more than 8 ports (4 in + 4 out per side)."""
+    topo = make_paper_clos()
+    # per-switch degree: count directed links touching each switch, / 2
+    for s in range(topo.n_switches):
+        out_deg = int((topo.link_src == s).sum())
+        in_deg = int((topo.link_dst == s).sum())
+        assert out_deg <= 8 and in_deg <= 8
+
+
+def test_switch16_is_agg00():
+    idx = ClosIndex(4)
+    assert idx.switch_of_agg(0, 0) == 16  # the paper's HoL switch
+
+
+@pytest.mark.parametrize("roll", [0, 1])
+def test_routes_connected(roll):
+    topo = make_paper_clos()
+    pairs = [(s, d) for s in range(0, 64, 7) for d in range(3, 64, 11)
+             if s != d]
+    routes = build_flow_routes(topo, pairs, roll=roll)
+    validate_routes(topo, routes)  # raises on any broken hop
+
+
+def test_routes_start_and_end_at_hosts():
+    topo = make_paper_clos()
+    pairs = [(0, 63), (5, 6), (17, 42)]
+    routes = build_flow_routes(topo, pairs)
+    hops = route_hops(routes)
+    for f, (s, d) in enumerate(pairs):
+        first, last = routes[f, 0], routes[f, hops[f] - 1]
+        assert topo.link_src[first] == -(s + 1)
+        assert topo.link_dst[last] == -(d + 1)
+
+
+def test_dmodk_balances_uplinks():
+    """All-to-all routes must spread ~evenly over each stage's links."""
+    topo = make_paper_clos()
+    pairs = [(s, d) for s in range(64) for d in range(64) if s != d]
+    routes = build_flow_routes(topo, pairs)
+    load = stage_load(routes, topo.n_links)
+    leaf_up = load[64:128]          # leaf->agg stage
+    assert leaf_up.max() <= 2 * max(1, leaf_up.min())
+
+
+def test_paper_shared_wire():
+    """roll=0: F0,F1 (->N16) and F3 (->N12) share leaf-0 uplink 0."""
+    idx = ClosIndex(4)
+    p0 = clos_route(idx, 0, 16, roll=0)
+    p1 = clos_route(idx, 1, 16, roll=0)
+    pv = clos_route(idx, 3, 12, roll=0)
+    shared = idx.leaf_up(0, 0)
+    assert shared in p0 and shared in p1 and shared in pv
+
+
+def test_paper_disjoint_wire():
+    """roll=1: the victim's path is wire-disjoint from the incast flows."""
+    idx = ClosIndex(4)
+    incast = set()
+    for s in (0, 1, 4, 8):
+        incast |= set(clos_route(idx, s, 16, roll=1))
+    victim = set(clos_route(idx, 3, 12, roll=1))
+    assert not (incast & victim)
+
+
+def test_generic_arity_scales():
+    topo = make_clos3(arity=8)
+    assert topo.n_nodes == 512
+    assert topo.n_switches == 3 * 64
+    pairs = [(0, 511), (100, 200)]
+    routes = build_flow_routes(topo, pairs, arity=8)
+    validate_routes(topo, routes)

@@ -1,0 +1,85 @@
+"""Dry-run machinery tests on a 1-device mesh with shrunken shape cells.
+
+(The full 512-device sweep runs via `python -m repro.launch.dryrun`;
+here we prove the cell builders produce lowerable/compilable programs
+for every step kind and that the collective parser works.)
+"""
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs import common as cfg_common
+
+# NOTE: importing dryrun late (jax already initialised with 1 CPU device;
+# its XLA_FLAGS write is inert here by design).
+from repro.launch import dryrun
+
+TINY = {
+    "train_4k": cfg_common.ShapeCell("train_4k", 64, 4, "train"),
+    "prefill_32k": cfg_common.ShapeCell("prefill_32k", 64, 2, "prefill"),
+    "decode_32k": cfg_common.ShapeCell("decode_32k", 64, 2, "decode"),
+    "long_500k": cfg_common.ShapeCell("long_500k", 128, 1, "decode"),
+}
+
+
+@pytest.fixture(autouse=True)
+def tiny_shapes(monkeypatch):
+    for k, v in TINY.items():
+        monkeypatch.setitem(cfg_common.SHAPES, k, v)
+    yield
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen2.5-32b", "train_4k"),
+    ("gemma2-27b", "prefill_32k"),
+    ("mixtral-8x22b", "decode_32k"),
+    ("falcon-mamba-7b", "long_500k"),
+    ("whisper-base", "decode_32k"),
+    ("internvl2-26b", "train_4k"),
+    ("recurrentgemma-9b", "decode_32k"),
+])
+def test_build_and_compile_cell(arch, shape):
+    cfg = get_smoke_config(arch)
+    mesh = _mesh()
+    with jax.set_mesh(mesh):
+        fn, args, donate = dryrun.build_cell(cfg, shape, mesh)
+        compiled = jax.jit(fn, donate_argnums=donate).lower(*args).compile()
+        mem = compiled.memory_analysis()
+        assert mem is not None
+        cost = compiled.cost_analysis()
+        assert cost.get("flops", 0) > 0
+
+
+def test_collective_parser():
+    hlo = """
+  %all-reduce.1 = bf16[8,128] all-reduce(bf16[8,128] %x)
+  %ag = f32[64] all-gather(f32[32] %y)
+  %rs.2 = f32[16,4]{1,0} reduce-scatter(f32[64,4] %z)
+  %notacollective = f32[2] add(f32[2] %a, f32[2] %b)
+  %cp-start = u32[4] collective-permute-start(u32[4] %w)
+"""
+    stats = dryrun.collective_stats(hlo)
+    assert stats["all-reduce"]["bytes"] == 8 * 128 * 2
+    assert stats["all-gather"]["bytes"] == 64 * 4
+    assert stats["reduce-scatter"]["bytes"] == 16 * 4 * 4
+    assert stats["collective-permute"]["count"] == 1
+    assert stats["total_bytes"] == (8 * 128 * 2 + 256 + 256 + 16)
+
+
+def test_with_groups_probe_configs():
+    cfg = get_smoke_config("gemma2-27b")          # pattern period 2
+    probe = dryrun._with_groups(cfg, 2)
+    assert probe.scan_layers is False
+    assert probe.n_layers == 4                    # 2 groups x period 2
+    cfg = get_smoke_config("recurrentgemma-9b")   # period 3, tail 2
+    probe = dryrun._with_groups(cfg, 2)
+    from repro.models.transformer import layer_plan
+    head, pat, n_groups, tail = layer_plan(cfg)
+    assert probe.n_layers == len(head) + 2 * len(pat) + len(tail)

@@ -1,0 +1,215 @@
+"""Substrate tests: optimizer, compression, data pipeline, checkpointing,
+pacer, pipeline parallelism, sharding rules."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import (CheckpointManager, latest_step, load_checkpoint,
+                        save_checkpoint)
+from repro.data import DataConfig, SyntheticLM
+from repro.dist.pacer import chunk_bytes_of, erp_chunk_schedule
+from repro.dist.sharding import DEFAULT_RULES, pspec
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, compress_int8,
+                         cosine_schedule, decompress_int8,
+                         ef_compress_update, ef_init)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_descends_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, use_master=True)
+    opt = adamw_init(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}          # d/dw w^2
+        params, opt, _ = adamw_update(grads, opt, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) > 100
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(clipped["a"])), 1.0, rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lrs = [float(cosine_schedule(jnp.asarray(s), peak_lr=1.0,
+                                 warmup_steps=10, total_steps=100))
+           for s in range(0, 101, 5)]
+    assert lrs[0] == 0.0
+    assert max(lrs) <= 1.0
+    assert lrs[2] == 1.0                         # end of warmup
+    assert lrs[-1] == pytest.approx(0.1, rel=1e-3)   # min_ratio floor
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(1e-6, 1e6))
+def test_int8_roundtrip_bounded_error(seed, scale):
+    r = np.random.RandomState(seed)
+    x = jnp.asarray(r.randn(257) * scale, jnp.float32)
+    q, s = compress_int8(x)
+    err = jnp.abs(decompress_int8(q, s) - x).max()
+    assert float(err) <= float(s) * 0.5 + 1e-12  # half-ULP of the quantiser
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """Sum of EF-compressed grads converges to sum of true grads."""
+    r = np.random.RandomState(0)
+    g_true = [{"w": jnp.asarray(r.randn(64), jnp.float32)}
+              for _ in range(50)]
+    ef = ef_init(g_true[0])
+    tot_c = jnp.zeros(64)
+    tot_t = jnp.zeros(64)
+    for g in g_true:
+        gc, ef = ef_compress_update(g, ef)
+        tot_c += gc["w"]
+        tot_t += g["w"]
+    resid = float(jnp.abs(ef.residual["w"]).max())
+    drift = float(jnp.abs(tot_c - tot_t).max())
+    assert drift <= resid + 1e-4   # EF: error never accumulates beyond 1 q
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_resumable():
+    cfg = DataConfig(vocab=97, seq_len=16, global_batch=4, kind="zipf")
+    ds = SyntheticLM(cfg)
+    a = ds.batch_at(12)
+    b = SyntheticLM(cfg).batch_at(12)     # fresh instance, same step
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_data_host_sharding_disjoint():
+    full = DataConfig(vocab=97, seq_len=8, global_batch=8, kind="uniform")
+    h0 = DataConfig(vocab=97, seq_len=8, global_batch=8, kind="uniform",
+                    n_hosts=2, host_id=0)
+    h1 = DataConfig(vocab=97, seq_len=8, global_batch=8, kind="uniform",
+                    n_hosts=2, host_id=1)
+    b0 = SyntheticLM(h0).batch_at(3)
+    b1 = SyntheticLM(h1).batch_at(3)
+    assert b0["tokens"].shape == (4, 8)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_markov_is_learnable_structure():
+    ds = SyntheticLM(DataConfig(vocab=64, seq_len=128, global_batch=2,
+                                kind="markov"))
+    b = ds.batch_at(0)
+    pred = (b["tokens"].astype(np.int64) * 31 + 17) % 64
+    # labels within the 0..6 noise band of the deterministic map
+    diff = (b["labels"] - pred) % 64
+    assert diff.max() <= 6
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_ckpt_roundtrip_and_atomicity():
+    tree = {"a": jnp.arange(5.0), "b": [jnp.ones((2, 2)),
+                                        {"c": jnp.zeros(3)}]}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 7, tree, extra={"data_step": 7})
+        # a torn write must be invisible
+        os.makedirs(os.path.join(d, "step_000000009.tmp"))
+        assert latest_step(d) == 7
+        got, extra = load_checkpoint(d)
+        np.testing.assert_array_equal(got["a"], np.arange(5.0))
+        np.testing.assert_array_equal(got["b"][0], np.ones((2, 2)))
+        assert extra["data_step"] == 7
+
+
+def test_ckpt_manager_async_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save_async(s, {"x": jnp.full((4,), float(s))})
+        mgr.wait()
+        steps = sorted(int(n.split("_")[1]) for n in os.listdir(d)
+                       if n.startswith("step_") and not n.endswith(".done"))
+        assert steps == [3, 4]
+        got, _ = load_checkpoint(d)
+        assert float(got["x"][0]) == 4.0
+
+
+def test_ckpt_elastic_resharding():
+    """Restore onto explicit (different) shardings."""
+    mesh = jax.make_mesh((1,), ("data",))
+    from jax.sharding import NamedSharding, PartitionSpec
+    tree = {"w": jnp.arange(8.0)}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, tree)
+        sh = {"w": NamedSharding(mesh, PartitionSpec("data"))}
+        got, _ = load_checkpoint(d, shardings=sh)
+        assert got["w"].sharding == sh["w"]
+        np.testing.assert_array_equal(np.asarray(got["w"]), np.arange(8.0))
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_pspec_divisibility_guard():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # 40 heads % 1 == 0 trivially here; force the guard with a fake shape
+    spec = pspec(("vocab",), (92553,), DEFAULT_RULES, mesh)
+    assert spec == jax.sharding.PartitionSpec(None,) or spec is not None
+
+
+def test_pspec_joint_axes():
+    # AbstractMesh: the production shape without needing 4 real devices
+    mesh = jax.sharding.AbstractMesh((2, 2, 1), ("pod", "data", "model"))
+    spec = pspec(("batch", None), (8, 4), DEFAULT_RULES, mesh)
+    assert spec[0] == ("pod", "data")
+    # non-divisible batch degrades to replication
+    spec = pspec(("batch", None), (3, 4), DEFAULT_RULES, mesh)
+    assert spec[0] is None
+
+
+# ---------------------------------------------------------------------------
+# pacer + pipeline
+# ---------------------------------------------------------------------------
+
+def test_chunk_bytes_partition():
+    tree = {"a": jnp.zeros((1000,)), "b": jnp.zeros((24,))}
+    chunks = chunk_bytes_of(tree, 8)
+    assert sum(chunks) == 1024 * 4
+    assert len(chunks) == 8
+
+
+def test_erp_schedule_orders_chunks():
+    sched = erp_chunk_schedule([1e6] * 4, n_pods=2)
+    assert sched["completion_ms"] > 0
+    assert len(sched["chunks"]) == 4
+
+
+def test_pipeline_matches_sequential():
+    """2-stage pipeline == running both stages back to back."""
+    from repro.dist.pipeline import pipeline_apply
+    mesh = jax.make_mesh((1,), ("pod",))   # 1 device: S=1 degenerate ring
+    w = jnp.asarray([[2.0]])
+    params = jnp.stack([w])                # [S=1, 1, 1]
+    xs = jnp.arange(6.0).reshape(3, 2, 1)  # M=3 microbatches of [2, 1]
+
+    def stage(p, x):
+        return x @ p + 1.0
+
+    out = pipeline_apply(stage, params, xs, mesh, n_stages=1, axis="pod")
+    want = jnp.stack([stage(w, xs[i]) for i in range(3)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want))

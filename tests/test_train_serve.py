@@ -1,0 +1,135 @@
+"""Integration: fault-tolerant loop (resume/preemption/straggler),
+serving engine, optimization-flag equivalence, sharded-context forward."""
+
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import DataConfig, SyntheticLM
+from repro.models import ModelConfig
+from repro.models import transformer as T
+from repro.models.layers import init_params
+from repro.optim import AdamWConfig
+from repro.serve import ServeConfig, ServingEngine
+from repro.train.loop import TrainLoopConfig, train_loop
+from repro.train.step import StepConfig, init_train_state, make_train_step
+
+CFG = ModelConfig(name="tiny", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, head_dim=16, d_ff=128, vocab=256)
+DATA = DataConfig(vocab=256, seq_len=32, global_batch=4, kind="markov")
+
+
+def _setup(compress=False, microbatches=1):
+    params = init_params(T.param_defs(CFG), 0, jnp.float32)
+    sc = StepConfig(opt=AdamWConfig(lr=3e-3), microbatches=microbatches,
+                    compress_grads=compress, warmup_steps=5,
+                    total_steps=200)
+    state = init_train_state(CFG, params, sc)
+    return jax.jit(make_train_step(CFG, sc)), state
+
+
+def test_loop_checkpoint_resume_exact():
+    step, state = _setup()
+    with tempfile.TemporaryDirectory() as d:
+        lc = TrainLoopConfig(total_steps=20, ckpt_dir=d, ckpt_every=10)
+        out1 = train_loop(step, state, DATA, lc)
+        # uninterrupted run to 30
+        lc30 = TrainLoopConfig(total_steps=30, ckpt_dir=None)
+        ref = train_loop(step, state, DATA,
+                         dataclasses.replace(lc30))
+        # resumed run 20 -> 30 must match the uninterrupted trajectory
+        out2 = train_loop(step, state, DATA,
+                          TrainLoopConfig(total_steps=30, ckpt_dir=d,
+                                          ckpt_every=100))
+        np.testing.assert_allclose(out2["losses"],
+                                   ref["losses"][20:30], rtol=1e-5)
+
+
+def test_loop_preemption_saves():
+    step, state = _setup()
+    calls = {"n": 0}
+
+    def stop_flag():
+        calls["n"] += 1
+        return calls["n"] >= 7
+
+    with tempfile.TemporaryDirectory() as d:
+        out = train_loop(step, state, DATA,
+                         TrainLoopConfig(total_steps=100, ckpt_dir=d,
+                                         ckpt_every=1000),
+                         stop_flag=stop_flag)
+        from repro.ckpt import latest_step
+        assert out["final_step"] < 100
+        assert latest_step(d) == out["final_step"]   # graceful save
+
+
+def test_loop_detects_stragglers(monkeypatch):
+    step, state = _setup()
+    slow = {"at": 12}
+    orig = step
+
+    def wrapped(s, b):
+        import time
+        out = orig(s, b)
+        jax.block_until_ready(out[1]["loss"])
+        if slow["at"] == 0:
+            time.sleep(0.5)
+            slow["at"] = -1
+        slow["at"] -= 1
+        return out
+
+    out = train_loop(wrapped, state, DATA,
+                     TrainLoopConfig(total_steps=20, straggler_factor=3.0))
+    assert out["stragglers"] >= 1
+
+
+def test_compressed_training_matches_uncompressed_trend():
+    step_c, state_c = _setup(compress=True)
+    step_u, state_u = _setup(compress=False)
+    ds = SyntheticLM(DATA)
+    for i in range(30):
+        state_c, mc = step_c(state_c, ds.batch_at(i))
+        state_u, mu = step_u(state_u, ds.batch_at(i))
+    assert abs(float(mc["loss"]) - float(mu["loss"])) < 0.3
+
+
+def test_serving_engine_continuous_batching():
+    params = init_params(T.param_defs(CFG), 0, jnp.float32)
+    eng = ServingEngine(CFG, params, ServeConfig(batch_slots=2,
+                                                 max_len=64))
+    prompts = [[3, 4, 5], [7, 8, 9], [11, 12, 13]]   # > slots: 2 waves
+    outs = eng.generate(prompts, max_new_tokens=6)
+    assert len(outs) == 3
+    assert all(1 <= len(o) <= 6 for o in outs)
+    # greedy determinism: same prompt -> same continuation
+    outs2 = eng.generate([prompts[0]], max_new_tokens=6)
+    assert outs2[0] == outs[0]
+
+
+def test_optimization_flags_preserve_semantics():
+    cfg = dataclasses.replace(CFG, block_pattern=("local", "attn"),
+                              window=16, softcap_attn=50.0)
+    params = init_params(T.param_defs(cfg), 0, jnp.float32)
+    rng = np.random.RandomState(0)
+    toks = jnp.asarray(rng.randint(0, 256, (2, 48)), jnp.int32)
+    labs = jnp.asarray(rng.randint(0, 256, (2, 48)), jnp.int32)
+    base, _ = T.loss_fn(params, cfg, toks, labs)
+    opt_cfg = dataclasses.replace(cfg, attn_impl="blockwise",
+                                  attn_block_k=16, loss_chunk=16)
+    opt, _ = T.loss_fn(params, opt_cfg, toks, labs)
+    np.testing.assert_allclose(float(base), float(opt), rtol=1e-5)
+
+
+def test_forward_under_mesh_context():
+    """shard() constraints must be no-ops-but-valid under a real mesh."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    params = init_params(T.param_defs(CFG), 0, jnp.float32)
+    toks = jnp.zeros((2, 16), jnp.int32)
+    with jax.set_mesh(mesh):
+        logits, _ = jax.jit(
+            lambda p, t: T.forward(p, CFG, t))(params, toks)
+    assert np.all(np.isfinite(np.asarray(logits)))
