@@ -3,24 +3,27 @@
 Cross the marking stage {CP, ECP} with the reaction stage {RP, ERP}
 (notification follows reaction: NP with RP, ENP with ERP) on the paper's
 equal-work scenario (roll=0).  (CP,RP) = DCQCN; (ECP,ERP) = DCQCN-Rev.
+The 4 mechanism combinations are one Sweep — the marking/reaction
+selectors are traced data, so the grid shares a single compiled step.
 """
 
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import CCConfig, CCScheme, paper_incast_volume, run
+from repro.core import CCConfig, CCScheme, ScenarioSpec, Sweep
 
 COMBOS = [("cp", "rp"), ("ecp", "rp"), ("cp", "erp"), ("ecp", "erp")]
 
 
-def run_ablation() -> list[dict]:
+def run_ablation(n_steps: int = 18000) -> list[dict]:
+    spec = ScenarioSpec.paper_incast_volume(roll=0)
+    sweep = Sweep([
+        (f"{m}+{r}",
+         CCConfig(scheme=CCScheme.DCQCN, marking=m, reaction=r), spec)
+        for m, r in COMBOS])
+    results = sweep.run(n_steps=n_steps)
     out = []
     for marking, reaction in COMBOS:
-        cfg = CCConfig(scheme=CCScheme.DCQCN, marking=marking,
-                       reaction=reaction)
-        scn = paper_incast_volume(cfg, roll=0)
-        res = run(scn, cfg, n_steps=18000)
+        res = results[f"{marking}+{reaction}"]
         thr = res.mean_throughput_while_active() / 1e9
         out.append({
             "marking": marking.upper(),

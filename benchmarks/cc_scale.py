@@ -1,10 +1,12 @@
-"""Beyond-paper: DC-scale CC stepping throughput.
+"""Beyond-paper: DC-scale CC stepping + sweep throughput.
 
 The paper's scenario has 5 flows; a datacenter NIC fleet runs the RP/ERP
 machine for 10^5+ flows.  This measures flow-updates/second of the
 reaction-point update at increasing F (jnp reference path; the Pallas
 cc_step kernel targets TPU and is validated in interpret mode by tests),
-plus the full fluid-model step at permutation-traffic scale.
+the full fluid-model step at permutation-traffic scale, and the batched
+Sweep engine's run-throughput (an incast-degree x scheme grid as one
+launch vs the legacy one-run-at-a-time loop).
 """
 
 from __future__ import annotations
@@ -15,7 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CCConfig, CCScheme, random_permutation, run
+from repro.core import (CCConfig, CCScheme, ScenarioSpec, Sweep,
+                        random_permutation, run)
 from repro.kernels import ref
 
 
@@ -51,6 +54,25 @@ def bench_fluid_step(n_flows: int, n_steps: int = 2000) -> float:
     return n_steps / dt    # sim steps / wall second (incl. jit)
 
 
+def bench_sweep(n_steps: int = 2000) -> tuple[float, float, int]:
+    """Scheme x incast-degree grid: one launch vs a python run() loop.
+
+    Returns (sweep_s, loop_s, n_points)."""
+    cfg = CCConfig()
+    degrees = (2, 4, 8, 16)
+    sweep = Sweep.grid(
+        configs={s.name: cfg.replace(scheme=s) for s in CCScheme},
+        scenarios={f"incast{n}": ScenarioSpec.incast(n) for n in degrees})
+    t0 = time.perf_counter()
+    sweep.run(n_steps=n_steps)
+    sweep_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for p in sweep.points:
+        run(p.scenario, p.cfg, n_steps=n_steps)
+    loop_s = time.perf_counter() - t0
+    return sweep_s, loop_s, len(sweep.points)
+
+
 def main() -> list[tuple]:
     out = []
     for F in (1_000, 10_000, 100_000):
@@ -61,6 +83,10 @@ def main() -> list[tuple]:
         sps = bench_fluid_step(nf)
         out.append((f"cc_scale.fluid_step.flows{nf}", 1e6 / sps,
                     f"{sps:.1f} sim-steps/s"))
+    sweep_s, loop_s, n = bench_sweep()
+    out.append((f"cc_scale.sweep.points{n}", sweep_s / n * 1e6,
+                f"one-launch {sweep_s:.2f}s vs run-loop {loop_s:.2f}s "
+                f"({loop_s / max(sweep_s, 1e-9):.1f}x)"))
     return out
 
 

@@ -17,7 +17,7 @@ import os
 
 import numpy as np
 
-from repro.core import CCConfig, CCScheme, collective_flows, run
+from repro.core import CCConfig, CCScheme, ScenarioSpec, Sweep
 
 ART = "artifacts/dryrun/pod2x16x16"
 
@@ -41,14 +41,18 @@ def cosim_cell(rec: dict, n_sources: int = 8,
     pairs.append((3, 12))                      # victim tenant (leaf 0)
     per_flow = vol / n_sources
     horizon = max(3e-3, 4 * vol / 12.5e9)
+    cfg = CCConfig()
+    spec = ScenarioSpec.flows(pairs, t_start=0.0, t_stop=float("inf"),
+                              volume=per_flow, nic_buffer=2 * per_flow)
+    results = Sweep.grid(           # 3 schemes, one batched launch
+        configs={s.name: cfg.replace(scheme=s) for s in CCScheme},
+        scenarios={"reduce": spec}).run(
+            n_steps=int(horizon / cfg.sim.dt))
     for scheme in CCScheme:
-        cfg = CCConfig(scheme=scheme)
-        scn = collective_flows(cfg, pairs, per_flow)
-        res = run(scn, cfg, n_steps=int(horizon / cfg.sim.dt))
+        res = results[f"{scheme.name}/reduce"]
         ct = res.completion_times()
         thr = res.mean_throughput_while_active()
-        out[scheme.name + "_ms"] = float(
-            __import__("numpy").nanmax(ct[:-1])) * 1e3
+        out[scheme.name + "_ms"] = float(np.nanmax(ct[:-1])) * 1e3
         out[scheme.name + "_victim_gbps"] = float(thr[-1]) / 1e9
     return out
 

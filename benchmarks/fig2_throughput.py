@@ -1,9 +1,11 @@
 """Paper Fig. 2 — aggregate network throughput + completion times.
 
-Runs the §II.A scenario under PFC / DCQCN / DCQCN-Rev on both wirings
-(roll=0: shared-wire, the Fig. 3 HoL narrative; roll=1: victim-disjoint,
-the Fig. 2 25 GB/s aggregate).  Writes the throughput timelines to
-artifacts/paper/fig2_<roll>.csv and returns the headline numbers.
+One ``Sweep``: 3 CC schemes x 4 scenarios (both wirings x window/equal-
+work) = 12 runs in a single jitted vmap-of-scan — no python-level
+per-run loop, one compilation.  roll=0 is the shared-wire Fig. 3 HoL
+narrative; roll=1 the victim-disjoint Fig. 2 25 GB/s aggregate.  Writes
+throughput timelines to artifacts/paper/fig2_<roll>.csv and returns the
+headline numbers.
 """
 
 from __future__ import annotations
@@ -12,28 +14,40 @@ import os
 
 import numpy as np
 
-from repro.core import (CCScheme, PAPER_CONFIG, paper_incast,
-                        paper_incast_volume, run)
+from repro.core import CCScheme, PAPER_CONFIG, ScenarioSpec, Sweep
 
 OUT = "artifacts/paper"
 
 
-def run_fig2(roll: int = 1, n_steps: int = 14000) -> dict:
+def paper_sweep(n_steps: int = 18000):
+    """The 3-scheme x 4-scenario sweep behind Figs. 2 and 3."""
     cfg = PAPER_CONFIG
+    scenarios = {}
+    for roll in (0, 1):
+        scenarios[f"w{roll}"] = ScenarioSpec.paper_incast(roll=roll)
+        scenarios[f"v{roll}"] = ScenarioSpec.paper_incast_volume(roll=roll)
+    sweep = Sweep.grid(
+        configs={s.name: cfg.replace(scheme=s) for s in CCScheme},
+        scenarios=scenarios)
+    return sweep.run(n_steps=n_steps)
+
+
+def run_fig2(res=None, roll: int = 1) -> dict:
+    if res is None:
+        res = paper_sweep()
     os.makedirs(OUT, exist_ok=True)
-    scn_w = paper_incast(cfg, roll=roll)          # window mode: plateaus
-    scn_v = paper_incast_volume(cfg, roll=roll)   # equal work: completion
-    res = {}
+    out = {}
     rows = None
     for scheme in CCScheme:
-        rw = run(scn_w, cfg.replace(scheme=scheme), n_steps=n_steps)
-        rv = run(scn_v, cfg.replace(scheme=scheme), n_steps=n_steps + 4000)
-        agg = rw.aggregate_throughput(window=100) / 1e9
+        rw = res[f"{scheme.name}/w{roll}"]       # window mode: plateaus
+        rv = res[f"{scheme.name}/v{roll}"]       # equal work: completion
+        agg = rw.aggregate_throughput(
+            window=rw.window_samples(100e-6)) / 1e9
         if rows is None:
             rows = [rw.times * 1e3]
         rows.append(agg)
         thr = rw.mean_throughput_while_active() / 1e9
-        res[scheme.name] = {
+        out[scheme.name] = {
             "aggregate_gbps": float(thr.sum()),
             "victim_gbps": float(thr[4]),
             "completion_ms": rv.completion_time() * 1e3,
@@ -42,13 +56,14 @@ def run_fig2(roll: int = 1, n_steps: int = 14000) -> dict:
     header = "time_ms," + ",".join(s.name for s in CCScheme)
     np.savetxt(os.path.join(OUT, f"fig2_roll{roll}.csv"),
                np.stack(rows, 1), delimiter=",", header=header, fmt="%.4f")
-    return res
+    return out
 
 
 def main() -> list[tuple]:
+    res = paper_sweep()                          # ONE device launch
     out = []
     for roll in (0, 1):
-        r = run_fig2(roll)
+        r = run_fig2(res, roll)
         for scheme, v in r.items():
             out.append((f"fig2.roll{roll}.{scheme}",
                         v["completion_ms"] * 1e3,   # us per "call" (= run)

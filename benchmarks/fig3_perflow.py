@@ -3,7 +3,8 @@ shared-wire wiring where the HoL pathology lives).
 
 Reproduces: PFC parking-lot on F0/F1 vs F4/F8, DCQCN throttling the
 victim alongside congesting flows, DCQCN-Rev keeping the victim at its
-max-min share while fair-sharing the incast flows.
+max-min share while fair-sharing the incast flows.  All three schemes
+ride one batched Sweep launch.
 """
 
 from __future__ import annotations
@@ -13,7 +14,7 @@ import os
 import numpy as np
 
 from repro.core import (CCScheme, PAPER_CONFIG, PAPER_FLOW_NAMES,
-                        paper_incast, run)
+                        ScenarioSpec, Sweep)
 
 OUT = "artifacts/paper"
 
@@ -21,11 +22,14 @@ OUT = "artifacts/paper"
 def run_fig3(n_steps: int = 14000) -> dict:
     cfg = PAPER_CONFIG
     os.makedirs(OUT, exist_ok=True)
-    scn = paper_incast(cfg, roll=0)
+    sweep = Sweep.grid(
+        configs={s.name: cfg.replace(scheme=s) for s in CCScheme},
+        scenarios={"hol": ScenarioSpec.paper_incast(roll=0)})
+    results = sweep.run(n_steps=n_steps)
     res = {}
     for scheme in CCScheme:
-        r = run(scn, cfg.replace(scheme=scheme), n_steps=n_steps)
-        thr = r.flow_throughput(window=100) / 1e9
+        r = results[f"{scheme.name}/hol"]
+        thr = r.flow_throughput(window=r.window_samples(100e-6)) / 1e9
         header = "time_ms," + ",".join(PAPER_FLOW_NAMES)
         np.savetxt(os.path.join(OUT, f"fig3_{scheme.name}.csv"),
                    np.concatenate([r.times[:, None] * 1e3, thr], 1),

@@ -7,10 +7,14 @@ beyond-paper harnesses.  Prints ``name,us_per_call,derived`` CSV.
   roofline.*  §Roofline terms per (arch x shape) from dry-run artifacts
   cosim.*     collective traffic x CC scheme co-simulation
   train.*     tiny end-to-end training-step wall time (CPU)
+
+``--smoke`` runs one tiny end-to-end Sweep (scheme x scenario grid,
+single jitted launch) and exits non-zero on failure — the CI hook.
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 
@@ -57,7 +61,46 @@ def bench_train_step() -> list[tuple]:
     return out
 
 
+def smoke() -> int:
+    """Tiny sweep, end to end: scheme x scenario grid in one launch.
+
+    Checks the load-bearing invariants cheaply (sub-minute on CPU):
+    the sweep runs as one jitted call, per-point views slice cleanly,
+    and DCQCN-Rev's fair-share behaviour shows up on the small incast.
+    """
+    from repro.core import CCScheme, PAPER_CONFIG, ScenarioSpec, Sweep
+
+    cfg = PAPER_CONFIG
+    t0 = time.perf_counter()
+    sweep = Sweep.grid(
+        configs={s.name: cfg.replace(scheme=s)
+                 for s in (CCScheme.DCQCN, CCScheme.DCQCN_REV)},
+        scenarios={"hol": ScenarioSpec.paper_incast(roll=0),
+                   "incast2": ScenarioSpec.incast(2, victim=False)})
+    res = sweep.run(n_steps=4000)
+    wall = time.perf_counter() - t0
+    summary = res.summary()
+    for name, row in summary.items():
+        print(f"smoke.{name}: agg={row['aggregate_gbps']:.2f}GB/s "
+              f"peak_q={row['peak_queue_kb']:.0f}KB")
+    rev = res["DCQCN_REV/hol"].mean_throughput_while_active()
+    dcq = res["DCQCN/hol"].mean_throughput_while_active()
+    ok = (len(summary) == 4
+          and rev[4] > dcq[4]              # Rev protects the victim
+          and rev.sum() > dcq.sum())       # ... and total throughput
+    print(f"smoke: 4-point sweep in {wall:.1f}s -> "
+          f"{'OK' if ok else 'FAILED'}")
+    return 0 if ok else 1
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny end-to-end sweep (CI tier-1 hook)")
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(smoke())
+
     from . import (ablation, cc_scale, cosim, fig2_throughput,
                    fig3_perflow, roofline)
 

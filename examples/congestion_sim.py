@@ -3,8 +3,10 @@
     PYTHONPATH=src python examples/congestion_sim.py [--roll 0|1]
         [--scheme PFC_ONLY|DCQCN|DCQCN_REV|all] [--volume-mb 9.375]
 
-Prints the per-flow bandwidth table (Fig. 3), aggregate plateaus (Fig. 2)
-and equal-work completion times; writes timelines to artifacts/paper/.
+All requested (scheme x window/equal-work) runs execute as ONE batched
+Sweep launch (see repro.core.experiments).  Prints the per-flow
+bandwidth table (Fig. 3), aggregate plateaus (Fig. 2) and equal-work
+completion times.
 """
 
 import argparse
@@ -16,15 +18,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.core import (CCScheme, PAPER_CONFIG, PAPER_FLOW_NAMES,
-                        paper_incast, paper_incast_volume, run)
+                        ScenarioSpec, Sweep)
 
 
-def show(scheme: CCScheme, roll: int, volume_mb: float):
-    cfg = PAPER_CONFIG.replace(scheme=scheme)
-    rw = run(paper_incast(cfg, roll=roll), cfg, n_steps=14000)
-    rv = run(paper_incast_volume(cfg, roll=roll,
-                                 volume_bytes=volume_mb * 1e6),
-             cfg, n_steps=18000)
+def show(res, scheme: CCScheme, roll: int):
+    rw = res[f"{scheme.name}/window"]
+    rv = res[f"{scheme.name}/volume"]
     thr = rw.mean_throughput_while_active() / 1e9
     ct = rv.completion_times() * 1e3
     print(f"\n=== {scheme.name} (roll={roll}) ===")
@@ -47,8 +46,16 @@ def main():
 
     schemes = (list(CCScheme) if args.scheme == "all"
                else [CCScheme[args.scheme]])
+    sweep = Sweep.grid(
+        configs={s.name: PAPER_CONFIG.replace(scheme=s) for s in schemes},
+        scenarios={
+            "window": ScenarioSpec.paper_incast(roll=args.roll),
+            "volume": ScenarioSpec.paper_incast_volume(
+                roll=args.roll, volume_bytes=args.volume_mb * 1e6),
+        })
+    res = sweep.run(n_steps=18000)      # one compile, one device launch
     for s in schemes:
-        show(s, args.roll, args.volume_mb)
+        show(res, s, args.roll)
     print("\nExpected (paper §II): DCQCN-Rev completes first, PFC second, "
           "DCQCN last;\nvictim unharmed only under DCQCN-Rev; 25 GB/s "
           "aggregate in the disjoint wiring.")

@@ -1,20 +1,26 @@
 """repro.core — the paper's contribution: DCQCN-Rev congestion control.
 
 Public surface:
-  * params:    CCConfig / CCScheme / PAPER_CONFIG
-  * topology:  make_paper_clos / make_clos3 / Topology
-  * routing:   build_flow_routes / clos_route
-  * fluid:     Scenario / FluidState / make_step_fn
-  * simulator: run / run_all_schemes / SimResult
-  * scenarios: paper_incast / incast / random_permutation / collective_flows
+  * params:      CCConfig / CCScheme / PAPER_CONFIG
+  * topology:    make_paper_clos / make_clos3 / Topology
+  * routing:     build_flow_routes / clos_route
+  * fluid:       Scenario / FluidState / fluid_step / make_step_fn
+  * simulator:   run / run_all_schemes / SimResult
+  * experiments: ScenarioSpec / Sweep / SweepResult / config_grid —
+                 the declarative one-jit sweep API (preferred entrypoint)
+  * scenarios:   paper_incast / incast / ... (legacy wrappers over specs)
 """
 
 from .params import (CCConfig, CCScheme, DCQCNParams, LinkParams,
                      PAPER_CONFIG, RevParams, SimParams)
 from .topology import ClosIndex, Topology, make_clos3, make_paper_clos
 from .routing import build_flow_routes, clos_route, route_hops
-from .fluid import FluidState, Scenario, init_state, make_step_fn
+from .fluid import (FluidState, Scenario, ScenarioDev, StepParams,
+                    delay_depth, fluid_step, init_state, make_step_fn,
+                    scenario_device, step_params)
 from .simulator import SimResult, run, run_all_schemes
+from .experiments import (ScenarioSpec, Sweep, SweepResult, config_grid,
+                          pad_scenario, stack_scenarios)
 from .scenarios import (PAPER_FLOW_NAMES, collective_flows, incast,
                         paper_incast, paper_incast_volume,
                         random_permutation)
@@ -23,7 +29,11 @@ __all__ = [
     "CCConfig", "CCScheme", "DCQCNParams", "LinkParams", "PAPER_CONFIG",
     "RevParams", "SimParams", "ClosIndex", "Topology", "make_clos3",
     "make_paper_clos", "build_flow_routes", "clos_route", "route_hops",
-    "FluidState", "Scenario", "init_state", "make_step_fn", "SimResult",
-    "run", "run_all_schemes", "PAPER_FLOW_NAMES", "collective_flows",
-    "incast", "paper_incast", "paper_incast_volume", "random_permutation",
+    "FluidState", "Scenario", "ScenarioDev", "StepParams", "delay_depth",
+    "fluid_step", "init_state", "make_step_fn", "scenario_device",
+    "step_params", "SimResult", "run", "run_all_schemes",
+    "ScenarioSpec", "Sweep", "SweepResult", "config_grid",
+    "pad_scenario", "stack_scenarios", "PAPER_FLOW_NAMES",
+    "collective_flows", "incast", "paper_incast", "paper_incast_volume",
+    "random_permutation",
 ]

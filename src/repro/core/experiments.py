@@ -1,0 +1,457 @@
+"""Declarative Experiment/Sweep API: one-jit batched CC evaluation.
+
+The paper's claims are sweep-shaped — scheme x scenario x parameter
+grids — but a python loop of ``run()`` calls re-jits and re-launches per
+point.  This module makes the sweep itself the unit of execution:
+
+  * ``ScenarioSpec``   — declarative description of a workload (topology
+    + traffic pattern + timing/volume).  ``spec.build(cfg)`` compiles it
+    to the padded ``Scenario`` tensors of the fluid model.  The legacy
+    builder functions in ``scenarios.py`` are thin wrappers over specs.
+  * ``pad_scenario`` / stacking — N scenarios are padded to a common
+    [F_max, H_max] (and link/switch counts) so they stack into one
+    batched ``ScenarioDev`` pytree.  PAD flows/links are inert by
+    construction (zero demand, infinite start time).
+  * ``Sweep``          — N (config, scenario) points executed under ONE
+    jitted vmap-of-scan: scheme ablations, Kmin/ERP-gain grids and
+    incast-degree scans are single device launches.  Traces are
+    decimated on device (``trace_every``), and the delay line is sized
+    from the batch's worst-case RTT instead of a fixed cap.
+
+Quickstart::
+
+    from repro.core import CCScheme, PAPER_CONFIG
+    from repro.core.experiments import ScenarioSpec, Sweep
+
+    sweep = Sweep.grid(
+        configs={s.name: PAPER_CONFIG.replace(scheme=s) for s in CCScheme},
+        scenarios={"hol": ScenarioSpec.paper_incast(roll=0),
+                   "disjoint": ScenarioSpec.paper_incast(roll=1)})
+    res = sweep.run()                       # ONE compile, ONE launch
+    res["DCQCN_REV/hol"].mean_throughput_while_active()
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fluid import (FluidState, Scenario, delay_depth, fluid_step,
+                    init_state, scenario_device, step_params)
+from .params import CCConfig
+from .routing import PAD, build_flow_routes, route_hops, validate_routes
+from .simulator import SimResult, _resolve_steps, decimating_scan
+from .topology import Topology, make_clos3
+
+
+# ---------------------------------------------------------------------------
+# ScenarioSpec — declarative workload description
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """Topology + traffic pattern + timing/volume, as plain data.
+
+    ``kind`` selects the traffic pattern:
+      * ``"incast"``      — ``n_senders``-to-1 into ``dst`` (+ optional
+        victim flow), the paper's §II scene when n_senders=4 on arity 4.
+      * ``"permutation"`` — seeded uniform random permutation traffic.
+      * ``"pairs"``       — explicit (src, dst) pairs.
+
+    Timing: generators open at ``t_start`` and close at ``t_stop``
+    (window mode) — or carry ``volume`` bytes each and stay open until
+    done (equal-work mode, ``t_stop = inf``), the variant behind the
+    paper's completion-time ordering.
+
+    ``build(cfg)`` compiles the spec to ``Scenario`` tensors; rates and
+    feedback delays derive from ``cfg.link`` / ``cfg.sim``.
+    """
+
+    kind: str = "incast"
+    arity: int = 4
+    roll: int = 0                 # D-mod-K digit roll (paper wirings)
+    n_senders: int = 4
+    dst: int = 16
+    victim: tuple[int, int] | None = (3, 12)
+    pairs: tuple[tuple[int, int], ...] = ()
+    n_flows: int = 16             # permutation
+    seed: int = 0
+    t_start: float = 1e-3
+    t_stop: float = 3e-3          # inf => volume (equal-work) mode
+    volume: float = float("inf")  # bytes per flow; inf = window-limited
+    nic_buffer: float = 4e6
+    gen_rate: float | None = None  # B/s; None = line rate
+    label: str = ""
+
+    # -- canned specs -------------------------------------------------------
+
+    @classmethod
+    def paper_incast(cls, roll: int = 0, **kw) -> "ScenarioSpec":
+        """The paper's §II.A scene: F0,F1,F4,F8 -> N16 plus the victim
+        F3 -> N12.  roll=0 shares the victim's wire (Fig. 3 HoL); roll=1
+        is wire-disjoint (Fig. 2's 25 GB/s aggregate)."""
+        return cls(kind="pairs",
+                   pairs=((0, 16), (1, 16), (4, 16), (8, 16), (3, 12)),
+                   roll=roll, label=kw.pop("label", f"paper-roll{roll}"),
+                   **kw)
+
+    @classmethod
+    def paper_incast_volume(cls, roll: int = 0,
+                            volume_bytes: float = 9.375e6,
+                            **kw) -> "ScenarioSpec":
+        """Equal-work variant for completion-time runs (each flow carries
+        the 9.375 MB a fair-shared incast source admits in 1->3 ms)."""
+        return cls(kind="pairs",
+                   pairs=((0, 16), (1, 16), (4, 16), (8, 16), (3, 12)),
+                   roll=roll, t_stop=float("inf"), volume=volume_bytes,
+                   nic_buffer=kw.pop("nic_buffer", 2 * volume_bytes),
+                   label=kw.pop("label", f"paper-vol-roll{roll}"), **kw)
+
+    @classmethod
+    def incast(cls, n_senders: int, dst: int = 16, *, victim: bool = True,
+               **kw) -> "ScenarioSpec":
+        return cls(kind="incast", n_senders=n_senders, dst=dst,
+                   victim=(3, 12) if victim else None,
+                   label=kw.pop("label", f"incast{n_senders}"), **kw)
+
+    @classmethod
+    def permutation(cls, n_flows: int, seed: int = 0, **kw) -> "ScenarioSpec":
+        kw.setdefault("t_start", 0.1e-3)
+        kw.setdefault("t_stop", 2e-3)
+        return cls(kind="permutation", n_flows=n_flows, seed=seed,
+                   label=kw.pop("label", f"perm{n_flows}"), **kw)
+
+    @classmethod
+    def flows(cls, pairs: Sequence[tuple[int, int]], **kw) -> "ScenarioSpec":
+        return cls(kind="pairs", pairs=tuple(tuple(p) for p in pairs),
+                   label=kw.pop("label", f"pairs{len(pairs)}"), **kw)
+
+    # -- compilation to tensors --------------------------------------------
+
+    @property
+    def name(self) -> str:
+        return self.label or self.kind
+
+    def _topology(self, cfg: CCConfig) -> Topology:
+        return make_clos3(arity=self.arity, line_rate=cfg.link.line_rate)
+
+    def _pairs(self, topo: Topology) -> list[tuple[int, int]]:
+        if self.kind == "pairs":
+            return [tuple(p) for p in self.pairs]
+        if self.kind == "incast":
+            senders = [n for n in range(topo.n_nodes) if n != self.dst]
+            out = [(s, self.dst) for s in senders[: self.n_senders]]
+            if self.victim is not None:
+                out.append(tuple(self.victim))
+            return out
+        if self.kind == "permutation":
+            rng = np.random.RandomState(self.seed)
+            n = topo.n_nodes
+            perm = rng.permutation(n)
+            srcs = rng.choice(n, size=self.n_flows,
+                              replace=self.n_flows > n)
+            out = []
+            for s in srcs:
+                d = int(perm[s % n])
+                if d == s:
+                    d = (d + 1) % n
+                out.append((int(s), d))
+            return out
+        raise ValueError(f"unknown ScenarioSpec kind: {self.kind!r}")
+
+    def build(self, cfg: CCConfig) -> Scenario:
+        topo = self._topology(cfg)
+        pairs = self._pairs(topo)
+        routes = build_flow_routes(topo, pairs, arity=self.arity,
+                                   roll=self.roll)
+        validate_routes(topo, routes)
+        F = len(pairs)
+        hops = route_hops(routes)
+        # CNP feedback delay ~ 2 * hops * (prop + serialisation) + NIC
+        # turnaround; quantised to dt steps, >= 2 so the loop is never
+        # same-step.
+        per_hop = cfg.link.propagation_delay + cfg.link.mtu / cfg.link.line_rate
+        rtt = 2 * hops * per_hop + 1e-6
+        rtt_steps = np.maximum(2, np.round(rtt / cfg.sim.dt)).astype(np.int32)
+        rate = cfg.link.line_rate if self.gen_rate is None else self.gen_rate
+        return Scenario(
+            routes=routes,
+            hops=hops,
+            gen_rate=np.full((F,), rate, np.float32),
+            t_start=np.full((F,), self.t_start, np.float32),
+            t_stop=np.full((F,), self.t_stop, np.float32),
+            volume=np.full((F,), self.volume, np.float32),
+            capacity=topo.link_capacity.astype(np.float32),
+            sink_switch=topo.sink_switch(),
+            n_switches=topo.n_switches,
+            rtt_steps=rtt_steps,
+            nic_buffer=self.nic_buffer,
+        )
+
+
+# ---------------------------------------------------------------------------
+# padding + stacking
+# ---------------------------------------------------------------------------
+
+
+def pad_scenario(scn: Scenario, n_flows: int, n_hops: int,
+                 n_links: int) -> Scenario:
+    """Grow a scenario to [n_flows, n_hops] flows and n_links links.
+
+    PAD flows never generate (t_start = inf, zero rate/volume) and cross
+    no links; PAD links carry no flow and a nominal capacity — both are
+    inert in every scatter/reduce of the step, so padding cannot change
+    delivered bytes (property-tested in test_experiments).
+    """
+    F, H = scn.routes.shape
+    L = scn.capacity.shape[0]
+    if n_flows < F or n_hops < H or n_links < L:
+        raise ValueError(f"pad target ({n_flows},{n_hops},{n_links}) "
+                         f"smaller than scenario ({F},{H},{L})")
+
+    def pad_f(x, fill):
+        return np.concatenate(
+            [x, np.full((n_flows - F,) + x.shape[1:], fill, x.dtype)])
+
+    routes = np.full((n_flows, n_hops), PAD, np.int32)
+    routes[:F, :H] = scn.routes
+    return Scenario(
+        routes=routes,
+        hops=pad_f(scn.hops, 0),
+        gen_rate=pad_f(scn.gen_rate, 0.0),
+        t_start=pad_f(scn.t_start, np.inf),
+        t_stop=pad_f(scn.t_stop, np.inf),
+        volume=pad_f(scn.volume, 0.0),
+        capacity=np.concatenate(
+            [scn.capacity, np.full((n_links - L,), 1.0, np.float32)]),
+        sink_switch=np.concatenate(
+            [scn.sink_switch, np.full((n_links - L,), -1, np.int32)]),
+        n_switches=scn.n_switches,
+        rtt_steps=pad_f(scn.rtt_steps, 2),
+        nic_buffer=scn.nic_buffer,
+    )
+
+
+def stack_scenarios(scns: Sequence[Scenario]):
+    """Pad to common shape and stack into one batched ScenarioDev.
+
+    Returns (batched ScenarioDev with leading run axis, padded host
+    scenarios, n_switches_max).
+    """
+    F = max(s.routes.shape[0] for s in scns)
+    H = max(s.routes.shape[1] for s in scns)
+    L = max(s.capacity.shape[0] for s in scns)
+    n_sw = max(s.n_switches for s in scns)
+    padded = [pad_scenario(s, F, H, L) for s in scns]
+    devs = [scenario_device(s) for s in padded]
+    batched = jax.tree.map(lambda *xs: jnp.stack(xs), *devs)
+    return batched, padded, n_sw
+
+
+# ---------------------------------------------------------------------------
+# Sweep — N points, one jitted vmap-of-scan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    name: str
+    cfg: CCConfig
+    scenario: Scenario            # built tensors (specs compile on add)
+
+
+def _replace_path(cfg: CCConfig, path: str, value) -> CCConfig:
+    """dataclasses.replace through dotted paths, e.g. "dcqcn.kmin"."""
+    head, _, rest = path.partition(".")
+    if not rest:
+        return dataclasses.replace(cfg, **{head: value})
+    sub = getattr(cfg, head)
+    return dataclasses.replace(
+        cfg, **{head: _replace_path(sub, rest, value)})
+
+
+def config_grid(cfg: CCConfig, **axes) -> dict[str, CCConfig]:
+    """{"kmin=8192": cfg', ...} over the product of dotted-path axes.
+
+    ``config_grid(cfg, **{"dcqcn.kmin": [8e3, 15e3], "rev.erp_rai": [...]})``
+    """
+    out = {"": cfg}
+    for path, values in axes.items():
+        leaf = path.rsplit(".", 1)[-1]
+        nxt = {}
+        for name, c in out.items():
+            for v in values:
+                key = f"{leaf}={v:g}" if isinstance(v, (int, float)) else \
+                    f"{leaf}={v}"
+                nxt[f"{name}/{key}" if name else key] = \
+                    _replace_path(c, path, v)
+        out = nxt
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4, 5, 6))
+def _sweep_scan(st_b, sd_b, par_b, n_samples: int, trace_every: int,
+                dt: float, n_switches: int):
+    """The whole sweep: one vmap-of-(decimating)-scan, jitted once per
+    batch shape.  Re-running a same-shaped sweep reuses the executable."""
+
+    def step(st):
+        return jax.vmap(
+            lambda s, sd, par: fluid_step(s, sd, par, dt=dt,
+                                          n_switches=n_switches)
+        )(st, sd_b, par_b)
+
+    return decimating_scan(step, st_b, n_samples, trace_every, dt)
+
+
+class Sweep:
+    """A batch of (config, scenario) points run as one device launch.
+
+    Points come in as ``(name, cfg, scenario-or-spec)`` triples; specs
+    are compiled against their point's config.  All points must agree on
+    ``sim.dt`` and ``sim.trace_every`` (they share the scan); shapes are
+    padded to the batch maximum.
+    """
+
+    def __init__(self, points: Sequence[tuple[str, CCConfig,
+                                              "ScenarioSpec | Scenario"]]):
+        if not points:
+            raise ValueError("empty sweep")
+        self.points: list[SweepPoint] = []
+        names = set()
+        for name, cfg, scn in points:
+            if name in names:
+                raise ValueError(f"duplicate sweep point name: {name!r}")
+            names.add(name)
+            if isinstance(scn, ScenarioSpec):
+                scn = scn.build(cfg)
+            self.points.append(SweepPoint(name, cfg, scn))
+        dts = {p.cfg.sim.dt for p in self.points}
+        kps = {p.cfg.sim.trace_every for p in self.points}
+        if len(dts) > 1 or len(kps) > 1:
+            raise ValueError(
+                f"sweep points disagree on sim.dt ({dts}) or "
+                f"trace_every ({kps}); they share one scan")
+
+    @classmethod
+    def grid(cls, configs, scenarios) -> "Sweep":
+        """Cross named configs with named scenarios/specs.
+
+        ``configs``: dict[str, CCConfig] (or one CCConfig);
+        ``scenarios``: dict[str, ScenarioSpec | Scenario] (or one).
+        Point names are "cfg/scenario" (or the sole non-dict's name).
+        """
+        if isinstance(configs, CCConfig):
+            configs = {"": configs}
+        if isinstance(scenarios, (ScenarioSpec, Scenario)):
+            scenarios = {getattr(scenarios, "name", "scenario"): scenarios}
+        points = []
+        for cn, cfg in configs.items():
+            for sn, scn in scenarios.items():
+                name = f"{cn}/{sn}" if cn and sn else (cn or sn)
+                points.append((name, cfg, scn))
+        return cls(points)
+
+    def run(self, n_steps: int | None = None,
+            trace_every: int | None = None) -> "SweepResult":
+        cfg0 = self.points[0].cfg
+        n_samples, k = _resolve_steps(cfg0, n_steps, trace_every)
+        scns = [p.scenario for p in self.points]
+        sd_b, padded, n_sw = stack_scenarios(scns)
+        D = max(delay_depth(s) for s in padded)
+        st_b = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[init_state(s, p.cfg, delay_slots=D)
+              for s, p in zip(padded, self.points)])
+        par_b = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[step_params(p.cfg) for p in self.points])
+        final, tr = _sweep_scan(st_b, sd_b, par_b, n_samples, k,
+                                float(cfg0.sim.dt), n_sw)
+        times = (np.arange(n_samples) + 1) * k * cfg0.sim.dt
+        # scan stacks samples on axis 0 -> [T, R, ...]; runs lead on host
+        return SweepResult(
+            points=self.points, times=times,
+            traces=jax.tree.map(
+                lambda x: np.moveaxis(np.asarray(x), 0, 1), tr),
+            final=jax.device_get(final), trace_every=k)
+
+
+def _slice_final(fin: FluidState, r: int, F: int) -> FluidState:
+    """Run r's final state, trimmed back to its true flow count."""
+    flow = lambda x: x[r, :F]
+    return FluidState(
+        qh=flow(fin.qh), nicq=flow(fin.nicq), delivered=flow(fin.delivered),
+        offered=flow(fin.offered), dropped=flow(fin.dropped),
+        est=flow(fin.est), paused=fin.paused[r], rate=flow(fin.rate),
+        rp_target=flow(fin.rp_target), alpha=flow(fin.alpha),
+        byte_cnt=flow(fin.byte_cnt), tmr=flow(fin.tmr),
+        alpha_tmr=flow(fin.alpha_tmr), bc_stage=flow(fin.bc_stage),
+        t_stage=flow(fin.t_stage), hold=flow(fin.hold),
+        np_tmr=flow(fin.np_tmr), trig_buf=fin.trig_buf[r][:, :F],
+        tgt_buf=fin.tgt_buf[r][:, :F], t=fin.t[r])
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """All runs' decimated traces, indexable by point name (or index)
+    into per-point ``SimResult`` views trimmed to their true flows."""
+
+    points: list[SweepPoint]
+    times: np.ndarray              # [T] window-end seconds
+    traces: object                 # TraceSample of [R, T, ...] numpy
+    final: object                  # FluidState with leading [R]
+    trace_every: int
+
+    @property
+    def names(self) -> list[str]:
+        return [p.name for p in self.points]
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.names
+
+    def __getitem__(self, key: "str | int") -> SimResult:
+        if isinstance(key, int):
+            r = key
+        elif key in self.names:
+            r = self.names.index(key)
+        else:
+            raise KeyError(f"{key!r} not in sweep; points: {self.names}")
+        p = self.points[r]
+        F = p.scenario.routes.shape[0]
+        tr = self.traces
+        return SimResult(
+            cfg=p.cfg, scn=p.scenario, times=self.times,
+            delivered=tr.delivered[r][:, :F],
+            rate=tr.rate[r][:, :F],
+            inst_thr=tr.inst_thr[r][:, :F],
+            max_q=tr.max_q[r], n_paused=tr.n_paused[r],
+            marked=tr.marked[r][:, :F], cnp=tr.cnp[r][:, :F],
+            final=_slice_final(self.final, r, F),
+            trace_every=self.trace_every)
+
+    def items(self):
+        for i, p in enumerate(self.points):
+            yield p.name, self[i]
+
+    def summary(self) -> dict[str, dict]:
+        """Headline numbers per point (the Fig. 2/3 table in one dict)."""
+        out = {}
+        for name, res in self.items():
+            thr = res.mean_throughput_while_active()
+            out[name] = {
+                "aggregate_gbps": float(thr.sum() / 1e9),
+                "min_flow_gbps": float(thr.min() / 1e9),
+                "completion_ms": float(res.completion_time() * 1e3),
+                "peak_queue_kb": float(res.max_q.max() / 1e3),
+            }
+        return out

@@ -28,6 +28,20 @@ Per step (Jacobi, from pre-step state):
      fair share, hold, desynchronised additive recovery).
 
 All arrays are float32; the update is pure jnp and runs inside lax.scan.
+
+Layering (the Sweep engine in ``experiments.py`` builds on this):
+  * ``Scenario``        — host-side numpy tensors describing one workload.
+  * ``ScenarioDev``     — the same tensors as device arrays, the exact
+                          pytree ``fluid_step`` consumes.  Batched sweeps
+                          stack R of these and ``vmap`` over the leading
+                          axis.
+  * ``StepParams``      — every CCConfig scalar the update reads, as
+                          traced values (NOT python statics), so one
+                          compiled step serves all schemes / param grids.
+  * ``fluid_step``      — the pure per-``dt`` update.  Scheme selection
+                          (``mark_ecp`` / ``react_code``) happens with
+                          ``jnp.where`` on traced selectors, which is what
+                          lets a scheme ablation ride one jit.
 """
 
 from __future__ import annotations
@@ -56,6 +70,63 @@ class Scenario(NamedTuple):
     n_switches: int
     rtt_steps: np.ndarray     # [F] int32 CNP feedback delay in dt steps
     nic_buffer: float = 4e6   # B of host NIC queue
+
+
+class ScenarioDev(NamedTuple):
+    """Device-side scenario: the pytree ``fluid_step`` consumes.
+
+    A batched sweep stacks R of these along a new leading axis and vmaps;
+    every field is data, so runs with different routes / rates / RTTs
+    share one compiled step.
+    """
+
+    routes: jnp.ndarray       # [F, H] int32
+    hops: jnp.ndarray         # [F] int32
+    gen_rate: jnp.ndarray     # [F] f32
+    t_start: jnp.ndarray      # [F] f32
+    t_stop: jnp.ndarray       # [F] f32
+    volume: jnp.ndarray       # [F] f32
+    cap_ext: jnp.ndarray      # [L+1] f32 (scratch slot L for PAD scatters)
+    sink_ext: jnp.ndarray     # [L+1] int32
+    rtt: jnp.ndarray          # [F] int32
+    nic_buffer: jnp.ndarray   # [] f32
+
+
+class StepParams(NamedTuple):
+    """Per-run CC constants as traced scalars (stack + vmap for sweeps).
+
+    ``mark_ecp`` / ``react_code`` select the paper's mechanisms with
+    ``jnp.where`` instead of python branches: 0 = PFC fixed-rate source,
+    1 = DCQCN RP, 2 = ERP.
+    """
+
+    mark_ecp: jnp.ndarray     # [] bool   — ECP (vs CP) marking
+    react_code: jnp.ndarray   # [] int32  — 0 pfc / 1 rp / 2 erp
+    line_rate: jnp.ndarray    # [] f32
+    xoff: jnp.ndarray         # [] f32
+    xon: jnp.ndarray          # [] f32
+    pool_xoff: jnp.ndarray    # [] f32
+    port_buffer: jnp.ndarray  # [] f32
+    v_thresh: jnp.ndarray     # [] f32  — Kmin (CP) or detect threshold (ECP)
+    window: jnp.ndarray       # [] f32  — NP suppression / ENP coalescing
+    # DCQCN RP
+    g: jnp.ndarray
+    rdf: jnp.ndarray          # rate decrease factor
+    timer_T: jnp.ndarray
+    byte_B: jnp.ndarray
+    rai: jnp.ndarray
+    rhai: jnp.ndarray
+    fr_stages: jnp.ndarray    # [] int32
+    rp_min_rate: jnp.ndarray
+    # DCQCN-Rev ECP/ERP
+    ecp_slack: jnp.ndarray
+    ecp_beta: jnp.ndarray     # arrival-rate EWMA gain
+    erp_settle: jnp.ndarray
+    erp_rai: jnp.ndarray
+    erp_jitter: jnp.ndarray
+    erp_hold: jnp.ndarray
+    erp_drain_gain: jnp.ndarray
+    erp_min_rate: jnp.ndarray
 
 
 class FluidState(NamedTuple):
@@ -92,7 +163,29 @@ class StepTrace(NamedTuple):
     cnp: jnp.ndarray          # [F] CNP received this step?
 
 
-DELAY_SLOTS = 32              # max CNP feedback delay in steps
+DELAY_SLOTS = 32              # legacy fixed delay-line depth (see below)
+
+
+def delay_depth(scn: Scenario) -> int:
+    """Delay-line depth covering every flow's CNP feedback delay.
+
+    The legacy code used a hard ``DELAY_SLOTS = 32`` ring and silently
+    wrapped ``rtt_steps % 32``, corrupting the control loop of any path
+    with >= 32 steps of feedback delay.  The depth is now derived from
+    the scenario; ``DELAY_SLOTS`` survives only as an explicit opt-in
+    (and raises instead of wrapping).
+    """
+    return max(2, int(np.max(scn.rtt_steps)) + 1)
+
+
+def _check_delay(scn: Scenario, delay_slots: int) -> int:
+    max_rtt = int(np.max(scn.rtt_steps))
+    if max_rtt >= delay_slots:
+        raise ValueError(
+            f"rtt_steps up to {max_rtt} overflow the {delay_slots}-slot "
+            f"delay line; pass delay_slots >= {max_rtt + 1} (or None to "
+            f"size it from the scenario)")
+    return delay_slots
 
 
 def _flow_jitter(n: int) -> np.ndarray:
@@ -101,9 +194,61 @@ def _flow_jitter(n: int) -> np.ndarray:
     return (x.astype(np.float64) / 2**31 - 1.0).astype(np.float32)
 
 
-def init_state(scn: Scenario, cfg: CCConfig) -> FluidState:
+def scenario_device(scn: Scenario) -> ScenarioDev:
+    """Move one scenario's tensors to device-ready arrays."""
+    return ScenarioDev(
+        routes=jnp.asarray(scn.routes, jnp.int32),
+        hops=jnp.asarray(scn.hops, jnp.int32),
+        gen_rate=jnp.asarray(scn.gen_rate, jnp.float32),
+        t_start=jnp.asarray(scn.t_start, jnp.float32),
+        t_stop=jnp.asarray(scn.t_stop, jnp.float32),
+        volume=jnp.asarray(scn.volume, jnp.float32),
+        cap_ext=jnp.asarray(
+            np.concatenate([scn.capacity, [np.inf]]), jnp.float32),
+        sink_ext=jnp.asarray(
+            np.concatenate([scn.sink_switch, [-1]]), jnp.int32),
+        rtt=jnp.asarray(scn.rtt_steps, jnp.int32),
+        nic_buffer=jnp.asarray(scn.nic_buffer, jnp.float32),
+    )
+
+
+def step_params(cfg: CCConfig) -> StepParams:
+    """Flatten a CCConfig into the traced scalars ``fluid_step`` reads."""
+    p, r, lk = cfg.dcqcn, cfg.rev, cfg.link
+    marking_kind = cfg.marking_kind
+    reaction_kind = cfg.reaction_kind
+    if cfg.scheme == CCScheme.PFC_ONLY:
+        react_code = 0
+    else:
+        react_code = 1 if reaction_kind == "rp" else 2
+    f32 = lambda v: jnp.asarray(v, jnp.float32)
+    return StepParams(
+        mark_ecp=jnp.asarray(marking_kind == "ecp"),
+        react_code=jnp.asarray(react_code, jnp.int32),
+        line_rate=f32(lk.line_rate),
+        xoff=f32(lk.port_buffer * lk.pfc_xoff_frac),
+        xon=f32(lk.port_buffer * lk.pfc_xon_frac),
+        pool_xoff=f32(lk.shared_buffer * lk.pfc_xoff_frac),
+        port_buffer=f32(lk.port_buffer),
+        v_thresh=f32(p.kmin if marking_kind == "cp" else r.detect_threshold),
+        window=f32(p.cnp_window if reaction_kind == "rp" else r.enp_coalesce),
+        g=f32(p.g), rdf=f32(p.rate_decrease_factor), timer_T=f32(p.timer_T),
+        byte_B=f32(p.byte_counter_B), rai=f32(p.rai), rhai=f32(p.rhai),
+        fr_stages=jnp.asarray(p.fr_stages, jnp.int32),
+        rp_min_rate=f32(p.min_rate),
+        ecp_slack=f32(r.ecp_fairness_slack), ecp_beta=f32(r.ecp_rate_ewma),
+        erp_settle=f32(r.erp_settle), erp_rai=f32(r.erp_rai),
+        erp_jitter=f32(r.erp_jitter), erp_hold=f32(r.erp_hold),
+        erp_drain_gain=f32(r.erp_drain_gain), erp_min_rate=f32(r.min_rate),
+    )
+
+
+def init_state(scn: Scenario, cfg: CCConfig,
+               delay_slots: int | None = None) -> FluidState:
     F, H = scn.routes.shape
     L = scn.capacity.shape[0]
+    D = delay_depth(scn) if delay_slots is None \
+        else _check_delay(scn, delay_slots)
     line = jnp.asarray(np.minimum(scn.gen_rate, cfg.link.line_rate),
                        jnp.float32)
     z_f = jnp.zeros((F,), jnp.float32)
@@ -119,259 +264,254 @@ def init_state(scn: Scenario, cfg: CCConfig) -> FluidState:
         bc_stage=jnp.zeros((F,), jnp.int32),
         t_stage=jnp.zeros((F,), jnp.int32),
         hold=z_f, np_tmr=jnp.full((F,), 1.0, jnp.float32),
-        trig_buf=jnp.zeros((DELAY_SLOTS, F), jnp.float32),
-        tgt_buf=jnp.zeros((DELAY_SLOTS, F), jnp.float32),
+        trig_buf=jnp.zeros((D, F), jnp.float32),
+        tgt_buf=jnp.zeros((D, F), jnp.float32),
         t=jnp.zeros((), jnp.int32),
     )
 
 
-def make_step_fn(scn: Scenario, cfg: CCConfig):
-    """Returns step(state) -> (state, StepTrace). Pure; closes over statics."""
-    scheme = cfg.scheme
-    dt = jnp.float32(cfg.sim.dt)
-    F, H = scn.routes.shape
-    L = int(scn.capacity.shape[0])
+def _react_rp(st: FluidState, par: StepParams, cnp, dt):
+    """DCQCN RP: alpha EWMA + staged byte/timer recovery machine."""
+    g = par.g
+    alpha_tmr = st.alpha_tmr + dt
+    a_tick = alpha_tmr >= par.timer_T
+    alpha = jnp.where(a_tick, (1 - g) * st.alpha, st.alpha)
+    alpha_tmr = jnp.where(a_tick, 0.0, alpha_tmr)
+    rp_target = jnp.where(cnp, st.rate, st.rp_target)
+    rate = jnp.where(cnp, st.rate * (1 - alpha * par.rdf), st.rate)
+    alpha = jnp.where(cnp, (1 - g) * alpha + g, alpha)
+    byte_cnt = jnp.where(cnp, 0.0, st.byte_cnt + st.rate * dt)
+    tmr = jnp.where(cnp, 0.0, st.tmr + dt)
+    alpha_tmr = jnp.where(cnp, 0.0, alpha_tmr)
+    bc_stage = jnp.where(cnp, 0, st.bc_stage)
+    t_stage = jnp.where(cnp, 0, st.t_stage)
+    b_ev = byte_cnt >= par.byte_B
+    t_ev = tmr >= par.timer_T
+    byte_cnt = jnp.where(b_ev, 0.0, byte_cnt)
+    tmr = jnp.where(t_ev, 0.0, tmr)
+    bc_stage = bc_stage + b_ev.astype(jnp.int32)
+    t_stage = t_stage + t_ev.astype(jnp.int32)
+    ev = b_ev | t_ev
+    imax = jnp.maximum(bc_stage, t_stage)
+    imin = jnp.minimum(bc_stage, t_stage)
+    in_fr = imax <= par.fr_stages
+    in_hyper = imin > par.fr_stages
+    rp_target = jnp.where(ev & ~in_fr & ~in_hyper, rp_target + par.rai,
+                          rp_target)
+    rp_target = jnp.where(
+        ev & in_hyper,
+        rp_target + par.rhai * (imin - par.fr_stages).astype(jnp.float32),
+        rp_target)
+    rate = jnp.where(ev, 0.5 * (rate + rp_target), rate)
+    rate = jnp.clip(rate, par.rp_min_rate, par.line_rate)
+    rp_target = jnp.clip(rp_target, par.rp_min_rate, par.line_rate)
+    return rate, rp_target, alpha, byte_cnt, tmr, alpha_tmr, bc_stage, t_stage
 
-    routes = jnp.asarray(scn.routes, jnp.int32)
-    valid = routes != PAD
-    # safe indices: PAD -> L (extra scratch slot in scatter targets)
-    widx = jnp.where(valid, routes, L)
-    hops = jnp.asarray(scn.hops, jnp.int32)
+
+def _react_erp(st: FluidState, par: StepParams, cnp, tgt_rx, erp_slope, dt):
+    """ERP: settle to signalled fair share, hold, additive recovery."""
+    rate = jnp.where(
+        cnp, jnp.maximum(par.erp_settle * tgt_rx, par.erp_min_rate), st.rate)
+    hold = jnp.where(cnp, par.erp_hold, jnp.maximum(st.hold - dt, 0.0))
+    rate = jnp.where(~cnp & (hold <= 0), rate + erp_slope * dt, rate)
+    rate = jnp.clip(rate, par.erp_min_rate, par.line_rate)
+    return rate, hold
+
+
+def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
+               dt: float, n_switches: int):
+    """One ``dt`` update: (state, scenario, params) -> (state, trace).
+
+    Pure in all array arguments; ``dt`` / ``n_switches`` are static.
+    ``sd`` and ``par`` are data, so a sweep vmaps this over a leading run
+    axis with a single compilation.
+    """
+    F, H = sd.routes.shape
+    L = sd.cap_ext.shape[0] - 1
+    D = st.trig_buf.shape[0]
+    dt = jnp.float32(dt)
+
+    valid = sd.routes != PAD
+    widx = jnp.where(valid, sd.routes, L)      # PAD -> scratch slot L
     arange_h = jnp.arange(H, dtype=jnp.int32)[None, :]
-    is_last = valid & (arange_h == (hops[:, None] - 1))
-    holds_queue = valid & (arange_h < (hops[:, None] - 1))   # qh slots in use
-
-    cap = jnp.asarray(np.concatenate([scn.capacity, [np.inf]]), jnp.float32)
-    sink_sw = jnp.asarray(np.concatenate([scn.sink_switch, [-1]]), jnp.int32)
-    n_sw = int(scn.n_switches)
-
-    gen_rate = jnp.asarray(scn.gen_rate, jnp.float32)
-    t_start = jnp.asarray(scn.t_start, jnp.float32)
-    t_stop = jnp.asarray(scn.t_stop, jnp.float32)
-    volume = jnp.asarray(scn.volume, jnp.float32)
-    line_rate = jnp.float32(cfg.link.line_rate)
-    nic_buf = jnp.float32(scn.nic_buffer)
-    rtt = jnp.asarray(scn.rtt_steps % DELAY_SLOTS, jnp.int32)
+    is_last = valid & (arange_h == (sd.hops[:, None] - 1))
+    holds_queue = valid & (arange_h < (sd.hops[:, None] - 1))
     fidx = jnp.arange(F, dtype=jnp.int32)
-
-    xoff = jnp.float32(cfg.link.port_buffer * cfg.link.pfc_xoff_frac)
-    xon = jnp.float32(cfg.link.port_buffer * cfg.link.pfc_xon_frac)
-    pool_xoff = jnp.float32(cfg.link.shared_buffer * cfg.link.pfc_xoff_frac)
-    marking_kind = cfg.marking_kind
-    reaction_kind = cfg.reaction_kind
-    v_thresh = jnp.float32(cfg.dcqcn.kmin if marking_kind == "cp"
-                           else cfg.rev.detect_threshold)
-
-    p = cfg.dcqcn
-    r = cfg.rev
-    jitter = jnp.asarray(1.0 + r.erp_jitter * _flow_jitter(F), jnp.float32)
-    erp_slope = jnp.float32(r.erp_rai) * jitter
-    eps_rate = jnp.float32(1e6)      # B/s: "active" demand threshold
+    jitter = jnp.asarray(_flow_jitter(F))
+    erp_slope = par.erp_rai * (1.0 + par.erp_jitter * jitter)
+    eps_rate = jnp.float32(1e6)                # B/s: "active" demand
 
     def scat(values_fh, init=0.0):
         """Scatter-add a [F,H] quantity onto per-link slots [L+1]."""
         out = jnp.full((L + 1,), init, jnp.float32)
         return out.at[widx].add(values_fh)
 
+    t_sec = st.t.astype(jnp.float32) * dt
+
+    # ---- 1. generation ----------------------------------------------------
+    active = (t_sec >= sd.t_start) & (t_sec < sd.t_stop)
+    gen = jnp.where(active, sd.gen_rate, 0.0) * dt
+    gen = jnp.minimum(gen, jnp.maximum(sd.volume - st.offered, 0.0))
+    nicq = st.nicq + gen
+    over = jnp.maximum(nicq - sd.nic_buffer, 0.0)
+    nicq = nicq - over
+    offered = st.offered + gen - over
+    dropped = st.dropped + over
+
+    # ---- 2. transfers -----------------------------------------------------
+    src_inj = jnp.minimum(nicq, jnp.minimum(st.rate, par.line_rate) * dt)
+    src_q = jnp.concatenate([src_inj[:, None], st.qh[:, :-1]], axis=1)
+    src_q = jnp.where(valid, src_q, 0.0)
+
+    pause_l = jnp.concatenate([st.paused, jnp.zeros((1,), bool)])
+    wire_open = ~pause_l[widx]                         # [F,H]
+
+    # strict-FIFO HoL factor per link queue: share of the queue whose
+    # *next* wire is currently drainable.
+    next_open = jnp.concatenate(
+        [wire_open[:, 1:], jnp.ones((F, 1), bool)], axis=1)
+    q_here = jnp.where(holds_queue, st.qh, 0.0)        # queue at sink(h)
+    num = scat(q_here * next_open)
+    den = scat(q_here)
+    fifo_ok = jnp.where(den > 0, num / jnp.maximum(den, 1e-9), 1.0)
+
+    weight = jnp.where(wire_open, src_q, 0.0)
+    sum_w = scat(weight)
+    budget = sd.cap_ext[widx] * dt * fifo_ok[widx]
+    share = jnp.where(sum_w[widx] > 0,
+                      budget * weight / jnp.maximum(sum_w[widx], 1e-9),
+                      0.0)
+    T = jnp.minimum(weight, share)                     # bytes crossing h
+
+    nicq = nicq - T[:, 0]
+    qh = st.qh - jnp.pad(T[:, 1:], ((0, 0), (0, 1)))   # drain from h-1
+    qh = qh + jnp.where(holds_queue, T, 0.0)           # land at sink(h)
+    qh = jnp.maximum(qh, 0.0)
+    deliv_step = jnp.sum(jnp.where(is_last, T, 0.0), axis=1)
+    delivered = st.delivered + deliv_step
+
+    # crossing-rate EWMA (doubles as arrival-into-queue estimate)
+    est = (1 - par.ecp_beta) * st.est + par.ecp_beta * (T / dt)
+
+    # ---- 3. PFC -----------------------------------------------------------
+    B = scat(jnp.where(holds_queue, qh, 0.0))[:L]      # [L] sink queues
+    paused = jnp.where(B > par.xoff, True,
+                       jnp.where(B < par.xon, False, st.paused))
+    sink_l = sd.sink_ext[:L]
+    pool = jnp.zeros((n_switches,), jnp.float32).at[
+        jnp.maximum(sink_l, 0)].add(jnp.where(sink_l >= 0, B, 0.0))
+    pool_hot = pool > par.pool_xoff
+    paused = paused | jnp.where(sink_l >= 0,
+                                pool_hot[jnp.maximum(sink_l, 0)], False)
+
+    # ---- 4. marking -------------------------------------------------------
+    B1 = jnp.concatenate([B, jnp.zeros((1,), jnp.float32)])
+    q_over = B1[widx] > par.v_thresh                   # [F,H] queue hot?
+    present = (qh > 0) | (T > 0)
+
+    # Demand to cross wire h = arrival rate into the queue feeding it
+    # (pre-stall, so FIFO-blocked victims keep their true demand).
+    dem = jnp.concatenate([est[:, :1], est[:, :-1]], axis=1)
+    dem = jnp.where(valid, dem, 0.0)
+    act = (dem > eps_rate) & valid
+    n_act = scat(act.astype(jnp.float32), init=0.0)
+    caps_w = sd.cap_ext[widx]
+    sum_dem = scat(jnp.where(act, dem, 0.0))
+    share0 = caps_w / jnp.maximum(n_act[widx], 1.0)
+    under = dem < share0
+    surplus = scat(jnp.where(act & under, share0 - dem, 0.0))
+    n_heavy = scat((act & ~under).astype(jnp.float32))
+    grant = jnp.where(
+        under, dem,
+        share0 + surplus[widx] / jnp.maximum(n_heavy[widx], 1.0))
+    grant = jnp.where(act, grant, caps_w)
+    oversub = sum_dem[widx] > caps_w          # wire h oversubscribed?
+    # ... all shifted to the *next* wire (the flow's requested output)
+    inf_col = jnp.full((F, 1), jnp.inf, jnp.float32)
+    grant_next = jnp.concatenate([grant[:, 1:], inf_col], axis=1)
+    grant_next = jnp.where(holds_queue, grant_next, jnp.inf)
+    dem_next = jnp.concatenate([dem[:, 1:], inf_col * 0], axis=1)
+    over_next = jnp.concatenate(
+        [oversub[:, 1:], jnp.zeros((F, 1), bool)], axis=1)
+
+    # CP: occupancy only.  ECP: queue over threshold AND the flow's
+    # requested output is oversubscribed AND its own demand exceeds its
+    # fair grant there.  Both are cheap; the selector is traced data.
+    congesting = over_next & (dem_next > par.ecp_slack * grant_next)
+    mark_base = q_over & present & holds_queue
+    mark_fh = mark_base & jnp.where(par.mark_ecp, congesting, True)
+    marked = jnp.any(mark_fh, axis=1)
+    # severity payload: fair grant at the marking queue, scaled down by
+    # the queue's excess over V so standing backlog drains (ENP carries
+    # "timely congestion severity", ERP converges to fair as B -> V).
+    qexc = jnp.clip((B1[widx] - par.v_thresh) / par.port_buffer, 0.0, 1.0)
+    sev = grant_next * (1.0 - par.erp_drain_gain * qexc)
+    tgt = jnp.min(jnp.where(mark_fh, sev, jnp.inf), axis=1)
+    tgt = jnp.where(jnp.isfinite(tgt), tgt, par.line_rate)
+
+    # ---- 5. notification (NP / ENP) --------------------------------------
+    np_tmr = st.np_tmr + dt
+    emit = marked & (np_tmr >= par.window)
+    np_tmr = jnp.where(emit, 0.0, np_tmr)
+    # delay line sized >= max(rtt)+1 (see delay_depth), so the modulo is a
+    # ring-buffer index, never an aliased (shortened) feedback delay.
+    wslot = (st.t + sd.rtt) % D
+    trig_buf = st.trig_buf.at[wslot, fidx].add(emit.astype(jnp.float32))
+    tgt_buf = st.tgt_buf.at[wslot, fidx].set(
+        jnp.where(emit, tgt, st.tgt_buf[wslot, fidx]))
+    rslot = st.t % D
+    cnp = trig_buf[rslot] > 0
+    tgt_rx = tgt_buf[rslot]
+    trig_buf = trig_buf.at[rslot].set(0.0)
+
+    # ---- 6. reaction (PFC source / RP / ERP), branchless ------------------
+    (rate_rp, rp_target_rp, alpha_rp, byte_cnt_rp, tmr_rp, alpha_tmr_rp,
+     bc_stage_rp, t_stage_rp) = _react_rp(st, par, cnp, dt)
+    rate_erp, hold_erp = _react_erp(st, par, cnp, tgt_rx, erp_slope, dt)
+    rate_pfc = jnp.minimum(sd.gen_rate, par.line_rate)
+
+    is_rp = par.react_code == 1
+    is_erp = par.react_code == 2
+    rate = jnp.where(is_rp, rate_rp, jnp.where(is_erp, rate_erp, rate_pfc))
+    rp_target = jnp.where(is_rp, rp_target_rp, st.rp_target)
+    alpha = jnp.where(is_rp, alpha_rp, st.alpha)
+    byte_cnt = jnp.where(is_rp, byte_cnt_rp, st.byte_cnt)
+    tmr = jnp.where(is_rp, tmr_rp, st.tmr)
+    alpha_tmr = jnp.where(is_rp, alpha_tmr_rp, st.alpha_tmr)
+    bc_stage = jnp.where(is_rp, bc_stage_rp, st.bc_stage)
+    t_stage = jnp.where(is_rp, t_stage_rp, st.t_stage)
+    hold = jnp.where(is_erp, hold_erp, st.hold)
+
+    new = FluidState(
+        qh=qh, nicq=nicq, delivered=delivered, offered=offered,
+        dropped=dropped, est=est, paused=paused, rate=rate,
+        rp_target=rp_target, alpha=alpha, byte_cnt=byte_cnt, tmr=tmr,
+        alpha_tmr=alpha_tmr, bc_stage=bc_stage, t_stage=t_stage,
+        hold=hold, np_tmr=np_tmr, trig_buf=trig_buf, tgt_buf=tgt_buf,
+        t=st.t + 1)
+    trace = StepTrace(
+        delivered=delivered, rate=rate, inst_thr=deliv_step / dt,
+        max_q=jnp.max(B), n_paused=jnp.sum(paused.astype(jnp.int32)),
+        marked=marked, cnp=cnp)
+    return new, trace
+
+
+def make_step_fn(scn: Scenario, cfg: CCConfig,
+                 delay_slots: int | None = None):
+    """Returns step(state) -> (state, StepTrace). Pure; closes over statics.
+
+    ``delay_slots`` pins a fixed delay-line depth (legacy callers passing
+    ``DELAY_SLOTS``); it raises if any flow's RTT would overflow it.  By
+    default the depth is sized from the scenario (``delay_depth``).
+    """
+    if delay_slots is not None:
+        _check_delay(scn, delay_slots)
+    sd = scenario_device(scn)
+    par = step_params(cfg)
+    n_sw = int(scn.n_switches)
+    dt = float(cfg.sim.dt)
+
     def step(st: FluidState):
-        t_sec = st.t.astype(jnp.float32) * dt
-
-        # ---- 1. generation ------------------------------------------------
-        active = (t_sec >= t_start) & (t_sec < t_stop)
-        gen = jnp.where(active, gen_rate, 0.0) * dt
-        gen = jnp.minimum(gen, jnp.maximum(volume - st.offered, 0.0))
-        nicq = st.nicq + gen
-        over = jnp.maximum(nicq - nic_buf, 0.0)
-        nicq = nicq - over
-        offered = st.offered + gen - over
-        dropped = st.dropped + over
-
-        # ---- 2. transfers -------------------------------------------------
-        # source quantity eligible to cross wire h this step
-        src_inj = jnp.minimum(nicq, jnp.minimum(st.rate, line_rate) * dt)
-        src_q = jnp.concatenate([src_inj[:, None], st.qh[:, :-1]], axis=1)
-        src_q = jnp.where(valid, src_q, 0.0)
-
-        pause_l = jnp.concatenate([st.paused, jnp.zeros((1,), bool)])
-        wire_open = ~pause_l[widx]                         # [F,H]
-
-        # strict-FIFO HoL factor per link queue: share of the queue whose
-        # *next* wire is currently drainable.
-        next_open = jnp.concatenate(
-            [wire_open[:, 1:], jnp.ones((F, 1), bool)], axis=1)
-        q_here = jnp.where(holds_queue, st.qh, 0.0)        # queue at sink(h)
-        num = scat(q_here * next_open)
-        den = scat(q_here)
-        fifo_ok = jnp.where(den > 0, num / jnp.maximum(den, 1e-9), 1.0)
-
-        weight = jnp.where(wire_open, src_q, 0.0)
-        sum_w = scat(weight)
-        budget = cap[widx] * dt * fifo_ok[widx]
-        share = jnp.where(sum_w[widx] > 0,
-                          budget * weight / jnp.maximum(sum_w[widx], 1e-9),
-                          0.0)
-        T = jnp.minimum(weight, share)                     # bytes crossing h
-
-        nicq = nicq - T[:, 0]
-        qh = st.qh - jnp.pad(T[:, 1:], ((0, 0), (0, 1)))   # drain from h-1
-        qh = qh + jnp.where(holds_queue, T, 0.0)           # land at sink(h)
-        qh = jnp.maximum(qh, 0.0)
-        deliv_step = jnp.sum(jnp.where(is_last, T, 0.0), axis=1)
-        delivered = st.delivered + deliv_step
-
-        # crossing-rate EWMA (doubles as arrival-into-queue estimate)
-        beta = jnp.float32(r.ecp_rate_ewma)
-        est = (1 - beta) * st.est + beta * (T / dt)
-
-        # ---- 3. PFC -------------------------------------------------------
-        B = scat(jnp.where(holds_queue, qh, 0.0))[:L]      # [L] sink queues
-        paused = jnp.where(B > xoff, True,
-                           jnp.where(B < xon, False, st.paused))
-        pool = jnp.zeros((n_sw,), jnp.float32).at[
-            jnp.maximum(sink_sw[:L], 0)].add(jnp.where(sink_sw[:L] >= 0, B, 0.0))
-        pool_hot = pool > pool_xoff
-        paused = paused | jnp.where(sink_sw[:L] >= 0, pool_hot[
-            jnp.maximum(sink_sw[:L], 0)], False)
-
-        # ---- 4. marking ---------------------------------------------------
-        B1 = jnp.concatenate([B, jnp.zeros((1,), jnp.float32)])
-        q_over = B1[widx] > v_thresh                       # [F,H] queue hot?
-        present = (qh > 0) | (T > 0)
-
-        # Demand to cross wire h = arrival rate into the queue feeding it
-        # (pre-stall, so FIFO-blocked victims keep their true demand).
-        dem = jnp.concatenate([est[:, :1], est[:, :-1]], axis=1)
-        dem = jnp.where(valid, dem, 0.0)
-        act = (dem > eps_rate) & valid
-        n_act = scat(act.astype(jnp.float32), init=0.0)
-        caps_w = cap[widx]
-        sum_dem = scat(jnp.where(act, dem, 0.0))
-        share0 = caps_w / jnp.maximum(n_act[widx], 1.0)
-        under = dem < share0
-        surplus = scat(jnp.where(act & under, share0 - dem, 0.0))
-        n_heavy = scat((act & ~under).astype(jnp.float32))
-        grant = jnp.where(
-            under, dem,
-            share0 + surplus[widx] / jnp.maximum(n_heavy[widx], 1.0))
-        grant = jnp.where(act, grant, caps_w)
-        oversub = sum_dem[widx] > caps_w          # wire h oversubscribed?
-        # ... all shifted to the *next* wire (the flow's requested output)
-        inf_col = jnp.full((F, 1), jnp.inf, jnp.float32)
-        grant_next = jnp.concatenate([grant[:, 1:], inf_col], axis=1)
-        grant_next = jnp.where(holds_queue, grant_next, jnp.inf)
-        dem_next = jnp.concatenate([dem[:, 1:], inf_col * 0], axis=1)
-        over_next = jnp.concatenate(
-            [oversub[:, 1:], jnp.zeros((F, 1), bool)], axis=1)
-
-        if marking_kind == "cp":
-            mark_fh = q_over & present & holds_queue
-        else:
-            # ECP: queue over threshold AND the flow's requested output is
-            # oversubscribed AND its own demand exceeds its fair grant there.
-            congesting = over_next & (
-                dem_next > jnp.float32(r.ecp_fairness_slack) * grant_next)
-            mark_fh = q_over & present & congesting & holds_queue
-        marked = jnp.any(mark_fh, axis=1)
-        # severity payload: fair grant at the marking queue, scaled down by
-        # the queue's excess over V so standing backlog drains (ENP carries
-        # "timely congestion severity", ERP converges to fair as B -> V).
-        qexc = jnp.clip((B1[widx] - v_thresh)
-                        / jnp.float32(cfg.link.port_buffer), 0.0, 1.0)
-        sev = grant_next * (1.0 - jnp.float32(r.erp_drain_gain) * qexc)
-        tgt = jnp.min(jnp.where(mark_fh, sev, jnp.inf), axis=1)
-        tgt = jnp.where(jnp.isfinite(tgt), tgt, line_rate)
-
-        # ---- 5. notification (NP / ENP) ----------------------------------
-        window = jnp.float32(p.cnp_window if reaction_kind == "rp"
-                             else r.enp_coalesce)
-        np_tmr = st.np_tmr + dt
-        emit = marked & (np_tmr >= window)
-        np_tmr = jnp.where(emit, 0.0, np_tmr)
-        wslot = (st.t + rtt) % DELAY_SLOTS
-        trig_buf = st.trig_buf.at[wslot, fidx].add(emit.astype(jnp.float32))
-        tgt_buf = st.tgt_buf.at[wslot, fidx].set(
-            jnp.where(emit, tgt, st.tgt_buf[wslot, fidx]))
-        rslot = st.t % DELAY_SLOTS
-        cnp = trig_buf[rslot] > 0
-        tgt_rx = tgt_buf[rslot]
-        trig_buf = trig_buf.at[rslot].set(0.0)
-
-        # ---- 6. reaction (RP / ERP) ---------------------------------------
-        if scheme == CCScheme.PFC_ONLY:
-            rate = jnp.full((F,), 1.0, jnp.float32) * jnp.minimum(
-                gen_rate, line_rate)
-            rp_target, alpha = st.rp_target, st.alpha
-            byte_cnt, tmr, alpha_tmr = st.byte_cnt, st.tmr, st.alpha_tmr
-            bc_stage, t_stage, hold = st.bc_stage, st.t_stage, st.hold
-        elif reaction_kind == "rp":
-            g = jnp.float32(p.g)
-            # alpha update timer (runs when no CNP)
-            alpha_tmr = st.alpha_tmr + dt
-            a_tick = alpha_tmr >= jnp.float32(p.timer_T)
-            alpha = jnp.where(a_tick, (1 - g) * st.alpha, st.alpha)
-            alpha_tmr = jnp.where(a_tick, 0.0, alpha_tmr)
-            # on CNP: cut
-            rp_target = jnp.where(cnp, st.rate, st.rp_target)
-            rate = jnp.where(
-                cnp,
-                st.rate * (1 - alpha * jnp.float32(p.rate_decrease_factor)),
-                st.rate)
-            alpha = jnp.where(cnp, (1 - g) * alpha + g, alpha)
-            byte_cnt = jnp.where(cnp, 0.0, st.byte_cnt + st.rate * dt)
-            tmr = jnp.where(cnp, 0.0, st.tmr + dt)
-            alpha_tmr = jnp.where(cnp, 0.0, alpha_tmr)
-            bc_stage = jnp.where(cnp, 0, st.bc_stage)
-            t_stage = jnp.where(cnp, 0, st.t_stage)
-            # increase events
-            b_ev = byte_cnt >= jnp.float32(p.byte_counter_B)
-            t_ev = tmr >= jnp.float32(p.timer_T)
-            byte_cnt = jnp.where(b_ev, 0.0, byte_cnt)
-            tmr = jnp.where(t_ev, 0.0, tmr)
-            bc_stage = bc_stage + b_ev.astype(jnp.int32)
-            t_stage = t_stage + t_ev.astype(jnp.int32)
-            ev = b_ev | t_ev
-            imax = jnp.maximum(bc_stage, t_stage)
-            imin = jnp.minimum(bc_stage, t_stage)
-            frs = jnp.int32(p.fr_stages)
-            in_fr = imax <= frs
-            in_hyper = imin > frs
-            rp_target = jnp.where(
-                ev & ~in_fr & ~in_hyper, rp_target + jnp.float32(p.rai),
-                rp_target)
-            rp_target = jnp.where(
-                ev & in_hyper,
-                rp_target + jnp.float32(p.rhai)
-                * (imin - frs).astype(jnp.float32),
-                rp_target)
-            rate = jnp.where(ev, 0.5 * (rate + rp_target), rate)
-            rate = jnp.clip(rate, jnp.float32(p.min_rate), line_rate)
-            rp_target = jnp.clip(rp_target, jnp.float32(p.min_rate), line_rate)
-            hold = st.hold
-        else:  # DCQCN_REV / ERP
-            rate = jnp.where(
-                cnp,
-                jnp.maximum(jnp.float32(r.erp_settle) * tgt_rx,
-                            jnp.float32(r.min_rate)),
-                st.rate)
-            hold = jnp.where(cnp, jnp.float32(r.erp_hold),
-                             jnp.maximum(st.hold - dt, 0.0))
-            rate = jnp.where(~cnp & (hold <= 0), rate + erp_slope * dt, rate)
-            rate = jnp.clip(rate, jnp.float32(r.min_rate), line_rate)
-            rp_target, alpha = st.rp_target, st.alpha
-            byte_cnt, tmr, alpha_tmr = st.byte_cnt, st.tmr, st.alpha_tmr
-            bc_stage, t_stage = st.bc_stage, st.t_stage
-
-        new = FluidState(
-            qh=qh, nicq=nicq, delivered=delivered, offered=offered,
-            dropped=dropped, est=est, paused=paused, rate=rate,
-            rp_target=rp_target, alpha=alpha, byte_cnt=byte_cnt, tmr=tmr,
-            alpha_tmr=alpha_tmr, bc_stage=bc_stage, t_stage=t_stage,
-            hold=hold, np_tmr=np_tmr, trig_buf=trig_buf, tgt_buf=tgt_buf,
-            t=st.t + 1)
-        trace = StepTrace(
-            delivered=delivered, rate=rate, inst_thr=deliv_step / dt,
-            max_q=jnp.max(B), n_paused=jnp.sum(paused.astype(jnp.int32)),
-            marked=marked, cnp=cnp)
-        return new, trace
+        return fluid_step(st, sd, par, dt=dt, n_switches=n_sw)
 
     return step

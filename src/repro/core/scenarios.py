@@ -1,43 +1,20 @@
-"""Scenario builders: the paper's §II incast + synthetic DC workloads."""
+"""Legacy scenario builders — thin wrappers over ``ScenarioSpec``.
+
+The declarative ``repro.core.experiments.ScenarioSpec`` is the public
+entrypoint (it composes with ``Sweep`` for one-jit batched evaluation);
+these functions survive as conveniences for single-run callers and keep
+the seed API stable.  Each is ``ScenarioSpec.<ctor>(...).build(cfg)``.
+"""
 
 from __future__ import annotations
 
 import numpy as np
 
+from .experiments import ScenarioSpec
 from .fluid import Scenario
 from .params import CCConfig
-from .routing import build_flow_routes, route_hops, validate_routes
-from .topology import Topology, make_paper_clos
 
-
-def _mk_scenario(topo: Topology, pairs, cfg: CCConfig, *,
-                 t_start, t_stop, roll: int = 0,
-                 nic_buffer: float = 4e6, arity: int = 4,
-                 volume=None) -> Scenario:
-    routes = build_flow_routes(topo, pairs, arity=arity, roll=roll)
-    validate_routes(topo, routes)
-    F = len(pairs)
-    if volume is None:
-        volume = np.full((F,), np.inf, np.float32)
-    hops = route_hops(routes)
-    # CNP feedback delay ~ 2 * hops * (prop + serialisation) + NIC turnaround;
-    # quantised to dt steps, >= 2 steps so the loop is never same-step.
-    per_hop = cfg.link.propagation_delay + cfg.link.mtu / cfg.link.line_rate
-    rtt = 2 * hops * per_hop + 1e-6
-    rtt_steps = np.maximum(2, np.round(rtt / cfg.sim.dt)).astype(np.int32)
-    return Scenario(
-        routes=routes,
-        hops=hops,
-        gen_rate=np.full((F,), cfg.link.line_rate, np.float32),
-        t_start=np.asarray(t_start, np.float32),
-        t_stop=np.asarray(t_stop, np.float32),
-        volume=np.asarray(volume, np.float32),
-        capacity=topo.link_capacity.astype(np.float32),
-        sink_switch=topo.sink_switch(),
-        n_switches=topo.n_switches,
-        rtt_steps=rtt_steps,
-        nic_buffer=nic_buffer,
-    )
+PAPER_FLOW_NAMES = ["F0", "F1", "F4", "F8", "F3(victim)"]
 
 
 def paper_incast(cfg: CCConfig, roll: int = 0,
@@ -55,16 +32,8 @@ def paper_incast(cfg: CCConfig, roll: int = 0,
     roll=0 reproduces the Fig. 3 narrative (victim shares the wire into
     switch 16); roll=1 the Fig. 2 aggregate (victim wire-disjoint).
     """
-    topo = make_paper_clos(cfg.link.line_rate)
-    pairs = [(0, 16), (1, 16), (4, 16), (8, 16), (3, 12)]
-    F = len(pairs)
-    return _mk_scenario(
-        topo, pairs, cfg,
-        t_start=np.full((F,), 1e-3), t_stop=np.full((F,), 3e-3),
-        roll=roll, nic_buffer=nic_buffer)
-
-
-PAPER_FLOW_NAMES = ["F0", "F1", "F4", "F8", "F3(victim)"]
+    return ScenarioSpec.paper_incast(
+        roll=roll, nic_buffer=nic_buffer).build(cfg)
 
 
 def paper_incast_volume(cfg: CCConfig, roll: int = 0,
@@ -76,57 +45,26 @@ def paper_incast_volume(cfg: CCConfig, roll: int = 0,
     stay open until done, so completion times are comparable across CC
     schemes — this is the variant behind the 4 / 6.5 / 12.5 ms ordering.
     """
-    topo = make_paper_clos(cfg.link.line_rate)
-    pairs = [(0, 16), (1, 16), (4, 16), (8, 16), (3, 12)]
-    F = len(pairs)
-    return _mk_scenario(
-        topo, pairs, cfg,
-        t_start=np.full((F,), 1e-3), t_stop=np.full((F,), np.inf),
-        roll=roll, nic_buffer=2 * volume_bytes,
-        volume=np.full((F,), volume_bytes))
+    return ScenarioSpec.paper_incast_volume(
+        roll=roll, volume_bytes=volume_bytes).build(cfg)
 
 
 def incast(cfg: CCConfig, n_senders: int, dst: int = 16, *,
            victim: bool = True, arity: int = 4, roll: int = 0,
            t_start: float = 1e-3, t_stop: float = 3e-3) -> Scenario:
     """Parametric n-to-1 incast with an optional victim flow."""
-    topo = make_paper_clos(cfg.link.line_rate) if arity == 4 else None
-    if topo is None:
-        from .topology import make_clos3
-        topo = make_clos3(arity=arity, line_rate=cfg.link.line_rate)
-    n_nodes = topo.n_nodes
-    senders = [n for n in range(n_nodes) if n != dst][:n_senders]
-    pairs = [(s, dst) for s in senders]
-    if victim:
-        pairs.append((3, 12))
-    F = len(pairs)
-    return _mk_scenario(
-        topo, pairs, cfg,
-        t_start=np.full((F,), t_start), t_stop=np.full((F,), t_stop),
-        roll=roll, arity=arity)
+    return ScenarioSpec.incast(
+        n_senders, dst, victim=victim, arity=arity, roll=roll,
+        t_start=t_start, t_stop=t_stop).build(cfg)
 
 
 def random_permutation(cfg: CCConfig, n_flows: int, seed: int = 0, *,
                        arity: int = 4, t_start: float = 0.1e-3,
                        t_stop: float = 2e-3) -> Scenario:
     """Uniform random permutation traffic (DC-scale stress)."""
-    from .topology import make_clos3
-    topo = make_clos3(arity=arity, line_rate=cfg.link.line_rate)
-    rng = np.random.RandomState(seed)
-    n = topo.n_nodes
-    perm = rng.permutation(n)
-    srcs = rng.choice(n, size=n_flows, replace=n_flows > n)
-    pairs = []
-    for s in srcs:
-        d = int(perm[s % n])
-        if d == s:
-            d = (d + 1) % n
-        pairs.append((int(s), d))
-    F = len(pairs)
-    return _mk_scenario(
-        topo, pairs, cfg,
-        t_start=np.full((F,), t_start), t_stop=np.full((F,), t_stop),
-        arity=arity)
+    return ScenarioSpec.permutation(
+        n_flows, seed, arity=arity, t_start=t_start,
+        t_stop=t_stop).build(cfg)
 
 
 def collective_flows(cfg: CCConfig, pairs: list[tuple[int, int]],
@@ -134,16 +72,10 @@ def collective_flows(cfg: CCConfig, pairs: list[tuple[int, int]],
                      t_start: float = 0.0) -> Scenario:
     """Flows carrying a fixed volume (for co-simulating training traffic).
 
-    The generator window is sized so a line-rate source would emit exactly
-    ``bytes_per_flow``; completion under each CC scheme is then the
-    collective's finish time on the modelled fabric.
+    Completion under each CC scheme is then the collective's finish time
+    on the modelled fabric.
     """
-    from .topology import make_clos3
-    topo = make_clos3(arity=arity, line_rate=cfg.link.line_rate)
-    F = len(pairs)
-    return _mk_scenario(
-        topo, pairs, cfg,
-        t_start=np.full((F,), t_start),
-        t_stop=np.full((F,), np.inf),
-        arity=arity, nic_buffer=2 * bytes_per_flow,
-        volume=np.full((F,), bytes_per_flow))
+    return ScenarioSpec.flows(
+        pairs, arity=arity, t_start=t_start, t_stop=float("inf"),
+        volume=float(bytes_per_flow),
+        nic_buffer=2 * bytes_per_flow).build(cfg)

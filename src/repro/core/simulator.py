@@ -1,4 +1,10 @@
-"""Scan driver + result analysis for the CC fluid model."""
+"""Scan driver + result analysis for the CC fluid model.
+
+``run`` advances one (scenario, config) point; the scan body decimates
+traces on device (one ``TraceSample`` per ``trace_every`` steps), so the
+trace memory pulled to host shrinks by that factor.  Batched sweeps live
+in ``experiments.py`` and share the same scan body.
+"""
 
 from __future__ import annotations
 
@@ -10,33 +16,120 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .fluid import FluidState, Scenario, init_state, make_step_fn
+from .fluid import (FluidState, Scenario, StepTrace, init_state,
+                    make_step_fn)
 from .params import CCConfig, CCScheme
+
+
+class TraceSample(StepTrace):
+    """One decimated trace sample covering ``trace_every`` sim steps.
+
+    Cumulative fields (``delivered``, ``rate``) are the window's last
+    step, i.e. a strided sample of the full trace; ``inst_thr`` is the
+    window-mean delivery rate; ``max_q`` / ``n_paused`` are window
+    maxima; ``marked`` / ``cnp`` are window event *counts* (so sums over
+    the decimated trace equal sums over the full one).
+    """
+
+
+def _zero_accum(st: FluidState):
+    # shapes follow the state so the same scan body serves single runs
+    # ([] / [F]) and batched sweeps ([R] / [R, F])
+    return (jnp.zeros_like(st.t, jnp.float32),    # max_q
+            jnp.zeros_like(st.t, jnp.int32),      # n_paused
+            jnp.zeros_like(st.nicq, jnp.int32),   # marked
+            jnp.zeros_like(st.nicq, jnp.int32))   # cnp
+
+
+def decimating_scan(step, st: FluidState, n_samples: int,
+                    trace_every: int, dt: float):
+    """Run ``n_samples * trace_every`` steps, emitting one TraceSample
+    per ``trace_every`` steps.  Accumulation happens inside the scan, so
+    the full-resolution trace never materialises."""
+
+    def outer(st, _):
+        d0 = st.delivered
+
+        def inner(carry, _):
+            stt, mq, npz, mk, cn = carry
+            st2, tr = step(stt)
+            return (st2,
+                    jnp.maximum(mq, tr.max_q),
+                    jnp.maximum(npz, tr.n_paused),
+                    mk + tr.marked.astype(jnp.int32),
+                    cn + tr.cnp.astype(jnp.int32)), None
+
+        (st, mq, npz, mk, cn), _ = jax.lax.scan(
+            inner, (st,) + _zero_accum(st), None, length=trace_every)
+        sample = TraceSample(
+            delivered=st.delivered, rate=st.rate,
+            inst_thr=(st.delivered - d0) / jnp.float32(trace_every * dt),
+            max_q=mq, n_paused=npz, marked=mk, cnp=cn)
+        return st, sample
+
+    return jax.lax.scan(outer, st, None, length=n_samples)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def _run_scan(state: FluidState, step_fn, n_samples: int,
+              trace_every: int, dt: float):
+    return decimating_scan(step_fn, state, n_samples, trace_every, dt)
+
+
+def _resolve_steps(cfg: CCConfig, n_steps: int | None,
+                   trace_every: int | None) -> tuple[int, int]:
+    if n_steps is None:
+        n_steps = int(round(cfg.sim.t_end / cfg.sim.dt))
+    k = cfg.sim.trace_every if trace_every is None else trace_every
+    k = max(1, int(k))
+    n_samples = -(-n_steps // k)          # ceil: round the run up to a
+    return n_samples, k                   # whole number of samples
 
 
 @dataclasses.dataclass
 class SimResult:
-    """Host-side view of a finished run."""
+    """Host-side view of a finished run.
+
+    Trace arrays are decimated by ``trace_every`` (see TraceSample for
+    the per-field semantics); ``times`` marks each sample's window end.
+    """
 
     cfg: CCConfig
     scn: Scenario
-    times: np.ndarray          # [T] seconds
+    times: np.ndarray          # [T] seconds (window-end times)
     delivered: np.ndarray      # [T, F] cumulative bytes
     rate: np.ndarray           # [T, F] RP rate (B/s)
-    inst_thr: np.ndarray       # [T, F] instantaneous delivery rate (B/s)
-    max_q: np.ndarray          # [T]
-    n_paused: np.ndarray       # [T]
-    marked: np.ndarray         # [T, F]
-    cnp: np.ndarray            # [T, F]
+    inst_thr: np.ndarray       # [T, F] window-mean delivery rate (B/s)
+    max_q: np.ndarray          # [T] window-max hottest queue (bytes)
+    n_paused: np.ndarray       # [T] window-max paused wires
+    marked: np.ndarray         # [T, F] marking events in window
+    cnp: np.ndarray            # [T, F] CNPs received in window
     final: Any                 # FluidState (host)
+    trace_every: int = 1
 
     # -- derived metrics ----------------------------------------------------
+    def window_samples(self, seconds: float) -> int:
+        """Trace samples spanning ``seconds`` (smoothing windows should
+        be specified in time, not samples — sample spacing depends on
+        ``trace_every``)."""
+        dt_sample = self.trace_every * self.cfg.sim.dt
+        return max(1, int(round(seconds / dt_sample)))
+
     def flow_throughput(self, window: int = 50) -> np.ndarray:
-        """[T, F] delivery rate smoothed over `window` samples (B/s)."""
-        k = np.ones(window) / window
-        return np.stack(
-            [np.convolve(self.inst_thr[:, f], k, mode="same")
-             for f in range(self.inst_thr.shape[1])], axis=1)
+        """[T, F] delivery rate smoothed over `window` samples (B/s).
+
+        Box filter over the sample axis via cumulative sums (equivalent
+        to per-flow ``np.convolve(..., mode="same")`` but one vectorised
+        pass over [T, F] instead of an O(F) python loop).
+        """
+        x = self.inst_thr.astype(np.float64)   # f32 cumsum would drift
+        T = x.shape[0]
+        w = max(1, min(window, T))
+        c = np.concatenate([np.zeros((1,) + x.shape[1:]), np.cumsum(x, 0)])
+        # same-mode box filter: sample t averages [t - w//2, t + (w-1)//2]
+        lo = np.clip(np.arange(T) - w // 2, 0, T)
+        hi = np.clip(np.arange(T) + (w - 1) // 2 + 1, 0, T)
+        return (c[hi] - c[lo]) / w
 
     def aggregate_throughput(self, window: int = 50) -> np.ndarray:
         return self.flow_throughput(window).sum(axis=1)
@@ -46,18 +139,15 @@ class SimResult:
 
         Volume-mode flows are measured against their declared volume
         (NaN if the run ended early); window-mode flows against the
-        admitted bytes."""
+        admitted bytes.  ``delivered`` is monotone per flow, so the
+        first crossing is a vectorised argmax over the sample axis."""
         offered = np.asarray(self.final.offered)
         vol = np.asarray(self.scn.volume, dtype=np.float64)
         total = np.where(np.isfinite(vol), vol, offered)
-        out = np.full((total.shape[0],), np.nan)
-        for f in range(total.shape[0]):
-            if total[f] <= 0:
-                continue
-            hit = np.nonzero(self.delivered[:, f] >= frac * total[f])[0]
-            if hit.size:
-                out[f] = self.times[hit[0]]
-        return out
+        done = self.delivered >= frac * np.maximum(total, 1e-300)[None, :]
+        first = done.argmax(axis=0)                   # 0 if never done too
+        hit = done.any(axis=0) & (total > 0)
+        return np.where(hit, self.times[first], np.nan)
 
     def completion_time(self, frac: float = 0.999) -> float:
         ct = self.completion_times(frac)
@@ -69,34 +159,37 @@ class SimResult:
         Window mode: averaged over [t_start, t_stop).  Volume mode
         (t_stop = inf): volume / (completion - t_start).
         """
-        t0 = np.asarray(self.scn.t_start)
-        t1 = np.asarray(self.scn.t_stop)
+        t0 = np.asarray(self.scn.t_start, np.float64)
+        t1 = np.asarray(self.scn.t_stop, np.float64)
         ct = self.completion_times()
-        out = np.zeros(t0.shape)
-        for f in range(t0.shape[0]):
-            if np.isfinite(t1[f]):
-                m = (self.times >= t0[f]) & (self.times < t1[f])
-                out[f] = self.inst_thr[m, f].mean() if m.any() else 0.0
-            elif np.isfinite(ct[f]) and ct[f] > t0[f]:
-                out[f] = self.delivered[-1, f] / (ct[f] - t0[f])
-        return out
+        windowed = np.isfinite(t1)
+        live = ((self.times[:, None] >= t0[None, :])
+                & (self.times[:, None] < t1[None, :]))          # [T, F]
+        n_live = live.sum(axis=0)
+        mean_w = np.where(n_live > 0,
+                          (self.inst_thr * live).sum(axis=0)
+                          / np.maximum(n_live, 1), 0.0)
+        span = ct - t0
+        mean_v = np.where(np.isfinite(ct) & (span > 0),
+                          self.delivered[-1] / np.maximum(span, 1e-300), 0.0)
+        return np.where(windowed, mean_w, mean_v)
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3))
-def _run_scan(state: FluidState, dummy, step_fn, n_steps: int):
-    def body(st, _):
-        return step_fn(st)
-    return jax.lax.scan(body, state, None, length=n_steps)
+def run(scn: Scenario, cfg: CCConfig, n_steps: int | None = None,
+        trace_every: int | None = None) -> SimResult:
+    """Simulate one point and pull (decimated) traces to host.
 
-
-def run(scn: Scenario, cfg: CCConfig, n_steps: int | None = None) -> SimResult:
-    """Simulate and pull traces to host."""
-    if n_steps is None:
-        n_steps = int(round(cfg.sim.t_end / cfg.sim.dt))
+    ``trace_every`` defaults to ``cfg.sim.trace_every``; pass 1 for a
+    full-resolution trace.  ``n_steps`` is rounded up to a whole number
+    of trace windows.
+    """
+    n_samples, k = _resolve_steps(cfg, n_steps, trace_every)
     step = make_step_fn(scn, cfg)
     st0 = init_state(scn, cfg)
-    final, tr = _run_scan(st0, None, step, n_steps)
-    times = (np.arange(n_steps) + 1) * cfg.sim.dt
+    final, tr = _run_scan(st0, step, n_samples, k, float(cfg.sim.dt))
+    # (i+1)*k first (exact int), then *dt — so decimated times are the
+    # same floats as the strided full-resolution times
+    times = (np.arange(n_samples) + 1) * k * cfg.sim.dt
     return SimResult(
         cfg=cfg, scn=scn, times=times,
         delivered=np.asarray(tr.delivered),
@@ -107,12 +200,19 @@ def run(scn: Scenario, cfg: CCConfig, n_steps: int | None = None) -> SimResult:
         marked=np.asarray(tr.marked),
         cnp=np.asarray(tr.cnp),
         final=jax.device_get(final),
+        trace_every=k,
     )
 
 
 def run_all_schemes(scn: Scenario, cfg: CCConfig,
                     n_steps: int | None = None) -> dict[str, SimResult]:
-    out = {}
-    for scheme in (CCScheme.PFC_ONLY, CCScheme.DCQCN, CCScheme.DCQCN_REV):
-        out[scheme.name] = run(scn, cfg.replace(scheme=scheme), n_steps)
-    return out
+    """Scheme ablation as ONE batched device launch (see experiments).
+
+    Kept for API compatibility; now a thin wrapper over a 3-point Sweep
+    instead of three serial jit compilations.
+    """
+    from .experiments import Sweep
+    schemes = (CCScheme.PFC_ONLY, CCScheme.DCQCN, CCScheme.DCQCN_REV)
+    sweep = Sweep([(s.name, cfg.replace(scheme=s), scn) for s in schemes])
+    res = sweep.run(n_steps=n_steps)
+    return {s.name: res[s.name] for s in schemes}

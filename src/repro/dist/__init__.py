@@ -1,0 +1,13 @@
+"""repro.dist — distribution substrate: sharding rules, the ERP-paced
+collective scheduler, and pipeline parallelism.
+
+Public surface:
+  * sharding: shard / logical_sharding / pspec / DEFAULT_RULES
+  * pacer:    chunk_bytes_of / erp_chunk_schedule
+  * pipeline: pipeline_apply
+"""
+
+from . import _compat  # noqa: F401  (installs jax API shims; must be first)
+from .sharding import DEFAULT_RULES, logical_sharding, pspec, shard
+
+__all__ = ["DEFAULT_RULES", "logical_sharding", "pspec", "shard"]

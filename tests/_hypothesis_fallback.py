@@ -1,0 +1,81 @@
+"""Minimal stand-in for ``hypothesis`` when it isn't installed.
+
+The container image pins its package set, so property tests degrade to a
+small deterministic sample sweep instead of failing at collection.  The
+API surface covers exactly what this test suite uses: ``given`` with
+keyword strategies, ``settings(max_examples=..., deadline=...)``, and
+``st.integers`` / ``st.floats`` bounds.
+"""
+
+from __future__ import annotations
+
+import functools
+import itertools
+
+import numpy as np
+
+HAVE_HYPOTHESIS = False
+
+
+class _Strategy:
+    def __init__(self, samples):
+        self.samples = list(samples)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    lo, hi = int(min_value), int(max_value)
+    mid = (lo + hi) // 2
+    return _Strategy(dict.fromkeys([lo, mid, hi, lo + 1 if hi > lo else lo]))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    lo, hi = float(min_value), float(max_value)
+    return _Strategy(
+        dict.fromkeys([lo, hi, float(np.sqrt(lo * hi)) if lo > 0 else 0.0]))
+
+
+def sampled_from(values) -> _Strategy:
+    return _Strategy(values)
+
+
+def none() -> _Strategy:
+    return _Strategy([None])
+
+
+def one_of(*strats: _Strategy) -> _Strategy:
+    out = []
+    for s in strats:
+        out.extend(s.samples)
+    return _Strategy(dict.fromkeys(out))
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    sampled_from = staticmethod(sampled_from)
+    none = staticmethod(none)
+    one_of = staticmethod(one_of)
+
+
+def settings(max_examples: int = 10, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    names = sorted(strats)
+
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest would introspect the wrapped
+        # signature and treat the strategy kwargs as fixtures.
+        def wrapper():
+            cap = getattr(fn, "_max_examples", 10)
+            combos = itertools.product(*(strats[n].samples for n in names))
+            for combo in itertools.islice(combos, cap):
+                fn(**dict(zip(names, combo)))
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # image without hypothesis: deterministic sweep
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.cc_step import erp_step, rp_step
