@@ -1,0 +1,126 @@
+"""`--scale`: fabric-family scaling matrix for the repro.net subsystem.
+
+For each (fabric, workload) cell: time the route-table build (+ its
+validity check, both cached per fabric afterwards), then run a 3-scheme
+Sweep as one jitted launch and report wall time and simulated
+steps/second.  Every invocation appends a record to ``BENCH_net.json``
+at the repo root so the perf trajectory accumulates across commits.
+
+    PYTHONPATH=src python benchmarks/run.py --scale            # full
+    PYTHONPATH=src python benchmarks/run.py --scale --quick    # CI-sized
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+
+BENCH_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_net.json")
+
+
+def _matrix(quick: bool):
+    from repro.core.workloads import all_to_all, incast_storm
+    from repro.net import FabricSpec
+
+    def storm(n):
+        return incast_storm(max(4, n // 4), max(1, n // 16), n,
+                            volume=1e6, t_start=0.0)
+
+    def a2a(n):
+        return all_to_all(n, 0.5e6, phases=4, nodes=range(min(n, 16)))
+
+    cells = [
+        ("clos64", FabricSpec.clos3(4), storm),
+        ("ft64_2to1", FabricSpec.fat_tree(4, taper=2), storm),
+        ("dfly72", FabricSpec.dragonfly(a=4, p=2, h=2), a2a),
+    ]
+    if not quick:
+        cells += [
+            ("clos512", FabricSpec.clos3(8), storm),
+            ("xgft4lvl", FabricSpec.xgft((4, 2, 2, 2), (1, 2, 2, 2)),
+             a2a),
+            ("ft216_3to1", FabricSpec.xgft((6, 6, 6), (1, 2, 6)), storm),
+            ("dfly342", FabricSpec.dragonfly(a=6, p=3, h=3), a2a),
+        ]
+    return cells
+
+
+def run_matrix(quick: bool = False, n_steps: int = 600) -> list[dict]:
+    from repro.core import CCScheme, PAPER_CONFIG, Sweep
+    from repro.net import validate_table
+
+    cfg = PAPER_CONFIG
+    records = []
+    for name, fab, wl_fn in _matrix(quick):
+        t0 = time.perf_counter()
+        topo = fab.build(cfg.link.line_rate)
+        table = fab.route_table()                     # validated in cache
+        table_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        validate_table(topo, table)                   # re-check, timed
+        validate_s = time.perf_counter() - t0
+        spec = wl_fn(topo.n_nodes).spec(fabric=fab)
+        scn = spec.build(cfg)          # built once; the timed region
+        t0 = time.perf_counter()       # below times only the sweep
+        sweep = Sweep.grid(
+            configs={s.name: cfg.replace(scheme=s) for s in CCScheme},
+            scenarios={name: scn})
+        res = sweep.run(n_steps=n_steps)
+        sweep_s = time.perf_counter() - t0
+        sim_steps = 3 * n_steps                       # 3 schemes batched
+        records.append({
+            "name": name,
+            "fabric": fab.name,
+            "n_nodes": int(topo.n_nodes),
+            "n_switches": int(topo.n_switches),
+            "n_links": int(topo.n_links),
+            "h_max": int(table.h_max),
+            "n_flows": int(scn.routes.shape[0]),
+            "table_s": round(table_s, 4),
+            "validate_s": round(validate_s, 4),
+            "sweep_s": round(sweep_s, 3),
+            "sim_steps_per_s": round(sim_steps / max(sweep_s, 1e-9), 1),
+            "delivered_mb": round(float(np.asarray(
+                res[f"DCQCN_REV/{name}"].final.delivered).sum()) / 1e6, 3),
+        })
+    return records
+
+
+def append_bench_record(records: list[dict], path: str = BENCH_PATH) -> None:
+    doc = {"runs": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            pass
+    doc.setdefault("runs", []).append({
+        "unix_time": int(time.time()),
+        "records": records,
+    })
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+
+
+def main(quick: bool = False) -> list[tuple]:
+    records = run_matrix(quick=quick)
+    append_bench_record(records)
+    rows = []
+    for r in records:
+        rows.append((
+            f"net_scale.{r['name']}", r["sweep_s"] * 1e6,
+            f"N={r['n_nodes']} L={r['n_links']} F={r['n_flows']} "
+            f"H={r['h_max']} table={r['table_s']:.2f}s "
+            f"{r['sim_steps_per_s']:.0f} steps/s"))
+    rows.append(("net_scale.bench_json", 0.0, BENCH_PATH))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(",".join(str(x) for x in row))

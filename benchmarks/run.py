@@ -1,15 +1,18 @@
 """Benchmark entrypoint — one section per paper table/figure + the
 beyond-paper harnesses.  Prints ``name,us_per_call,derived`` CSV.
 
-  fig2.*      paper Fig. 2 (aggregate throughput, completion times)
-  fig3.*      paper Fig. 3 (per-flow bandwidth)
-  cc_scale.*  DC-scale reaction-point + fluid stepping throughput
-  roofline.*  §Roofline terms per (arch x shape) from dry-run artifacts
-  cosim.*     collective traffic x CC scheme co-simulation
-  train.*     tiny end-to-end training-step wall time (CPU)
+  fig2.*       paper Fig. 2 (aggregate throughput, completion times)
+  fig3.*       paper Fig. 3 (per-flow bandwidth)
+  cc_scale.*   DC-scale reaction-point + fluid stepping throughput
+  net_scale.*  repro.net fabric-family scaling matrix (also ``--scale``)
+  roofline.*   §Roofline terms per (arch x shape) from dry-run artifacts
+  cosim.*      collective traffic x CC scheme co-simulation
+  train.*      tiny end-to-end training-step wall time (CPU)
 
 ``--smoke`` runs one tiny end-to-end Sweep (scheme x scenario grid,
 single jitted launch) and exits non-zero on failure — the CI hook.
+``--scale`` runs only the fabric matrix and appends a record to
+``BENCH_net.json`` (``--quick`` shrinks it to CI size).
 """
 
 from __future__ import annotations
@@ -93,29 +96,49 @@ def smoke() -> int:
     return 0 if ok else 1
 
 
+def _print_rows(all_rows) -> None:
+    print("name,us_per_call,derived")
+    for name, us, derived in all_rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="one tiny end-to-end sweep (CI tier-1 hook)")
+    ap.add_argument("--scale", action="store_true",
+                    help="fabric-family scaling matrix -> BENCH_net.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="with --scale: CI-sized matrix")
     args = ap.parse_args()
     if args.smoke:
         raise SystemExit(smoke())
 
-    from . import (ablation, cc_scale, cosim, fig2_throughput,
-                   fig3_perflow, roofline)
+    if __package__:
+        from . import (ablation, cc_scale, cosim, fig2_throughput,
+                       fig3_perflow, net_scale, roofline)
+    else:                    # `python benchmarks/run.py` (no package ctx)
+        import ablation, cc_scale, cosim, fig2_throughput  # noqa: E401
+        import fig3_perflow, net_scale, roofline           # noqa: E401
+
+    if args.scale:
+        rows = _section("net_scale",
+                        lambda: net_scale.main(quick=args.quick))
+        _print_rows(rows)
+        if any(".ERROR" in r[0] for r in rows):
+            raise SystemExit(1)
+        return
 
     all_rows = []
     all_rows += _section("fig2", fig2_throughput.main)
     all_rows += _section("fig3", fig3_perflow.main)
     all_rows += _section("ablation", ablation.main)
     all_rows += _section("cc_scale", cc_scale.main)
+    all_rows += _section("net_scale", net_scale.main)
     all_rows += _section("roofline", roofline.main)
     all_rows += _section("cosim", cosim.main)
     all_rows += _section("train", bench_train_step)
-
-    print("name,us_per_call,derived")
-    for name, us, derived in all_rows:
-        print(f"{name},{us:.2f},{derived}")
+    _print_rows(all_rows)
 
 
 if __name__ == "__main__":

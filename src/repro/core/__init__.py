@@ -9,6 +9,9 @@ Public surface:
   * experiments: ScenarioSpec / Sweep / SweepResult / config_grid —
                  the declarative one-jit sweep API (preferred entrypoint)
   * scenarios:   paper_incast / incast / ... (legacy wrappers over specs)
+  * workloads:   collective-workload generator (all-to-all, ring /
+                 recursive-doubling allreduce, incast storms, hotspots,
+                 bursts) — combine with ``repro.net`` fabrics
 """
 
 from .params import (CCConfig, CCScheme, DCQCNParams, LinkParams,
@@ -24,6 +27,8 @@ from .experiments import (ScenarioSpec, Sweep, SweepResult, config_grid,
 from .scenarios import (PAPER_FLOW_NAMES, collective_flows, incast,
                         paper_incast, paper_incast_volume,
                         random_permutation)
+from .workloads import Workload
+from . import workloads
 
 __all__ = [
     "CCConfig", "CCScheme", "DCQCNParams", "LinkParams", "PAPER_CONFIG",
@@ -35,5 +40,5 @@ __all__ = [
     "ScenarioSpec", "Sweep", "SweepResult", "config_grid",
     "pad_scenario", "stack_scenarios", "PAPER_FLOW_NAMES",
     "collective_flows", "incast", "paper_incast", "paper_incast_volume",
-    "random_permutation",
+    "random_permutation", "Workload", "workloads",
 ]

@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Sequence
+from typing import TYPE_CHECKING, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -44,9 +44,12 @@ import numpy as np
 from .fluid import (FluidState, Scenario, delay_depth, fluid_step,
                     init_state, scenario_device, step_params)
 from .params import CCConfig
-from .routing import PAD, build_flow_routes, route_hops, validate_routes
+from .routing import PAD, route_hops
 from .simulator import SimResult, _resolve_steps, decimating_scan
-from .topology import Topology, make_clos3
+from .topology import Topology
+
+if TYPE_CHECKING:           # real import is lazy: repro.net imports core
+    from repro.net import FabricSpec
 
 
 # ---------------------------------------------------------------------------
@@ -56,13 +59,21 @@ from .topology import Topology, make_clos3
 
 @dataclasses.dataclass(frozen=True)
 class ScenarioSpec:
-    """Topology + traffic pattern + timing/volume, as plain data.
+    """Fabric + traffic pattern + timing/volume, as plain data.
 
     ``kind`` selects the traffic pattern:
       * ``"incast"``      — ``n_senders``-to-1 into ``dst`` (+ optional
         victim flow), the paper's §II scene when n_senders=4 on arity 4.
       * ``"permutation"`` — seeded uniform random permutation traffic.
       * ``"pairs"``       — explicit (src, dst) pairs.
+      * ``"flowspec"``    — fully explicit per-flow tuples (src, dst,
+        timing, volume, rate, buffer) — what the collective-workload
+        generators in ``repro.core.workloads`` emit.
+
+    ``fabric`` names the network (any ``repro.net.FabricSpec``: CLOS,
+    XGFT/tapered fat-tree, dragonfly); ``None`` keeps the legacy
+    3-stage CLOS of ``arity``/``roll``.  Routing is table-driven for
+    every fabric — the CLOS closed form is just one table builder.
 
     Timing: generators open at ``t_start`` and close at ``t_stop``
     (window mode) — or carry ``volume`` bytes each and stay open until
@@ -74,6 +85,7 @@ class ScenarioSpec:
     """
 
     kind: str = "incast"
+    fabric: "FabricSpec | None" = None
     arity: int = 4
     roll: int = 0                 # D-mod-K digit roll (paper wirings)
     n_senders: int = 4
@@ -88,6 +100,14 @@ class ScenarioSpec:
     nic_buffer: float = 4e6
     gen_rate: float | None = None  # B/s; None = line rate
     label: str = ""
+    # per-flow tuples (kind == "flowspec"); empty = broadcast the scalar
+    flow_src: tuple[int, ...] = ()
+    flow_dst: tuple[int, ...] = ()
+    flow_t_start: tuple[float, ...] = ()
+    flow_t_stop: tuple[float, ...] = ()
+    flow_volume: tuple[float, ...] = ()
+    flow_rate: tuple[float, ...] = ()          # B/s; empty = gen_rate
+    flow_nic_buffer: tuple[float, ...] = ()    # B; empty = nic_buffer
 
     # -- canned specs -------------------------------------------------------
 
@@ -132,16 +152,44 @@ class ScenarioSpec:
         return cls(kind="pairs", pairs=tuple(tuple(p) for p in pairs),
                    label=kw.pop("label", f"pairs{len(pairs)}"), **kw)
 
+    @classmethod
+    def from_workload(cls, wl, fabric: "FabricSpec | None" = None,
+                      **kw) -> "ScenarioSpec":
+        """Compile a ``repro.core.workloads.Workload`` onto a fabric.
+
+        The workload's per-flow (src, dst, timing, volume, rate) tuples
+        become a ``"flowspec"`` spec; NIC buffers default to twice each
+        flow's volume (volume mode) or the scalar ``nic_buffer``.
+        """
+        nic = kw.pop("flow_nic_buffer", None)
+        if nic is None and any(np.isfinite(v) for v in wl.volume):
+            nic = tuple(2 * v if np.isfinite(v) else kw.get(
+                "nic_buffer", 4e6) for v in wl.volume)
+        return cls(kind="flowspec", fabric=fabric,
+                   flow_src=wl.src, flow_dst=wl.dst,
+                   flow_t_start=wl.t_start, flow_t_stop=wl.t_stop,
+                   flow_volume=wl.volume,
+                   flow_rate=wl.rate or (),
+                   flow_nic_buffer=nic or (),
+                   label=kw.pop("label", wl.label), **kw)
+
     # -- compilation to tensors --------------------------------------------
 
     @property
     def name(self) -> str:
         return self.label or self.kind
 
-    def _topology(self, cfg: CCConfig) -> Topology:
-        return make_clos3(arity=self.arity, line_rate=cfg.link.line_rate)
+    def _fabric(self) -> "FabricSpec":
+        if self.fabric is not None:
+            return self.fabric
+        from repro.net import FabricSpec
+        return FabricSpec.clos3(arity=self.arity, roll=self.roll)
 
     def _pairs(self, topo: Topology) -> list[tuple[int, int]]:
+        if self.kind == "flowspec":
+            if len(self.flow_src) != len(self.flow_dst):
+                raise ValueError("flow_src / flow_dst length mismatch")
+            return list(zip(self.flow_src, self.flow_dst))
         if self.kind == "pairs":
             return [tuple(p) for p in self.pairs]
         if self.kind == "incast":
@@ -165,12 +213,22 @@ class ScenarioSpec:
             return out
         raise ValueError(f"unknown ScenarioSpec kind: {self.kind!r}")
 
+    def _per_flow(self, field: tuple, scalar, F: int,
+                  dtype=np.float32) -> np.ndarray:
+        if field:
+            if len(field) != F:
+                raise ValueError(
+                    f"per-flow tuple has {len(field)} entries for {F} flows")
+            return np.asarray(field, dtype)
+        return np.full((F,), scalar, dtype)
+
     def build(self, cfg: CCConfig) -> Scenario:
-        topo = self._topology(cfg)
+        fab = self._fabric()
+        topo = fab.build(line_rate=cfg.link.line_rate)
         pairs = self._pairs(topo)
-        routes = build_flow_routes(topo, pairs, arity=self.arity,
-                                   roll=self.roll)
-        validate_routes(topo, routes)
+        # the general routing path: every fabric family precomputes a
+        # validated per-(src,dst) table; scenarios route by lookup.
+        routes = fab.route_table().routes_for_pairs(pairs)
         F = len(pairs)
         hops = route_hops(routes)
         # CNP feedback delay ~ 2 * hops * (prop + serialisation) + NIC
@@ -180,18 +238,28 @@ class ScenarioSpec:
         rtt = 2 * hops * per_hop + 1e-6
         rtt_steps = np.maximum(2, np.round(rtt / cfg.sim.dt)).astype(np.int32)
         rate = cfg.link.line_rate if self.gen_rate is None else self.gen_rate
+        # per-flow rates: workloads are built before the config's line
+        # rate is known, so inf means "line rate" and a negative entry
+        # -f means "fraction f of line rate".
+        rates = self._per_flow(self.flow_rate, rate, F).astype(np.float64)
+        rates = np.where(np.isfinite(rates), rates, cfg.link.line_rate)
+        rates = np.where(rates < 0, -rates * cfg.link.line_rate,
+                         rates).astype(np.float32)
+        # scalar stays scalar (host-side API compat); per-flow goes [F]
+        nic = (self._per_flow(self.flow_nic_buffer, 0.0, F)
+               if self.flow_nic_buffer else self.nic_buffer)
         return Scenario(
             routes=routes,
             hops=hops,
-            gen_rate=np.full((F,), rate, np.float32),
-            t_start=np.full((F,), self.t_start, np.float32),
-            t_stop=np.full((F,), self.t_stop, np.float32),
-            volume=np.full((F,), self.volume, np.float32),
+            gen_rate=rates,
+            t_start=self._per_flow(self.flow_t_start, self.t_start, F),
+            t_stop=self._per_flow(self.flow_t_stop, self.t_stop, F),
+            volume=self._per_flow(self.flow_volume, self.volume, F),
             capacity=topo.link_capacity.astype(np.float32),
             sink_switch=topo.sink_switch(),
             n_switches=topo.n_switches,
             rtt_steps=rtt_steps,
-            nic_buffer=self.nic_buffer,
+            nic_buffer=nic,
         )
 
 
@@ -234,7 +302,10 @@ def pad_scenario(scn: Scenario, n_flows: int, n_hops: int,
             [scn.sink_switch, np.full((n_links - L,), -1, np.int32)]),
         n_switches=scn.n_switches,
         rtt_steps=pad_f(scn.rtt_steps, 2),
-        nic_buffer=scn.nic_buffer,
+        # per-flow buffers pad with inf (PAD flows never generate);
+        # scalar buffers broadcast on device, so they pass through
+        nic_buffer=pad_f(np.asarray(scn.nic_buffer, np.float32), np.inf)
+        if np.ndim(scn.nic_buffer) else scn.nic_buffer,
     )
 
 

@@ -5,7 +5,12 @@ the whole network is a fixed-shape state advanced by one fused, branch-free
 update per ``dt``.  No event queue exists; flows x hops are vectorised.
 
 Representation (compact, scales to DC-size):
-  * ``routes[F, H]`` — link id crossed at each hop (PAD = -1).
+  * ``routes[F, H]`` — link id crossed at each hop (PAD = -1).  H is
+                       whatever the fabric's route table needs (6 for
+                       the 3-stage CLOS, 2h for an h-level XGFT, 5 for
+                       dragonfly — see ``repro.net``); every update
+                       below is shape-polymorphic in it, and mixed
+                       fabrics pad to a common H when stacked.
   * ``qh[F, H]``     — bytes of flow f queued at the *sink* of wire h
                        (the input buffer of the downstream switch), waiting
                        to cross wire h+1.  The last wire delivers to the
@@ -69,7 +74,10 @@ class Scenario(NamedTuple):
     sink_switch: np.ndarray   # [L] int32 (-1 for host sinks)
     n_switches: int
     rtt_steps: np.ndarray     # [F] int32 CNP feedback delay in dt steps
-    nic_buffer: float = 4e6   # B of host NIC queue
+    # B of host NIC queue: a scalar (shared) or a per-flow [F] array —
+    # mixed workloads give deep buffers to volume-mode collective flows
+    # and shallow ones to window-mode background traffic.
+    nic_buffer: "float | np.ndarray" = 4e6
 
 
 class ScenarioDev(NamedTuple):
@@ -89,7 +97,7 @@ class ScenarioDev(NamedTuple):
     cap_ext: jnp.ndarray      # [L+1] f32 (scratch slot L for PAD scatters)
     sink_ext: jnp.ndarray     # [L+1] int32
     rtt: jnp.ndarray          # [F] int32
-    nic_buffer: jnp.ndarray   # [] f32
+    nic_buffer: jnp.ndarray   # [F] f32 (host scalars broadcast per flow)
 
 
 class StepParams(NamedTuple):
@@ -208,7 +216,11 @@ def scenario_device(scn: Scenario) -> ScenarioDev:
         sink_ext=jnp.asarray(
             np.concatenate([scn.sink_switch, [-1]]), jnp.int32),
         rtt=jnp.asarray(scn.rtt_steps, jnp.int32),
-        nic_buffer=jnp.asarray(scn.nic_buffer, jnp.float32),
+        # broadcast to [F] so scalar- and per-flow-buffer scenarios share
+        # one device shape (batched sweeps stack them along a run axis)
+        nic_buffer=jnp.broadcast_to(
+            jnp.asarray(scn.nic_buffer, jnp.float32),
+            scn.routes.shape[:1]),
     )
 
 

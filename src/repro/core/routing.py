@@ -34,14 +34,18 @@ PAD = -1
 def clos_route(idx: ClosIndex, src: int, dst: int, roll: int = 0) -> list[int]:
     """Directed-link id sequence for src node -> dst node (D-mod-K)."""
     a = idx.arity
+    if roll not in (0, 1):
+        raise ValueError(f"roll must be 0 or 1, got {roll}")
     if src == dst:
         return []
     s_leaf, d_leaf = src // a, dst // a
     s_grp, d_grp = s_leaf // a, d_leaf // a
-    # digit selectors for up-path balancing
+    # digit selectors for up-path balancing: roll rotates which base-a
+    # digit of dst picks each stage's uplink.
+    # roll=0: leaf uses dst%a,     agg uses (dst//a)%a.
+    # roll=1: leaf uses (dst//a)%a, agg uses dst%a  (swapped).
     digit0 = (dst // (a ** roll)) % a            # leaf uplink choice
-    digit1 = (dst // (a ** (1 - 0))) % a if roll == 0 else dst % a
-    # (roll=0: leaf uses d%a, agg uses (d//a)%a.  roll=1: swapped.)
+    digit1 = (dst // (a ** (1 - roll))) % a      # agg uplink (spine digit)
 
     path = [idx.nic_up(src)]
     if d_leaf == s_leaf:

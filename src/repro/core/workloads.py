@@ -1,0 +1,280 @@
+"""Collective-workload generator: communication patterns of real apps.
+
+The paper's verdicts hinge on congestion *dynamics*, which are set by
+what applications actually do on the wire — collectives, incast storms,
+hotspots, bursts — not just the §II 5-flow scene.  Each generator here
+emits a ``Workload``: plain per-flow tuples (src, dst, start, stop,
+volume, rate) that compile through ``ScenarioSpec.from_workload`` to
+the padded/stackable ``Scenario`` tensors, so any (fabric x workload)
+point drops straight into one-jit ``Sweep`` evaluation:
+
+    from repro.core import PAPER_CONFIG, CCScheme, Sweep
+    from repro.core.workloads import ring_allreduce, incast_storm
+    from repro.net import FabricSpec
+
+    fab = FabricSpec.fat_tree(4, taper=2)
+    Sweep.grid(
+        configs={s.name: PAPER_CONFIG.replace(scheme=s) for s in CCScheme},
+        scenarios={
+            "ring": ring_allreduce(16, 8e6).spec(fabric=fab),
+            "storm": incast_storm(24, 4, 64, volume=2e6).spec(fabric=fab),
+        }).run()
+
+Phases are modelled by staggered start times (the fluid model has no
+inter-flow dependencies): phase p opens at ``t0 + p * phase_gap``,
+with ``phase_gap`` defaulting to the slack-scaled serialisation time
+of one phase's bytes at line rate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .experiments import ScenarioSpec
+
+LINE_RATE = 12.5e9            # B/s default for phase-gap sizing only
+INF = float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """Per-flow traffic description as plain (hashable) tuples."""
+
+    src: tuple[int, ...]
+    dst: tuple[int, ...]
+    t_start: tuple[float, ...]
+    t_stop: tuple[float, ...]          # inf with finite volume = work mode
+    volume: tuple[float, ...]          # bytes; inf = window-limited
+    # B/s per flow; None = all at line rate.  Workloads are built before
+    # the config's line rate is known, so two sentinels resolve at
+    # ``build(cfg)`` time: an entry of inf means "line rate", and a
+    # negative entry -f means "fraction f of line rate".
+    rate: tuple[float, ...] | None = None
+    label: str = "workload"
+
+    @property
+    def n_flows(self) -> int:
+        return len(self.src)
+
+    def spec(self, fabric=None, **kw) -> ScenarioSpec:
+        """Compile onto a fabric (see ScenarioSpec.from_workload)."""
+        return ScenarioSpec.from_workload(self, fabric=fabric, **kw)
+
+    def __post_init__(self):
+        n = len(self.src)
+        for f in ("dst", "t_start", "t_stop", "volume"):
+            if len(getattr(self, f)) != n:
+                raise ValueError(f"{f} has {len(getattr(self, f))} entries "
+                                 f"for {n} flows")
+        if self.rate is not None and len(self.rate) != n:
+            raise ValueError("rate length mismatch")
+
+
+def concat(*workloads: Workload, label: str | None = None) -> Workload:
+    """Mix workloads into one (e.g. a collective + background traffic)."""
+    if not workloads:
+        raise ValueError("nothing to concat")
+    rates = [w.rate or (INF,) * w.n_flows for w in workloads]
+    return Workload(
+        src=sum((w.src for w in workloads), ()),
+        dst=sum((w.dst for w in workloads), ()),
+        t_start=sum((w.t_start for w in workloads), ()),
+        t_stop=sum((w.t_stop for w in workloads), ()),
+        volume=sum((w.volume for w in workloads), ()),
+        rate=sum((tuple(r) for r in rates), ()),
+        label=label or "+".join(w.label for w in workloads))
+
+
+def _mk(src, dst, t0, t1, vol, rate=None, label="workload") -> Workload:
+    return Workload(
+        src=tuple(int(s) for s in src), dst=tuple(int(d) for d in dst),
+        t_start=tuple(float(t) for t in t0),
+        t_stop=tuple(float(t) for t in t1),
+        volume=tuple(float(v) for v in vol),
+        rate=None if rate is None else tuple(float(r) for r in rate),
+        label=label)
+
+
+def _gap(bytes_per_flow: float, line_rate: float, slack: float) -> float:
+    return slack * bytes_per_flow / line_rate
+
+
+# ---------------------------------------------------------------------------
+# collectives
+# ---------------------------------------------------------------------------
+
+
+def all_to_all(n_nodes: int, volume: float, *, phases: int | None = None,
+               phase_gap: float | None = None, t_start: float = 0.0,
+               line_rate: float = LINE_RATE, slack: float = 2.0,
+               nodes=None) -> Workload:
+    """Phased all-to-all: shift k sends node i -> (i+k) % n.
+
+    The n-1 shifts are spread over ``phases`` groups (default: one
+    phase per shift, the classic ring-ordered exchange); each phase
+    opens ``phase_gap`` after the previous.  ``volume`` is bytes per
+    (src, dst) pair; ``nodes`` restricts the participant set.
+    """
+    nodes = list(range(n_nodes)) if nodes is None else list(nodes)
+    n = len(nodes)
+    if n < 2:
+        raise ValueError("all_to_all needs >= 2 participants")
+    phases = n - 1 if phases is None else int(phases)
+    if not 1 <= phases <= n - 1:
+        raise ValueError(f"phases must be in [1, {n - 1}]")
+    shifts_per_phase = -(-(n - 1) // phases)
+    if phase_gap is None:
+        phase_gap = _gap(volume * shifts_per_phase, line_rate, slack)
+    src, dst, t0 = [], [], []
+    for k in range(1, n):
+        p = (k - 1) % phases
+        for i in range(n):
+            src.append(nodes[i])
+            dst.append(nodes[(i + k) % n])
+            t0.append(t_start + p * phase_gap)
+    return _mk(src, dst, t0, [INF] * len(src), [volume] * len(src),
+               label=f"a2a{n}p{phases}")
+
+
+def ring_allreduce(n_nodes: int, bytes_total: float, *,
+                   phased: bool = False, phase_gap: float | None = None,
+                   t_start: float = 0.0, line_rate: float = LINE_RATE,
+                   slack: float = 2.0, nodes=None) -> Workload:
+    """Ring allreduce: reduce-scatter + allgather over neighbour links.
+
+    Unphased (default): each node's 2(n-1) chunk sends to its ring
+    successor coalesce into one volume-mode flow of 2(n-1)/n * S bytes
+    — the collective's true per-link traffic.  ``phased=True`` emits
+    all 2(n-1) steps as separate staggered flows (n flows per step).
+    """
+    nodes = list(range(n_nodes)) if nodes is None else list(nodes)
+    n = len(nodes)
+    if n < 2:
+        raise ValueError("ring needs >= 2 participants")
+    chunk = bytes_total / n
+    succ = [nodes[(i + 1) % n] for i in range(n)]
+    if not phased:
+        vol = 2 * (n - 1) * chunk
+        return _mk(nodes, succ, [t_start] * n, [INF] * n, [vol] * n,
+                   label=f"ring{n}")
+    if phase_gap is None:
+        phase_gap = _gap(chunk, line_rate, slack)
+    src, dst, t0 = [], [], []
+    for step in range(2 * (n - 1)):
+        for i in range(n):
+            src.append(nodes[i])
+            dst.append(succ[i])
+            t0.append(t_start + step * phase_gap)
+    return _mk(src, dst, t0, [INF] * len(src), [chunk] * len(src),
+               label=f"ring{n}phased")
+
+
+def recursive_doubling_allreduce(n_nodes: int, bytes_total: float, *,
+                                 phase_gap: float | None = None,
+                                 t_start: float = 0.0,
+                                 line_rate: float = LINE_RATE,
+                                 slack: float = 2.0,
+                                 nodes=None) -> Workload:
+    """Recursive-doubling allreduce: log2(n) rounds of pairwise
+    exchanges at distance 2^r, each carrying the full vector.
+
+    The distance doubles every round, so successive rounds climb the
+    fabric — late rounds are the bisection-stressing ones.
+    """
+    nodes = list(range(n_nodes)) if nodes is None else list(nodes)
+    n = len(nodes)
+    if n < 2 or n & (n - 1):
+        raise ValueError(f"recursive doubling needs a power-of-two "
+                         f"participant count, got {n}")
+    if phase_gap is None:
+        phase_gap = _gap(bytes_total, line_rate, slack)
+    src, dst, t0 = [], [], []
+    rounds = n.bit_length() - 1
+    for r in range(rounds):
+        for i in range(n):
+            src.append(nodes[i])
+            dst.append(nodes[i ^ (1 << r)])
+            t0.append(t_start + r * phase_gap)
+    return _mk(src, dst, t0, [INF] * len(src), [bytes_total] * len(src),
+               label=f"rdbl{n}")
+
+
+# ---------------------------------------------------------------------------
+# storms, hotspots, bursts
+# ---------------------------------------------------------------------------
+
+
+def incast_storm(n_senders: int, n_receivers: int, n_nodes: int, *,
+                 volume: float = INF, t_start: float = 1e-3,
+                 t_stop: float = 3e-3, seed: int = 0) -> Workload:
+    """n-to-m incast: ``n_senders`` sources fan into ``n_receivers``
+    sinks round-robin (each sink absorbs ~n/m flows).  With a finite
+    ``volume`` the storm is equal-work; otherwise window-mode."""
+    if n_senders + n_receivers > n_nodes:
+        raise ValueError(f"{n_senders}+{n_receivers} endpoints exceed "
+                         f"{n_nodes} hosts")
+    rng = np.random.RandomState(seed)
+    picks = rng.permutation(n_nodes)[: n_senders + n_receivers]
+    recv, send = picks[:n_receivers], picks[n_receivers:]
+    dst = [int(recv[i % n_receivers]) for i in range(n_senders)]
+    stop = INF if np.isfinite(volume) else t_stop
+    return _mk(send, dst, [t_start] * n_senders, [stop] * n_senders,
+               [volume] * n_senders,
+               label=f"storm{n_senders}to{n_receivers}")
+
+
+def hotspot(n_flows: int, n_nodes: int, *, hot_frac: float = 0.5,
+            hot_node: int = 0, bg_rate_frac: float = 0.5,
+            t_start: float = 0.5e-3, t_stop: float = 3e-3,
+            seed: int = 0) -> Workload:
+    """Hotspot mix: ``hot_frac`` of the flows converge on ``hot_node``
+    at line rate; the rest are random-pair background at
+    ``bg_rate_frac`` of line rate (the tenants a throttler must not
+    collaterally damage).  Rates use the config-agnostic sentinels
+    (inf = line rate, -f = fraction f of it), so the workload tracks
+    whatever line rate the scenario builds against."""
+    rng = np.random.RandomState(seed)
+    n_hot = int(round(n_flows * hot_frac))
+    src, dst, rate = [], [], []
+    others = [v for v in range(n_nodes) if v != hot_node]
+    for i in range(n_hot):
+        src.append(others[int(rng.randint(len(others)))])
+        dst.append(hot_node)
+        rate.append(INF)
+    for i in range(n_flows - n_hot):
+        s = int(rng.randint(n_nodes))
+        d = int(rng.randint(n_nodes - 1))
+        d = d + 1 if d >= s else d
+        src.append(s)
+        dst.append(d)
+        rate.append(-bg_rate_frac)
+    n = len(src)
+    return _mk(src, dst, [t_start] * n, [t_stop] * n, [INF] * n, rate,
+               label=f"hot{n_flows}f{hot_frac:g}")
+
+
+def bursty(n_flows: int, n_nodes: int, *, on: float = 0.3e-3,
+           off: float = 0.7e-3, n_bursts: int = 3, t_start: float = 0.0,
+           jitter: float = 0.5, seed: int = 0) -> Workload:
+    """Bursty on/off arrivals: each of ``n_flows`` random pairs fires
+    ``n_bursts`` line-rate bursts of ``on`` seconds separated by ``off``
+    seconds, with per-flow phase jitter — every burst is its own
+    window-mode flow entry sharing the pair's route."""
+    rng = np.random.RandomState(seed)
+    src, dst, t0, t1 = [], [], [], []
+    period = on + off
+    for f in range(n_flows):
+        s = int(rng.randint(n_nodes))
+        d = int(rng.randint(n_nodes - 1))
+        d = d + 1 if d >= s else d
+        phase = float(rng.rand()) * jitter * period
+        for b in range(n_bursts):
+            t0.append(t_start + phase + b * period)
+            t1.append(t0[-1] + on)
+            src.append(s)
+            dst.append(d)
+    n = len(src)
+    return _mk(src, dst, t0, t1, [INF] * n,
+               label=f"burst{n_flows}x{n_bursts}")

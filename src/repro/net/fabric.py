@@ -1,0 +1,137 @@
+"""FabricSpec — declarative, hashable fabric descriptions.
+
+A ``FabricSpec`` names a topology family + its parameters as plain
+data, so it can sit inside a (frozen, hashable) ``ScenarioSpec`` and
+key jit/result caches.  ``build`` / ``route_table`` materialise the
+``Topology`` and its validated ``RouteTable`` once per (spec,
+line_rate) — sweeping 3 CC schemes over one fabric builds its table a
+single time.
+
+Families:
+  * ``clos3``      — the paper's 3-stage CLOS (closed-form D-mod-K,
+                     materialised as a table; ``roll`` picks the wiring)
+  * ``xgft``       — XGFT(h; m; w) with arbitrary arities / tapering
+  * ``fat_tree``   — sugar: k-ary 3-level XGFT with a leaf taper
+  * ``dragonfly``  — dragonfly(a, p, h[, groups]), minimal routing
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from repro.core.topology import Topology, make_clos3
+
+from .routing import (RouteTable, clos_route_table, dragonfly_route_table,
+                      validate_table, xgft_route_table)
+from .topologies import fat_tree_mw, make_dragonfly, make_xgft
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricSpec:
+    """One fabric as plain data; ``build``/``route_table`` are cached."""
+
+    kind: str = "clos3"           # clos3 | xgft | dragonfly
+    arity: int = 4                # clos3
+    roll: int = 0                 # D-mod-K digit roll (clos3 / xgft)
+    m: tuple[int, ...] = ()       # xgft down-arities
+    w: tuple[int, ...] = ()       # xgft parent multiplicities
+    a: int = 4                    # dragonfly routers / group
+    p: int = 2                    # dragonfly hosts / router
+    h: int = 2                    # dragonfly global ports / router
+    groups: int | None = None     # dragonfly groups (None = a*h + 1)
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def clos3(cls, arity: int = 4, roll: int = 0) -> "FabricSpec":
+        return cls(kind="clos3", arity=arity, roll=roll)
+
+    @classmethod
+    def xgft(cls, m, w, roll: int = 0) -> "FabricSpec":
+        return cls(kind="xgft", m=tuple(int(v) for v in m),
+                   w=tuple(int(v) for v in w), roll=roll)
+
+    @classmethod
+    def fat_tree(cls, arity: int = 4, taper: int = 1, levels: int = 3,
+                 roll: int = 0) -> "FabricSpec":
+        """k-ary fat tree; ``taper=2`` gives 2:1 leaf oversubscription."""
+        return cls.xgft(*fat_tree_mw(arity, taper, levels), roll=roll)
+
+    @classmethod
+    def dragonfly(cls, a: int = 4, p: int = 2, h: int = 2,
+                  groups: int | None = None) -> "FabricSpec":
+        return cls(kind="dragonfly", a=a, p=p, h=h, groups=groups)
+
+    # -- materialisation ----------------------------------------------------
+
+    @property
+    def name(self) -> str:
+        if self.kind == "clos3":
+            return f"clos{self.arity ** 3}" + \
+                (f"_r{self.roll}" if self.roll else "")
+        if self.kind == "xgft":
+            return ("xgft" + "x".join(map(str, self.m)) + "_w"
+                    + "x".join(map(str, self.w)))
+        g = self.a * self.h + 1 if self.groups is None else self.groups
+        return f"dfly_a{self.a}p{self.p}h{self.h}g{g}"
+
+    @property
+    def n_nodes(self) -> int:
+        if self.kind == "clos3":
+            return self.arity ** 3
+        if self.kind == "xgft":
+            n = 1
+            for v in self.m:
+                n *= v
+            return n
+        g = self.a * self.h + 1 if self.groups is None else self.groups
+        return g * self.a * self.p
+
+    def build(self, line_rate: float = 12.5e9) -> Topology:
+        return _build_topo(self, float(line_rate))
+
+    def route_table(self) -> RouteTable:
+        """The fabric's validated route table.
+
+        Tables are pure structure — link *ids*, not capacities — so the
+        cache is keyed on the spec alone; sweeping line rates never
+        rebuilds the O(N^2 * H) table.
+        """
+        return _build_table(self)
+
+
+@functools.lru_cache(maxsize=64)
+def _build_topo(spec: FabricSpec, line_rate: float) -> Topology:
+    """Materialise one fabric's Topology; cached per (spec, line_rate).
+
+    The returned arrays are shared across callers — treat as read-only.
+    """
+    if spec.kind == "clos3":
+        return make_clos3(arity=spec.arity, line_rate=line_rate,
+                          name=spec.name)
+    if spec.kind == "xgft":
+        return make_xgft(spec.m, spec.w, line_rate=line_rate,
+                         name=spec.name)[0]
+    if spec.kind == "dragonfly":
+        return make_dragonfly(spec.a, spec.p, spec.h, groups=spec.groups,
+                              line_rate=line_rate, name=spec.name)[0]
+    raise ValueError(f"unknown fabric kind: {spec.kind!r}")
+
+
+@functools.lru_cache(maxsize=64)
+def _build_table(spec: FabricSpec) -> RouteTable:
+    """Build + validate one fabric's route table; cached per spec."""
+    if spec.kind == "clos3":
+        table = clos_route_table(spec.arity, roll=spec.roll)
+    elif spec.kind == "xgft":
+        _, idx = make_xgft(spec.m, spec.w)
+        table = xgft_route_table(idx, roll=spec.roll)
+    elif spec.kind == "dragonfly":
+        _, idx = make_dragonfly(spec.a, spec.p, spec.h,
+                                groups=spec.groups)
+        table = dragonfly_route_table(idx)
+    else:
+        raise ValueError(f"unknown fabric kind: {spec.kind!r}")
+    validate_table(_build_topo(spec, 12.5e9), table)
+    return table

@@ -1,0 +1,231 @@
+"""Table-driven routing: precomputed per-(src,dst) padded link-id paths.
+
+The general routing path of the repo: every fabric family provides a
+*table builder* that emits a ``RouteTable`` — a dense
+``[N, N, H_MAX]`` int32 array of directed-link ids (PAD = -1, trailing)
+with per-pair hop counts — and every scenario then routes by table
+lookup (``routes_for_pairs``).  ``H_MAX`` varies by fabric (2h for an
+h-level XGFT, 5 for a dragonfly), replacing the CLOS-only hardwired
+``H_MAX = 6``; the fluid model is shape-polymorphic in hops, and mixed
+fabrics pad to a common H when stacked into one Sweep.
+
+The closed-form CLOS D-mod-K of ``repro.core.routing`` survives as one
+table builder among several (``clos_route_table``) — same link ids,
+same wirings (``roll``), just materialised once per fabric instead of
+recomputed per flow.
+
+``validate_table`` is the vectorised validity checker every builder is
+held to: paths start at the source host, end at the destination host,
+consecutive links share a switch, and padding is trailing-only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.routing import PAD, clos_route
+from repro.core.topology import ClosIndex, Topology
+
+from .topologies import DragonflyIndex, XGFTIndex
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteTable:
+    """Dense per-(src,dst) padded link-id paths for one fabric.
+
+    ``paths[s, d, :hops[s, d]]`` are real link ids; the rest is PAD.
+    ``paths[s, s]`` is all-PAD (no self-traffic).
+    """
+
+    paths: np.ndarray             # [N, N, H_MAX] int32, PAD-padded
+    hops: np.ndarray              # [N, N] int32
+
+    @property
+    def n_nodes(self) -> int:
+        return self.paths.shape[0]
+
+    @property
+    def h_max(self) -> int:
+        return self.paths.shape[2]
+
+    def routes_for_pairs(self, pairs) -> np.ndarray:
+        """[F, H_MAX] int32 route matrix for (src, dst) pairs."""
+        if not len(pairs):
+            return np.empty((0, self.h_max), np.int32)
+        idx = np.asarray(pairs, np.int64)
+        if idx.ndim != 2 or idx.shape[1] != 2:
+            raise ValueError(f"pairs must be [F, 2], got {idx.shape}")
+        if (idx < 0).any() or (idx >= self.n_nodes).any():
+            raise ValueError(
+                f"pair endpoints must be host ids in [0, {self.n_nodes})")
+        return self.paths[idx[:, 0], idx[:, 1]].copy()
+
+    def link_load(self, n_links: int,
+                  pairs=None) -> np.ndarray:
+        """Flow-routes crossing each link (all-to-all, or given pairs)."""
+        routes = (self.paths.reshape(-1, self.h_max) if pairs is None
+                  else self.routes_for_pairs(pairs))
+        ids = routes[routes != PAD]
+        return np.bincount(ids, minlength=n_links).astype(np.int64)
+
+
+def _from_path_fn(n: int, h_max: int, path_fn) -> RouteTable:
+    """Materialise ``path_fn(s, d) -> list[int]`` into a RouteTable."""
+    paths = np.full((n, n, h_max), PAD, np.int32)
+    hops = np.zeros((n, n), np.int32)
+    for s in range(n):
+        for d in range(n):
+            if s == d:
+                continue
+            p = path_fn(s, d)
+            if len(p) > h_max:
+                raise ValueError(
+                    f"path {s}->{d} has {len(p)} hops > H_MAX={h_max}")
+            paths[s, d, : len(p)] = p
+            hops[s, d] = len(p)
+    return RouteTable(paths=paths, hops=hops)
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+
+
+def clos_route_table(arity: int = 4, roll: int = 0) -> RouteTable:
+    """The 3-stage CLOS closed form, materialised as a table (H_MAX=6)."""
+    idx = ClosIndex(arity)
+    n = arity ** 3
+    return _from_path_fn(n, 6, lambda s, d: clos_route(idx, s, d, roll=roll))
+
+
+def xgft_path(idx: XGFTIndex, s: int, d: int, roll: int = 0) -> list[int]:
+    """Deterministic D-mod-K up-down path in XGFT(h; m; w).
+
+    Ascends to the lowest common ancestor level L (highest host digit
+    where s and d differ); the up-link slot at each level j is a
+    destination digit — ``(d // W[(j-1+roll) % h]) % w_j`` with
+    ``W[k] = prod(w[:k])`` — so all-to-all traffic spreads evenly over
+    every up stage; the down path is forced by d's digits.
+    """
+    if s == d:
+        return []
+    h, m, w = idx.h, idx.m, idx.w
+    sx, dx = idx.host_digits(s), idx.host_digits(d)
+    L = max(j for j in range(1, h + 1) if sx[j - 1] != dx[j - 1])
+    W = [1]
+    for j in range(1, h):
+        W.append(W[-1] * w[j - 1])
+    path = []
+    y = [0] * h
+    cur = s                                     # level-0 index = host id
+    for j in range(1, L + 1):                   # ascend, choosing y_j
+        y[j - 1] = (d // W[(j - 1 + roll) % h]) % w[j - 1]
+        path.append(idx.up(j, cur, y[j - 1]))
+        cur = idx.node_index(j, sx, y)
+    for j in range(L, 0, -1):                   # descend along d's digits
+        path.append(idx.dn(j, cur, dx[j - 1]))
+        # the level-(j-1) child has d's x-digits at every position >= j
+        # (above L they equal s's) and the ascent's y-digits below j
+        cur = idx.node_index(j - 1, dx, y)
+    return path
+
+
+def xgft_route_table(idx: XGFTIndex, roll: int = 0) -> RouteTable:
+    """D-mod-K table for an XGFT; H_MAX = 2 * levels."""
+    return _from_path_fn(idx.n_hosts, 2 * idx.h,
+                         lambda s, d: xgft_path(idx, s, d, roll=roll))
+
+
+def dragonfly_path(idx: DragonflyIndex, s: int, d: int) -> list[int]:
+    """Minimal dragonfly route: local -> global -> local (<= 5 links)."""
+    if s == d:
+        return []
+    a, p = idx.a, idx.p
+    rs, rd = (s // p) % a, (d // p) % a
+    gs, gd = s // (a * p), d // (a * p)
+    up, dn = s, idx.n_hosts + d
+    if gs == gd:
+        if rs == rd:
+            return [up, dn]
+        return [up, idx.local(gs, rs, rd), dn]
+    path = [up]
+    gw = idx.gl_owner(gs, gd)                   # gateway router in gs
+    if rs != gw:
+        path.append(idx.local(gs, rs, gw))
+    path.append(idx.gl_port(gs, gd))
+    rin = idx.gl_owner(gd, gs)                  # arrival router in gd
+    if rin != rd:
+        path.append(idx.local(gd, rin, rd))
+    path.append(dn)
+    return path
+
+
+def dragonfly_route_table(idx: DragonflyIndex) -> RouteTable:
+    """Minimal-route table for a dragonfly; H_MAX = 5."""
+    return _from_path_fn(idx.n_hosts, 5,
+                         lambda s, d: dragonfly_path(idx, s, d))
+
+
+# ---------------------------------------------------------------------------
+# validity checking
+# ---------------------------------------------------------------------------
+
+
+def validate_table(topo: Topology, table: RouteTable) -> None:
+    """Structural validity of a full route table (vectorised).
+
+    Raises AssertionError unless, for every (s, d) pair with s != d:
+    the first link leaves host s, the last link delivers to host d,
+    consecutive links share a switch (sink(h) == source(h+1)), all
+    link ids are in range, and padding is trailing-only.
+    """
+    n, h = table.n_nodes, table.h_max
+    paths, hops = table.paths, table.hops
+    if topo.n_nodes != n:
+        raise AssertionError(
+            f"table is for {n} hosts, topology has {topo.n_nodes}")
+    valid = paths != PAD
+    # trailing-only padding, and hops consistent with the mask
+    want = np.arange(h)[None, None, :] < hops[..., None]
+    if not (valid == want).all():
+        raise AssertionError("non-trailing PAD or hops/path mismatch")
+    off = ~np.eye(n, dtype=bool)
+    if not (hops[off] >= 2).all() or (hops.diagonal() != 0).any():
+        raise AssertionError("every s != d path needs >= 2 links "
+                             "(host up + host down); s == s must be empty")
+    ids = paths[valid]
+    if ids.size and (ids.min() < 0 or ids.max() >= topo.n_links):
+        raise AssertionError("link id out of range")
+    # endpoint checks
+    s_idx, d_idx = np.nonzero(off)
+    first = paths[s_idx, d_idx, 0]
+    last = paths[s_idx, d_idx, hops[s_idx, d_idx] - 1]
+    if not (topo.link_src[first] == -(s_idx + 1)).all():
+        bad = int(np.argmax(topo.link_src[first] != -(s_idx + 1)))
+        raise AssertionError(
+            f"path {s_idx[bad]}->{d_idx[bad]} does not start at its "
+            f"source host")
+    if not (topo.link_dst[last] == -(d_idx + 1)).all():
+        bad = int(np.argmax(topo.link_dst[last] != -(d_idx + 1)))
+        raise AssertionError(
+            f"path {s_idx[bad]}->{d_idx[bad]} does not sink at its "
+            f"destination host")
+    # consecutive links share a switch
+    a, b = paths[..., :-1], paths[..., 1:]
+    both = (a != PAD) & (b != PAD)
+    sink = topo.link_dst[np.where(both, a, 0)]
+    srcn = topo.link_src[np.where(both, b, 0)]
+    ok = ~both | ((sink == srcn) & (sink >= 0))
+    if not ok.all():
+        s, d, j = (int(x[0]) for x in np.nonzero(~ok))
+        raise AssertionError(
+            f"path {s}->{d}: hop {j} sinks at {topo.link_dst[paths[s,d,j]]}"
+            f" but hop {j+1} departs {topo.link_src[paths[s,d,j+1]]}")
+
+
+def stage_balance(load: np.ndarray, ids: np.ndarray) -> tuple[int, int]:
+    """(min, max) flow load over one stage's link ids."""
+    sel = load[ids]
+    return int(sel.min()), int(sel.max())

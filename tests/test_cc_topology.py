@@ -87,3 +87,60 @@ def test_generic_arity_scales():
     pairs = [(0, 511), (100, 200)]
     routes = build_flow_routes(topo, pairs, arity=8)
     validate_routes(topo, routes)
+
+
+# ---------------------------------------------------------------------------
+# route-validity property: the D-mod-K invariants, all arities x rolls
+# (pins the digit-selector semantics so rewrites of the once-confusing
+#  `digit1` expression can't silently change a wiring)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arity", [2, 3, 4])
+@pytest.mark.parametrize("roll", [0, 1])
+def test_dmodk_route_properties(arity, roll):
+    """All-to-all: consecutive links share a switch, first/last hops
+    are the endpoint hosts, and every up stage is EXACTLY balanced."""
+    topo = make_clos3(arity=arity)
+    n = topo.n_nodes
+    pairs = [(s, d) for s in range(n) for d in range(n) if s != d]
+    routes = build_flow_routes(topo, pairs, arity=arity, roll=roll)
+    validate_routes(topo, routes)            # consecutive-hop invariant
+    hops = route_hops(routes)
+    first = routes[np.arange(len(pairs)), 0]
+    last = routes[np.arange(len(pairs)), hops - 1]
+    srcs = np.asarray([p[0] for p in pairs])
+    dsts = np.asarray([p[1] for p in pairs])
+    assert (topo.link_src[first] == -(srcs + 1)).all()
+    assert (topo.link_dst[last] == -(dsts + 1)).all()    # sinks at dst
+    # per-stage uplink balance.  roll=0 spreads all-to-all EXACTLY at
+    # both stages; roll=1's leaf stage is near-balanced (same-leaf
+    # destinations deplete the slot matching the leaf's own digit) and
+    # its agg stage is exact again.
+    load = stage_load(routes, topo.n_links)
+    a3 = arity ** 3
+    leaf_up = load[a3: 2 * a3]
+    agg_up = load[2 * a3: 3 * a3]
+    assert agg_up.min() == agg_up.max() == arity ** 2 * (arity - 1)
+    if roll == 0:
+        assert leaf_up.min() == leaf_up.max() == arity * (arity ** 2 - 1)
+    else:
+        assert leaf_up.max() <= 2 * leaf_up.min()
+        assert leaf_up.sum() == leaf_up.size * arity * (arity ** 2 - 1)
+
+
+def test_clos_route_rejects_unknown_roll():
+    with pytest.raises(ValueError, match="roll"):
+        clos_route(ClosIndex(4), 0, 16, roll=2)
+
+
+def test_digit_roll_swaps_stage_selectors():
+    """roll=1 swaps the digit selectors: (d//a)%a at the leaf and
+    d%a at the agg — the exact wiring the paper's Fig. 2 needs."""
+    idx = ClosIndex(4)
+    # dst=17: digits (d%4, (d//4)%4) = (1, 0)
+    p0 = clos_route(idx, 32, 17, roll=0)
+    p1 = clos_route(idx, 32, 17, roll=1)
+    assert p0[1] == idx.leaf_up(8, 1)        # roll=0 leaf digit: d%a
+    assert p1[1] == idx.leaf_up(8, 0)        # roll=1 leaf digit: (d//a)%a
+    assert p0[2] == idx.agg_up(2, 1, 0)      # roll=0 agg digit: (d//a)%a
+    assert p1[2] == idx.agg_up(2, 0, 1)      # roll=1 agg digit: d%a

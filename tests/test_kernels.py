@@ -121,7 +121,10 @@ def _rp_params(dt=1e-6):
                         min_rate=1e6, line_rate=12.5e9, dt=dt)
 
 
-@pytest.mark.parametrize("F", [1, 5, 130, 8192, 100_001])
+# F values straddle every _pad_to_grid boundary: sub-lane (1, 5, 127),
+# one-over-lane (129, 130), exactly one grid block (8192), one-over-block
+# (8193), and multi-block ragged (100_001).
+@pytest.mark.parametrize("F", [1, 5, 127, 129, 130, 8192, 8193, 100_001])
 def test_rp_kernel_matches_ref(F):
     r = np.random.RandomState(F)
     st = ref.RPState(
@@ -141,8 +144,8 @@ def test_rp_kernel_matches_ref(F):
                                    err_msg=f"F={F} {name}")
 
 
-def test_erp_kernel_matches_ref():
-    F = 50_000
+@pytest.mark.parametrize("F", [1, 127, 129, 8193, 50_000])
+def test_erp_kernel_matches_ref(F):
     r = np.random.RandomState(7)
     p = ref.ERPParams(settle=0.98, hold=50e-6, min_rate=1e6,
                       line_rate=12.5e9, dt=1e-6)

@@ -1,0 +1,197 @@
+"""repro.net: topology zoo, route tables, validity, fabric sweeps."""
+
+import numpy as np
+import pytest
+
+from repro.core import CCScheme, PAPER_CONFIG, ScenarioSpec, Sweep, run
+from repro.core.routing import build_flow_routes
+from repro.core.topology import make_paper_clos
+from repro.net import (FabricSpec, clos_route_table, dragonfly_route_table,
+                       make_dragonfly, make_fat_tree, make_xgft,
+                       stage_balance, validate_table, xgft_route_table)
+
+CFG = PAPER_CONFIG
+
+
+# ---------------------------------------------------------------------------
+# topology zoo structure
+# ---------------------------------------------------------------------------
+
+def test_xgft_reproduces_paper_clos_counts():
+    """XGFT(3; 4,4,4; 1,4,4) is the paper's 64-node CLOS."""
+    topo, idx = make_xgft((4, 4, 4), (1, 4, 4))
+    ref = make_paper_clos()
+    assert (topo.n_nodes, topo.n_switches, topo.n_links) == \
+        (ref.n_nodes, ref.n_switches, ref.n_links)
+    assert idx.n_hosts == 64 and idx.h == 3
+
+
+def test_xgft_every_link_has_a_mirror():
+    """Each up-link (u -> v) must have a down-link (v -> u)."""
+    topo, _ = make_xgft((3, 2), (1, 2))
+    fwd = set(zip(topo.link_src.tolist(), topo.link_dst.tolist()))
+    assert len(fwd) == topo.n_links          # no duplicate directed links
+    assert all((d, s) in fwd for s, d in fwd)
+
+
+def test_fat_tree_taper_cuts_uplinks():
+    """2:1 taper: leaf stage has half the up-links of the full tree."""
+    full, fi = make_fat_tree(4, taper=1)
+    tapered, ti = make_fat_tree(4, taper=2)
+    assert full.n_nodes == tapered.n_nodes == 64
+    assert len(fi.up_stage_ids(2)) == 2 * len(ti.up_stage_ids(2))
+    # oversubscription shows up as doubled per-link load under all-to-all
+    lf = xgft_route_table(fi).link_load(full.n_links)
+    lt = xgft_route_table(ti).link_load(tapered.n_links)
+    assert stage_balance(lt, ti.up_stage_ids(2))[1] == \
+        2 * stage_balance(lf, fi.up_stage_ids(2))[1]
+
+
+def test_dragonfly_structure():
+    topo, idx = make_dragonfly(a=4, p=2, h=2)
+    assert idx.g == 9                        # canonical a*h + 1
+    assert topo.n_nodes == 9 * 4 * 2
+    assert topo.n_switches == 36
+    # every router: p host-dn + (a-1) local + h global out-links
+    for r in range(topo.n_switches):
+        assert int((topo.link_src == r).sum()) == 2 + 3 + 2
+
+
+def test_dragonfly_global_channels_pair_up():
+    topo, idx = make_dragonfly(a=2, p=1, h=2, groups=4)
+    for g1 in range(4):
+        for g2 in range(4):
+            if g1 == g2:
+                continue
+            lid = idx.gl_port(g1, g2)
+            rid = idx.gl_port(g2, g1)
+            assert topo.link_dst[lid] == topo.link_src[rid]
+            assert topo.link_src[lid] == topo.link_dst[rid]
+
+
+# ---------------------------------------------------------------------------
+# route tables: validity for every family
+# ---------------------------------------------------------------------------
+
+FAMILIES = [
+    FabricSpec.clos3(4, roll=0),
+    FabricSpec.clos3(4, roll=1),
+    FabricSpec.clos3(3),
+    FabricSpec.xgft((4, 4, 4), (1, 4, 4)),
+    FabricSpec.fat_tree(4, taper=2),
+    FabricSpec.xgft((2, 2, 2, 2), (1, 2, 2, 2)),   # 4 levels, H_MAX=8
+    FabricSpec.xgft((4, 4), (2, 3)),               # multi-rail hosts
+    FabricSpec.dragonfly(a=4, p=2, h=2),
+    FabricSpec.dragonfly(a=2, p=2, h=1, groups=3),
+]
+
+
+@pytest.mark.parametrize("fab", FAMILIES, ids=lambda f: f.name)
+def test_route_table_valid(fab):
+    """Every family's full table passes the structural checker."""
+    validate_table(fab.build(), fab.route_table())
+
+
+def test_clos_table_matches_closed_form():
+    """The CLOS table builder is the closed form, memoised."""
+    topo = make_paper_clos()
+    pairs = [(s, d) for s in range(0, 64, 5) for d in range(2, 64, 9)
+             if s != d]
+    for roll in (0, 1):
+        table = clos_route_table(4, roll=roll)
+        np.testing.assert_array_equal(
+            table.routes_for_pairs(pairs),
+            build_flow_routes(topo, pairs, arity=4, roll=roll))
+
+
+def test_xgft_dmodk_balances_every_up_stage():
+    """All-to-all load is EXACTLY equal within each up stage."""
+    for fab_m, fab_w in [((4, 4, 4), (1, 4, 4)), ((2, 2, 2), (1, 2, 2))]:
+        topo, idx = make_xgft(fab_m, fab_w)
+        load = xgft_route_table(idx).link_load(topo.n_links)
+        for l in range(2, idx.h + 1):
+            mn, mx = stage_balance(load, idx.up_stage_ids(l))
+            assert mn == mx, (fab_m, l, mn, mx)
+
+
+def test_dragonfly_global_load_uniform():
+    """One global channel per group pair -> identical all-to-all load."""
+    topo, idx = make_dragonfly(a=2, p=2, h=2)
+    load = dragonfly_route_table(idx).link_load(topo.n_links)
+    mn, mx = stage_balance(load, idx.global_ids())
+    assert mn == mx == (idx.a * idx.p) ** 2
+
+
+def test_dragonfly_paths_at_most_five_links():
+    _, idx = make_dragonfly(a=4, p=2, h=2)
+    table = dragonfly_route_table(idx)
+    assert table.hops.max() == 5
+    assert table.h_max == 5
+
+
+def test_routes_for_pairs_bounds_checked():
+    table = FabricSpec.dragonfly(a=2, p=1, h=1).route_table()
+    with pytest.raises(ValueError):
+        table.routes_for_pairs([(0, table.n_nodes)])
+
+
+def test_fabric_cache_shares_table():
+    f = FabricSpec.fat_tree(4, taper=2)
+    assert f.route_table() is FabricSpec.fat_tree(4, taper=2).route_table()
+    assert hash(f) == hash(FabricSpec.fat_tree(4, taper=2))
+
+
+# ---------------------------------------------------------------------------
+# acceptance: fabrics through the one-jit Sweep, bitwise vs run()
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fabric_sweep():
+    dfly = FabricSpec.dragonfly(a=2, p=2, h=1)          # 12 hosts
+    ft = FabricSpec.fat_tree(4, taper=2)                # 64 hosts, 2:1
+    specs = {
+        "dfly": ScenarioSpec.incast(4, dst=0, victim=None, fabric=dfly,
+                                    label="dfly"),
+        "ft": ScenarioSpec.incast(6, dst=16, fabric=ft, label="ft"),
+    }
+    sweep = Sweep.grid(
+        configs={s.name: CFG.replace(scheme=s) for s in CCScheme},
+        scenarios=specs)
+    return specs, sweep.run(n_steps=1200)
+
+
+@pytest.mark.parametrize("scheme", list(CCScheme))
+@pytest.mark.parametrize("fab", ["dfly", "ft"])
+def test_fabric_sweep_matches_run(fabric_sweep, scheme, fab):
+    """Dragonfly + 2:1 fat-tree x all three schemes in ONE launch,
+    bit-identical to per-point run()."""
+    specs, res = fabric_sweep
+    c = CFG.replace(scheme=scheme)
+    ri = run(specs[fab].build(c), c, n_steps=1200)
+    rs = res[f"{scheme.name}/{fab}"]
+    for field in ("delivered", "rate", "inst_thr", "max_q", "marked",
+                  "cnp"):
+        np.testing.assert_array_equal(
+            getattr(rs, field), getattr(ri, field), err_msg=field)
+
+
+def test_deep_xgft_pads_against_clos():
+    """H_MAX=8 XGFT and H_MAX=6 CLOS stack into one sweep."""
+    deep = FabricSpec.xgft((2, 2, 2, 2), (1, 2, 2, 2))
+    res = Sweep.grid(
+        configs=CFG,
+        scenarios={"deep": ScenarioSpec.permutation(6, fabric=deep,
+                                                    label="deep"),
+                   "clos": ScenarioSpec.paper_incast(roll=0)}
+    ).run(n_steps=600)
+    assert res["deep"].delivered.shape[1] == 6
+    assert res["clos"].delivered.shape[1] == 5
+    scn = ScenarioSpec.permutation(6, fabric=deep).build(CFG)
+    assert scn.routes.shape[1] == 8          # variable-hop route tensors
+    assert (scn.hops <= 8).all() and (scn.hops >= 2).all()
+
+
+def test_fabric_spec_in_scenario_spec_is_hashable():
+    s1 = ScenarioSpec.incast(4, fabric=FabricSpec.dragonfly())
+    s2 = ScenarioSpec.incast(4, fabric=FabricSpec.dragonfly())
+    assert s1 == s2 and hash(s1) == hash(s2)

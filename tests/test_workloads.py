@@ -1,0 +1,151 @@
+"""Collective-workload generator: structure + compilation to Scenario."""
+
+import numpy as np
+import pytest
+
+from repro.core import PAPER_CONFIG, ScenarioSpec, run
+from repro.core.workloads import (Workload, all_to_all, bursty, concat,
+                                  hotspot, incast_storm, ring_allreduce,
+                                  recursive_doubling_allreduce)
+from repro.net import FabricSpec
+
+CFG = PAPER_CONFIG
+
+
+def test_all_to_all_covers_every_ordered_pair_once():
+    n = 6
+    w = all_to_all(n, 1e6)
+    assert w.n_flows == n * (n - 1)
+    assert sorted(zip(w.src, w.dst)) == sorted(
+        (i, j) for i in range(n) for j in range(n) if i != j)
+
+
+def test_all_to_all_phases_stagger_starts():
+    w = all_to_all(6, 1e6, phases=5, phase_gap=1e-4)
+    starts = sorted(set(w.t_start))
+    assert len(starts) == 5
+    np.testing.assert_allclose(np.diff(starts), 1e-4)
+    # fewer phases coalesce shifts but keep every pair
+    w2 = all_to_all(6, 1e6, phases=2)
+    assert len(set(w2.t_start)) == 2 and w2.n_flows == 30
+
+
+def test_ring_allreduce_volume_conservation():
+    """Unphased ring: n neighbour flows of 2(n-1)/n * S bytes each."""
+    n, S = 8, 4e6
+    w = ring_allreduce(n, S)
+    assert w.n_flows == n
+    assert all(d == (s + 1) % n for s, d in zip(w.src, w.dst))
+    np.testing.assert_allclose(w.volume, 2 * (n - 1) / n * S)
+    # phased variant: 2(n-1) steps x n flows of S/n
+    wp = ring_allreduce(n, S, phased=True)
+    assert wp.n_flows == 2 * (n - 1) * n
+    np.testing.assert_allclose(sum(wp.volume), 2 * (n - 1) * S)
+
+
+def test_recursive_doubling_partners_xor():
+    n = 8
+    w = recursive_doubling_allreduce(n, 1e6)
+    assert w.n_flows == n * 3                    # log2(8) rounds
+    rounds = np.asarray(w.t_start)
+    for r, t in enumerate(sorted(set(rounds))):
+        sel = rounds == t
+        for s, d in zip(np.asarray(w.src)[sel], np.asarray(w.dst)[sel]):
+            assert s ^ d == 1 << r
+    with pytest.raises(ValueError):
+        recursive_doubling_allreduce(6, 1e6)     # not a power of two
+
+
+def test_incast_storm_fan_in():
+    w = incast_storm(12, 3, 64, volume=1e6, seed=3)
+    assert w.n_flows == 12
+    dsts, counts = np.unique(w.dst, return_counts=True)
+    assert len(dsts) == 3 and (counts == 4).all()
+    assert not set(w.src) & set(w.dst)           # sinks don't send
+    assert all(v == 1e6 for v in w.volume)
+    assert all(t == float("inf") for t in w.t_stop)   # equal-work mode
+
+
+def test_hotspot_mix_tracks_config_line_rate():
+    """Hot flows ride the inf sentinel, background the -frac sentinel —
+    both must resolve against whatever line rate the config carries."""
+    w = hotspot(20, 64, hot_frac=0.6, hot_node=7, bg_rate_frac=0.25,
+                seed=1)
+    hot = [i for i in range(w.n_flows) if w.dst[i] == 7]
+    assert len(hot) == 12
+    rates = np.asarray(w.rate)
+    assert np.isinf(rates[hot]).all()
+    bg = [i for i in range(w.n_flows) if i not in hot]
+    assert (rates[bg] == -0.25).all()
+    assert all(w.src[i] != w.dst[i] for i in range(w.n_flows))
+    import dataclasses
+    cfg2 = CFG.replace(link=dataclasses.replace(CFG.link, line_rate=25e9))
+    scn = w.spec(fabric=FabricSpec.clos3(4)).build(cfg2)
+    assert (scn.gen_rate[hot] == 25e9).all()
+    assert (scn.gen_rate[bg] == 0.25 * 25e9).all()
+
+
+def test_bursty_on_off_windows():
+    w = bursty(5, 16, on=0.2e-3, off=0.8e-3, n_bursts=4, seed=2)
+    assert w.n_flows == 20
+    t0, t1 = np.asarray(w.t_start), np.asarray(w.t_stop)
+    np.testing.assert_allclose(t1 - t0, 0.2e-3)
+    # bursts of one pair are disjoint and 1 period apart
+    for f in range(5):
+        s = slice(4 * f, 4 * f + 4)
+        np.testing.assert_allclose(np.diff(t0[s]), 1e-3)
+        assert len(set(zip(w.src[s.start:s.stop],
+                           w.dst[s.start:s.stop]))) == 1
+
+
+def test_concat_mixes_and_validates():
+    a = incast_storm(4, 1, 16, volume=1e6)
+    b = hotspot(4, 16)
+    m = concat(a, b)
+    assert m.n_flows == 8
+    assert m.rate is not None and np.isinf(m.rate[0])   # line-rate sentinel
+    with pytest.raises(ValueError):
+        Workload(src=(0,), dst=(1, 2), t_start=(0.0,), t_stop=(1.0,),
+                 volume=(1.0,))
+
+
+# ---------------------------------------------------------------------------
+# compilation to Scenario tensors
+# ---------------------------------------------------------------------------
+
+def test_workload_spec_builds_per_flow_tensors():
+    fab = FabricSpec.dragonfly(a=2, p=2, h=1)           # 12 hosts
+    w = concat(incast_storm(4, 1, 12, volume=3e6),
+               bursty(3, 12, n_bursts=2))
+    scn = w.spec(fabric=fab).build(CFG)
+    F = w.n_flows
+    assert scn.routes.shape == (F, 5)
+    np.testing.assert_allclose(scn.t_start, w.t_start)
+    np.testing.assert_allclose(scn.t_stop, w.t_stop)
+    np.testing.assert_allclose(scn.volume, w.volume)
+    # inf rate sentinel resolved to the config's line rate
+    assert (scn.gen_rate == CFG.link.line_rate).all()
+    # per-flow NIC buffers: 2x volume for work-mode flows, the scalar
+    # default for window-mode ones
+    assert scn.nic_buffer.shape == (F,)
+    np.testing.assert_allclose(scn.nic_buffer[:4], 6e6)
+    np.testing.assert_allclose(scn.nic_buffer[4:], 4e6)
+
+
+def test_workload_runs_and_delivers():
+    """An incast storm on the tapered fat tree delivers its volume."""
+    fab = FabricSpec.fat_tree(4, taper=2)
+    w = incast_storm(6, 2, 64, volume=0.5e6, t_start=0.0, seed=5)
+    res = run(w.spec(fabric=fab).build(CFG), CFG, n_steps=3000)
+    np.testing.assert_allclose(
+        np.asarray(res.final.delivered), 0.5e6, rtol=1e-3)
+
+
+def test_flowspec_length_mismatch_raises():
+    spec = ScenarioSpec(kind="flowspec", flow_src=(0, 1), flow_dst=(2,))
+    with pytest.raises(ValueError):
+        spec.build(CFG)
+    spec2 = ScenarioSpec(kind="flowspec", flow_src=(0, 1),
+                         flow_dst=(2, 3), flow_t_start=(0.0,))
+    with pytest.raises(ValueError):
+        spec2.build(CFG)
