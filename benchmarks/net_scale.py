@@ -6,6 +6,11 @@ Sweep as one jitted launch and report wall time and simulated
 steps/second.  Every invocation appends a record to ``BENCH_net.json``
 at the repo root so the perf trajectory accumulates across commits.
 
+The routing matrix rides along: the adversarial group-shift dragonfly
+cell sweeps {min, valiant, ugal} x all schemes in ONE launch and
+records delivered bytes per (scheme, routing) — the record asserts the
+paper-level ordering ``ugal >= min`` on that pattern.
+
     PYTHONPATH=src python benchmarks/run.py --scale            # full
     PYTHONPATH=src python benchmarks/run.py --scale --quick    # CI-sized
 """
@@ -91,6 +96,52 @@ def run_matrix(quick: bool = False, n_steps: int = 600) -> list[dict]:
     return records
 
 
+def run_routing_matrix(quick: bool = False, n_steps: int = 1200) -> dict:
+    """Routing-mode axis on the adversarial dragonfly: one Sweep of
+    {min, valiant, ugal} x 3 schemes on group-shift traffic."""
+    from repro.core import CCScheme, PAPER_CONFIG, Sweep
+    from repro.core.workloads import group_shift
+    from repro.net import FabricSpec
+
+    cfg = PAPER_CONFIG
+    if quick:
+        fab, n_steps = FabricSpec.dragonfly(a=2, p=2, h=2), 600
+    else:
+        fab = FabricSpec.dragonfly(a=4, p=2, h=2)
+    g = fab.a * fab.h + 1 if fab.groups is None else fab.groups
+    hpg = fab.a * fab.p
+    spec = group_shift(g, hpg, t_stop=n_steps * cfg.sim.dt).spec(
+        fabric=fab, n_paths=4, label="adv")
+    t0 = time.perf_counter()
+    rset = fab.route_set(4)                       # timed: K-path build
+    set_s = time.perf_counter() - t0
+    configs = {f"{s.name}/{r}": cfg.replace(scheme=s, routing=r)
+               for s in CCScheme for r in ("min", "valiant", "ugal")}
+    t0 = time.perf_counter()
+    res = Sweep.grid(configs=configs, scenarios={"adv": spec}).run(
+        n_steps=n_steps)
+    sweep_s = time.perf_counter() - t0
+    delivered = {
+        name: round(float(np.asarray(r.final.delivered).sum()) / 1e6, 3)
+        for name, r in res.items()}
+    ugal_ge_min = all(
+        delivered[f"{s.name}/ugal/adv"] >= delivered[f"{s.name}/min/adv"]
+        for s in CCScheme)
+    return {
+        "name": "dfly_adv_routing",
+        "fabric": fab.name,
+        "workload": spec.label,
+        "k_paths": int(rset.k_paths),
+        "route_set_s": round(set_s, 4),
+        "n_points": len(res),
+        "sweep_s": round(sweep_s, 3),
+        "sim_steps_per_s": round(len(res) * n_steps / max(sweep_s, 1e-9),
+                                 1),
+        "delivered_mb": delivered,
+        "ugal_ge_min": bool(ugal_ge_min),
+    }
+
+
 def append_bench_record(records: list[dict], path: str = BENCH_PATH) -> None:
     doc = {"runs": []}
     if os.path.exists(path):
@@ -109,14 +160,28 @@ def append_bench_record(records: list[dict], path: str = BENCH_PATH) -> None:
 
 def main(quick: bool = False) -> list[tuple]:
     records = run_matrix(quick=quick)
+    routing = run_routing_matrix(quick=quick)
+    records.append(routing)
     append_bench_record(records)
     rows = []
-    for r in records:
+    for r in records[:-1]:
         rows.append((
             f"net_scale.{r['name']}", r["sweep_s"] * 1e6,
             f"N={r['n_nodes']} L={r['n_links']} F={r['n_flows']} "
             f"H={r['h_max']} table={r['table_s']:.2f}s "
             f"{r['sim_steps_per_s']:.0f} steps/s"))
+    mins = sum(v for k, v in routing["delivered_mb"].items() if "/min/" in k)
+    ugal = sum(v for k, v in routing["delivered_mb"].items()
+               if "/ugal/" in k)
+    rows.append((
+        f"net_scale.{routing['name']}", routing["sweep_s"] * 1e6,
+        f"{routing['n_points']}pt {routing['fabric']} "
+        f"min={mins:.1f}MB ugal={ugal:.1f}MB "
+        f"ugal_ge_min={routing['ugal_ge_min']}"))
+    if not routing["ugal_ge_min"]:
+        raise AssertionError(
+            f"UGAL under-delivered vs minimal routing on the adversarial "
+            f"pattern: {routing['delivered_mb']}")
     rows.append(("net_scale.bench_json", 0.0, BENCH_PATH))
     return rows
 

@@ -15,7 +15,7 @@ Public surface:
 """
 
 from .params import (CCConfig, CCScheme, DCQCNParams, LinkParams,
-                     PAPER_CONFIG, RevParams, SimParams)
+                     PAPER_CONFIG, ROUTING_MODES, RevParams, SimParams)
 from .topology import ClosIndex, Topology, make_clos3, make_paper_clos
 from .routing import build_flow_routes, clos_route, route_hops
 from .fluid import (FluidState, Scenario, ScenarioDev, StepParams,
@@ -32,7 +32,7 @@ from . import workloads
 
 __all__ = [
     "CCConfig", "CCScheme", "DCQCNParams", "LinkParams", "PAPER_CONFIG",
-    "RevParams", "SimParams", "ClosIndex", "Topology", "make_clos3",
+    "ROUTING_MODES", "RevParams", "SimParams", "ClosIndex", "Topology", "make_clos3",
     "make_paper_clos", "build_flow_routes", "clos_route", "route_hops",
     "FluidState", "Scenario", "ScenarioDev", "StepParams", "delay_depth",
     "fluid_step", "init_state", "make_step_fn", "scenario_device",

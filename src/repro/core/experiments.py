@@ -100,6 +100,13 @@ class ScenarioSpec:
     nic_buffer: float = 4e6
     gen_rate: float | None = None  # B/s; None = line rate
     label: str = ""
+    # adaptive routing: K candidate paths per flow (slot 0 minimal,
+    # 1..K-1 Valiant detours from the fabric's RouteSet).  Which
+    # candidate a flow actually uses is the *config's* choice
+    # (``cfg.routing`` in {min, valiant, ugal}), so one multi-path
+    # scenario serves a whole routing-mode sweep axis.
+    n_paths: int = 1
+    route_seed: int = 0           # VLB intermediate sampling seed
     # per-flow tuples (kind == "flowspec"); empty = broadcast the scalar
     flow_src: tuple[int, ...] = ()
     flow_dst: tuple[int, ...] = ()
@@ -228,7 +235,17 @@ class ScenarioSpec:
         pairs = self._pairs(topo)
         # the general routing path: every fabric family precomputes a
         # validated per-(src,dst) table; scenarios route by lookup.
-        routes = fab.route_table().routes_for_pairs(pairs)
+        # n_paths > 1 pulls the fabric's multi-path RouteSet instead:
+        # slot 0 (minimal) fills the legacy single-path tensors, the
+        # full candidate stack rides along for run-time selection.
+        alt_routes = alt_hops = None
+        if self.n_paths > 1:
+            rset = fab.route_set(self.n_paths, seed=self.route_seed)
+            alt_routes = rset.routes_for_pairs(pairs)
+            alt_hops = rset.hops_for_pairs(pairs)
+            routes = alt_routes[:, 0].copy()
+        else:
+            routes = fab.route_table().routes_for_pairs(pairs)
         F = len(pairs)
         hops = route_hops(routes)
         # CNP feedback delay ~ 2 * hops * (prop + serialisation) + NIC
@@ -258,8 +275,14 @@ class ScenarioSpec:
             capacity=topo.link_capacity.astype(np.float32),
             sink_switch=topo.sink_switch(),
             n_switches=topo.n_switches,
+            # feedback delay is pinned to the minimal path's RTT even for
+            # multi-path scenarios: the delay line is per-flow static, and
+            # a mode-dependent RTT would make routing="min" on a K-path
+            # scenario diverge from the K=1 build of the same workload.
             rtt_steps=rtt_steps,
             nic_buffer=nic,
+            alt_routes=alt_routes,
+            alt_hops=alt_hops,
         )
 
 
@@ -269,19 +292,27 @@ class ScenarioSpec:
 
 
 def pad_scenario(scn: Scenario, n_flows: int, n_hops: int,
-                 n_links: int) -> Scenario:
+                 n_links: int, n_paths: int | None = None) -> Scenario:
     """Grow a scenario to [n_flows, n_hops] flows and n_links links.
 
     PAD flows never generate (t_start = inf, zero rate/volume) and cross
     no links; PAD links carry no flow and a nominal capacity — both are
     inert in every scatter/reduce of the step, so padding cannot change
     delivered bytes (property-tested in test_experiments).
+
+    ``n_paths`` pads the candidate axis of multi-path scenarios; padded
+    candidate slots are all-PAD with hop count 0, which the selection
+    logic reads as "no such detour" (``n_alt`` counts real slots only).
+    ``None`` keeps the scenario's own K (single-path stays single-path).
     """
     F, H = scn.routes.shape
     L = scn.capacity.shape[0]
-    if n_flows < F or n_hops < H or n_links < L:
-        raise ValueError(f"pad target ({n_flows},{n_hops},{n_links}) "
-                         f"smaller than scenario ({F},{H},{L})")
+    K = 1 if scn.alt_routes is None else scn.alt_routes.shape[1]
+    n_paths = K if n_paths is None else n_paths
+    if n_flows < F or n_hops < H or n_links < L or n_paths < K:
+        raise ValueError(f"pad target ({n_flows},{n_hops},{n_links},"
+                         f"{n_paths}) smaller than scenario "
+                         f"({F},{H},{L},{K})")
 
     def pad_f(x, fill):
         return np.concatenate(
@@ -289,6 +320,16 @@ def pad_scenario(scn: Scenario, n_flows: int, n_hops: int,
 
     routes = np.full((n_flows, n_hops), PAD, np.int32)
     routes[:F, :H] = scn.routes
+    alt_routes = alt_hops = None
+    if not (n_paths == 1 and scn.alt_routes is None):
+        alt_routes = np.full((n_flows, n_paths, n_hops), PAD, np.int32)
+        alt_hops = np.zeros((n_flows, n_paths), np.int32)
+        if scn.alt_routes is None:
+            alt_routes[:F, 0, :H] = scn.routes
+            alt_hops[:F, 0] = scn.hops
+        else:
+            alt_routes[:F, :K, :H] = scn.alt_routes
+            alt_hops[:F, :K] = scn.alt_hops
     return Scenario(
         routes=routes,
         hops=pad_f(scn.hops, 0),
@@ -306,6 +347,8 @@ def pad_scenario(scn: Scenario, n_flows: int, n_hops: int,
         # scalar buffers broadcast on device, so they pass through
         nic_buffer=pad_f(np.asarray(scn.nic_buffer, np.float32), np.inf)
         if np.ndim(scn.nic_buffer) else scn.nic_buffer,
+        alt_routes=alt_routes,
+        alt_hops=alt_hops,
     )
 
 
@@ -318,8 +361,10 @@ def stack_scenarios(scns: Sequence[Scenario]):
     F = max(s.routes.shape[0] for s in scns)
     H = max(s.routes.shape[1] for s in scns)
     L = max(s.capacity.shape[0] for s in scns)
+    K = max(1 if s.alt_routes is None else s.alt_routes.shape[1]
+            for s in scns)
     n_sw = max(s.n_switches for s in scns)
-    padded = [pad_scenario(s, F, H, L) for s in scns]
+    padded = [pad_scenario(s, F, H, L, n_paths=K) for s in scns]
     devs = [scenario_device(s) for s in padded]
     batched = jax.tree.map(lambda *xs: jnp.stack(xs), *devs)
     return batched, padded, n_sw
@@ -466,7 +511,8 @@ def _slice_final(fin: FluidState, r: int, F: int) -> FluidState:
         alpha_tmr=flow(fin.alpha_tmr), bc_stage=flow(fin.bc_stage),
         t_stage=flow(fin.t_stage), hold=flow(fin.hold),
         np_tmr=flow(fin.np_tmr), trig_buf=fin.trig_buf[r][:, :F],
-        tgt_buf=fin.tgt_buf[r][:, :F], t=fin.t[r])
+        tgt_buf=fin.tgt_buf[r][:, :F], path_idx=flow(fin.path_idx),
+        t=fin.t[r])
 
 
 @dataclasses.dataclass
@@ -507,6 +553,7 @@ class SweepResult:
             inst_thr=tr.inst_thr[r][:, :F],
             max_q=tr.max_q[r], n_paused=tr.n_paused[r],
             marked=tr.marked[r][:, :F], cnp=tr.cnp[r][:, :F],
+            n_nonmin=tr.n_nonmin[r],
             final=_slice_final(self.final, r, F),
             trace_every=self.trace_every)
 
@@ -524,5 +571,10 @@ class SweepResult:
                 "min_flow_gbps": float(thr.min() / 1e9),
                 "completion_ms": float(res.completion_time() * 1e3),
                 "peak_queue_kb": float(res.max_q.max() / 1e3),
+                "delivered_mb": float(
+                    np.asarray(res.final.delivered).sum() / 1e6),
+                "marks": int(res.marked.sum()),
+                "cnps": int(res.cnp.sum()),
+                "peak_nonmin_flows": int(res.n_nonmin.max()),
             }
         return out

@@ -17,7 +17,20 @@ Representation (compact, scales to DC-size):
                        host, so qh[:, hops-1] is always 0.
   * ``nicq[F]``      — host backlog (generated, not yet injected).
 
+Adaptive routing: scenarios may carry K candidate paths per flow
+(``alt_routes[F, K, H]``, slot 0 minimal, slots 1..K-1 Valiant detours
+— see ``repro.net.routing.RouteSet``); ``FluidState.path_idx`` names
+each flow's live candidate and ``StepParams.route_code`` the policy
+(0 = min, 1 = valiant, 2 = ugal).  Selection happens at the top of the
+step, at flow start and (UGAL) on CNP-arrival epochs: UGAL-L compares
+queue-occupancy-weighted hops of the minimal path against one sampled
+detour, built from the per-link backlog the model already tracks, with
+ties keeping the minimal route.  Switching a flow mid-flight
+reinterprets its queued bytes onto the new path's hop positions — the
+usual fluid-model abstraction (bytes are a continuum, not packets).
+
 Per step (Jacobi, from pre-step state):
+  0. path selection (min / valiant / ugal) at epoch flows;
   1. generation into nicq (rate-limited window generator, finite NIC buf);
   2. transfers: every wire w serves the queues feeding it proportionally
      to their backlog, capped by C_w*dt, gated by PFC pause, and scaled by
@@ -57,7 +70,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .params import CCConfig, CCScheme
+from .params import CCConfig, CCScheme, ROUTING_MODES
 from .routing import PAD
 
 
@@ -78,6 +91,11 @@ class Scenario(NamedTuple):
     # mixed workloads give deep buffers to volume-mode collective flows
     # and shallow ones to window-mode background traffic.
     nic_buffer: "float | np.ndarray" = 4e6
+    # multi-path candidates (adaptive routing): K per-flow paths, slot 0
+    # the minimal route (== ``routes``), slots 1..K-1 Valiant detours.
+    # None = single-path scenario (selection is a no-op).
+    alt_routes: "np.ndarray | None" = None    # [F, K, H] int32, PAD-padded
+    alt_hops: "np.ndarray | None" = None      # [F, K] int32 (0 = no path)
 
 
 class ScenarioDev(NamedTuple):
@@ -85,11 +103,11 @@ class ScenarioDev(NamedTuple):
 
     A batched sweep stacks R of these along a new leading axis and vmaps;
     every field is data, so runs with different routes / rates / RTTs
-    share one compiled step.
+    share one compiled step.  Routes live only in the candidate stack
+    ``alt_routes`` (single-path scenarios mirror into K = 1) — the
+    host-side ``Scenario.routes``/``hops`` stay the minimal slot 0.
     """
 
-    routes: jnp.ndarray       # [F, H] int32
-    hops: jnp.ndarray         # [F] int32
     gen_rate: jnp.ndarray     # [F] f32
     t_start: jnp.ndarray      # [F] f32
     t_stop: jnp.ndarray       # [F] f32
@@ -98,6 +116,8 @@ class ScenarioDev(NamedTuple):
     sink_ext: jnp.ndarray     # [L+1] int32
     rtt: jnp.ndarray          # [F] int32
     nic_buffer: jnp.ndarray   # [F] f32 (host scalars broadcast per flow)
+    alt_routes: jnp.ndarray   # [F, K, H] int32 (K = 1 mirrors ``routes``)
+    alt_hops: jnp.ndarray     # [F, K] int32
 
 
 class StepParams(NamedTuple):
@@ -110,6 +130,7 @@ class StepParams(NamedTuple):
 
     mark_ecp: jnp.ndarray     # [] bool   — ECP (vs CP) marking
     react_code: jnp.ndarray   # [] int32  — 0 pfc / 1 rp / 2 erp
+    route_code: jnp.ndarray   # [] int32  — 0 min / 1 valiant / 2 ugal
     line_rate: jnp.ndarray    # [] f32
     xoff: jnp.ndarray         # [] f32
     xon: jnp.ndarray          # [] f32
@@ -158,6 +179,7 @@ class FluidState(NamedTuple):
     np_tmr: jnp.ndarray       # [F] time since last CNP emission
     trig_buf: jnp.ndarray     # [D, F] CNP in flight (delay line)
     tgt_buf: jnp.ndarray      # [D, F] severity payload in flight
+    path_idx: jnp.ndarray     # [F] int32 selected candidate (0 = minimal)
     t: jnp.ndarray            # [] int32 step counter
 
 
@@ -169,6 +191,7 @@ class StepTrace(NamedTuple):
     n_paused: jnp.ndarray     # [] paused wires
     marked: jnp.ndarray       # [F] marked this step?
     cnp: jnp.ndarray          # [F] CNP received this step?
+    n_nonmin: jnp.ndarray     # [] flows currently on a non-minimal path
 
 
 DELAY_SLOTS = 32              # legacy fixed delay-line depth (see below)
@@ -204,9 +227,14 @@ def _flow_jitter(n: int) -> np.ndarray:
 
 def scenario_device(scn: Scenario) -> ScenarioDev:
     """Move one scenario's tensors to device-ready arrays."""
+    if scn.alt_routes is None:          # single-path: K = 1 mirror
+        alt_routes = scn.routes[:, None, :]
+        alt_hops = scn.hops[:, None]
+    else:
+        alt_routes, alt_hops = scn.alt_routes, scn.alt_hops
     return ScenarioDev(
-        routes=jnp.asarray(scn.routes, jnp.int32),
-        hops=jnp.asarray(scn.hops, jnp.int32),
+        alt_routes=jnp.asarray(alt_routes, jnp.int32),
+        alt_hops=jnp.asarray(alt_hops, jnp.int32),
         gen_rate=jnp.asarray(scn.gen_rate, jnp.float32),
         t_start=jnp.asarray(scn.t_start, jnp.float32),
         t_stop=jnp.asarray(scn.t_stop, jnp.float32),
@@ -233,10 +261,15 @@ def step_params(cfg: CCConfig) -> StepParams:
         react_code = 0
     else:
         react_code = 1 if reaction_kind == "rp" else 2
+    if cfg.routing not in ROUTING_MODES:
+        raise ValueError(f"unknown routing mode {cfg.routing!r}; "
+                         f"expected one of {ROUTING_MODES}")
+    route_code = ROUTING_MODES.index(cfg.routing)
     f32 = lambda v: jnp.asarray(v, jnp.float32)
     return StepParams(
         mark_ecp=jnp.asarray(marking_kind == "ecp"),
         react_code=jnp.asarray(react_code, jnp.int32),
+        route_code=jnp.asarray(route_code, jnp.int32),
         line_rate=f32(lk.line_rate),
         xoff=f32(lk.port_buffer * lk.pfc_xoff_frac),
         xon=f32(lk.port_buffer * lk.pfc_xon_frac),
@@ -278,6 +311,7 @@ def init_state(scn: Scenario, cfg: CCConfig,
         hold=z_f, np_tmr=jnp.full((F,), 1.0, jnp.float32),
         trig_buf=jnp.zeros((D, F), jnp.float32),
         tgt_buf=jnp.zeros((D, F), jnp.float32),
+        path_idx=jnp.zeros((F,), jnp.int32),
         t=jnp.zeros((), jnp.int32),
     )
 
@@ -338,17 +372,72 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     ``sd`` and ``par`` are data, so a sweep vmaps this over a leading run
     axis with a single compilation.
     """
-    F, H = sd.routes.shape
+    F, K, H = sd.alt_routes.shape
     L = sd.cap_ext.shape[0] - 1
     D = st.trig_buf.shape[0]
     dt = jnp.float32(dt)
 
-    valid = sd.routes != PAD
-    widx = jnp.where(valid, sd.routes, L)      # PAD -> scratch slot L
     arange_h = jnp.arange(H, dtype=jnp.int32)[None, :]
-    is_last = valid & (arange_h == (sd.hops[:, None] - 1))
-    holds_queue = valid & (arange_h < (sd.hops[:, None] - 1))
     fidx = jnp.arange(F, dtype=jnp.int32)
+    t_sec = st.t.astype(jnp.float32) * dt
+
+    def pick_paths(k_idx):
+        """([F, H] routes, [F] hops) of candidate ``k_idx`` per flow."""
+        r = jnp.take_along_axis(sd.alt_routes, k_idx[:, None, None],
+                                axis=1)[:, 0]
+        h = jnp.take_along_axis(sd.alt_hops, k_idx[:, None], axis=1)[:, 0]
+        return r, h
+
+    # ---- 0. path selection (min / valiant / ugal) -------------------------
+    if K == 1:
+        # single-path scenario: selection is statically a no-op, and the
+        # update below is the exact single-table computation.
+        path_idx = st.path_idx
+        routes, hops = sd.alt_routes[:, 0, :], sd.alt_hops[:, 0]
+    else:
+        # Per-link backlog of the *pre-step* queues, laid out along each
+        # flow's currently selected path (its queued bytes live there).
+        routes_old, hops_old = pick_paths(st.path_idx)
+        v_old = routes_old != PAD
+        hq_old = v_old & (arange_h < (hops_old[:, None] - 1))
+        B_prev = jnp.zeros((L + 1,), jnp.float32).at[
+            jnp.where(v_old, routes_old, L)].add(
+                jnp.where(hq_old, st.qh, 0.0))
+
+        def path_cost(k_idx):
+            """UGAL cost: hop count x backlog along the candidate."""
+            r, h = pick_paths(k_idx)
+            v = r != PAD
+            q = jnp.sum(jnp.where(v, B_prev[jnp.where(v, r, L)], 0.0),
+                        axis=1)
+            return h.astype(jnp.float32) * q
+
+        # one sampled detour per flow, rotating over its valid slots
+        # (slots 1..n_alt; flows without candidates stay minimal)
+        n_alt = jnp.sum((sd.alt_hops[:, 1:] > 0).astype(jnp.int32), axis=1)
+        samp = jnp.where(n_alt > 0,
+                         1 + (fidx + st.t) % jnp.maximum(n_alt, 1), 0)
+        # UGAL-L: switch only if the detour's queue-weighted hops beat
+        # the minimal path's STRICTLY — ties (e.g. zero backlog
+        # everywhere) keep the minimal route.
+        ugal_pick = jnp.where(path_cost(samp) < path_cost(
+            jnp.zeros((F,), jnp.int32)), samp, 0)
+        # selection epochs: flow start (both modes) + CNP arrival (ugal
+        # re-evaluates under congestion feedback).  Reading the delay
+        # line here matches phase 5's cnp exactly: this step's emissions
+        # land at (t + rtt) % D != t % D since 0 < rtt < D.
+        starting = (t_sec >= sd.t_start) & (t_sec - dt < sd.t_start)
+        cnp_now = st.trig_buf[st.t % D] > 0
+        epoch = starting | ((par.route_code == 2) & cnp_now)
+        pick = jnp.where(par.route_code == 1, samp, ugal_pick)
+        path_idx = jnp.where(par.route_code == 0, 0,
+                             jnp.where(epoch, pick, st.path_idx))
+        routes, hops = pick_paths(path_idx)
+
+    valid = routes != PAD
+    widx = jnp.where(valid, routes, L)         # PAD -> scratch slot L
+    is_last = valid & (arange_h == (hops[:, None] - 1))
+    holds_queue = valid & (arange_h < (hops[:, None] - 1))
     jitter = jnp.asarray(_flow_jitter(F))
     erp_slope = par.erp_rai * (1.0 + par.erp_jitter * jitter)
     eps_rate = jnp.float32(1e6)                # B/s: "active" demand
@@ -357,8 +446,6 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
         """Scatter-add a [F,H] quantity onto per-link slots [L+1]."""
         out = jnp.full((L + 1,), init, jnp.float32)
         return out.at[widx].add(values_fh)
-
-    t_sec = st.t.astype(jnp.float32) * dt
 
     # ---- 1. generation ----------------------------------------------------
     active = (t_sec >= sd.t_start) & (t_sec < sd.t_stop)
@@ -500,11 +587,12 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
         rp_target=rp_target, alpha=alpha, byte_cnt=byte_cnt, tmr=tmr,
         alpha_tmr=alpha_tmr, bc_stage=bc_stage, t_stage=t_stage,
         hold=hold, np_tmr=np_tmr, trig_buf=trig_buf, tgt_buf=tgt_buf,
-        t=st.t + 1)
+        path_idx=path_idx, t=st.t + 1)
     trace = StepTrace(
         delivered=delivered, rate=rate, inst_thr=deliv_step / dt,
         max_q=jnp.max(B), n_paused=jnp.sum(paused.astype(jnp.int32)),
-        marked=marked, cnp=cnp)
+        marked=marked, cnp=cnp,
+        n_nonmin=jnp.sum((path_idx > 0).astype(jnp.int32)))
     return new, trace
 
 

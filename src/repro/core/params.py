@@ -103,6 +103,15 @@ class SimParams:
     trace_every: int = 10              # record a trace sample every N steps
 
 
+#: Routing-mode selectors (traced into ``StepParams.route_code``):
+#: ``min`` pins every flow to its minimal path; ``valiant`` pins a
+#: sampled VLB detour at flow start; ``ugal`` compares queue-weighted
+#: hop costs (UGAL-L) at flow start and on CNP epochs.  Modes beyond
+#: ``min`` need a multi-path scenario (``ScenarioSpec(n_paths > 1)``)
+#: to have any candidates to pick from.
+ROUTING_MODES = ("min", "valiant", "ugal")
+
+
 @dataclasses.dataclass(frozen=True)
 class CCConfig:
     scheme: CCScheme = CCScheme.DCQCN_REV
@@ -114,6 +123,9 @@ class CCConfig:
     # paper's mechanisms — marking in {cp, ecp}, reaction in {rp, erp}
     marking: str | None = None
     reaction: str | None = None
+    # adaptive-routing mode (see ROUTING_MODES); a traced selector, so
+    # routing joins scheme/Kmin/gain as a one-launch sweep axis
+    routing: str = "min"
 
     def replace(self, **kw) -> "CCConfig":
         return dataclasses.replace(self, **kw)

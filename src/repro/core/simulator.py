@@ -26,9 +26,9 @@ class TraceSample(StepTrace):
 
     Cumulative fields (``delivered``, ``rate``) are the window's last
     step, i.e. a strided sample of the full trace; ``inst_thr`` is the
-    window-mean delivery rate; ``max_q`` / ``n_paused`` are window
-    maxima; ``marked`` / ``cnp`` are window event *counts* (so sums over
-    the decimated trace equal sums over the full one).
+    window-mean delivery rate; ``max_q`` / ``n_paused`` / ``n_nonmin``
+    are window maxima; ``marked`` / ``cnp`` are window event *counts*
+    (so sums over the decimated trace equal sums over the full one).
     """
 
 
@@ -38,7 +38,8 @@ def _zero_accum(st: FluidState):
     return (jnp.zeros_like(st.t, jnp.float32),    # max_q
             jnp.zeros_like(st.t, jnp.int32),      # n_paused
             jnp.zeros_like(st.nicq, jnp.int32),   # marked
-            jnp.zeros_like(st.nicq, jnp.int32))   # cnp
+            jnp.zeros_like(st.nicq, jnp.int32),   # cnp
+            jnp.zeros_like(st.t, jnp.int32))      # n_nonmin
 
 
 def decimating_scan(step, st: FluidState, n_samples: int,
@@ -51,20 +52,21 @@ def decimating_scan(step, st: FluidState, n_samples: int,
         d0 = st.delivered
 
         def inner(carry, _):
-            stt, mq, npz, mk, cn = carry
+            stt, mq, npz, mk, cn, nm = carry
             st2, tr = step(stt)
             return (st2,
                     jnp.maximum(mq, tr.max_q),
                     jnp.maximum(npz, tr.n_paused),
                     mk + tr.marked.astype(jnp.int32),
-                    cn + tr.cnp.astype(jnp.int32)), None
+                    cn + tr.cnp.astype(jnp.int32),
+                    jnp.maximum(nm, tr.n_nonmin)), None
 
-        (st, mq, npz, mk, cn), _ = jax.lax.scan(
+        (st, mq, npz, mk, cn, nm), _ = jax.lax.scan(
             inner, (st,) + _zero_accum(st), None, length=trace_every)
         sample = TraceSample(
             delivered=st.delivered, rate=st.rate,
             inst_thr=(st.delivered - d0) / jnp.float32(trace_every * dt),
-            max_q=mq, n_paused=npz, marked=mk, cnp=cn)
+            max_q=mq, n_paused=npz, marked=mk, cnp=cn, n_nonmin=nm)
         return st, sample
 
     return jax.lax.scan(outer, st, None, length=n_samples)
@@ -104,6 +106,7 @@ class SimResult:
     n_paused: np.ndarray       # [T] window-max paused wires
     marked: np.ndarray         # [T, F] marking events in window
     cnp: np.ndarray            # [T, F] CNPs received in window
+    n_nonmin: np.ndarray       # [T] window-max flows on non-minimal paths
     final: Any                 # FluidState (host)
     trace_every: int = 1
 
@@ -199,6 +202,7 @@ def run(scn: Scenario, cfg: CCConfig, n_steps: int | None = None,
         n_paused=np.asarray(tr.n_paused),
         marked=np.asarray(tr.marked),
         cnp=np.asarray(tr.cnp),
+        n_nonmin=np.asarray(tr.n_nonmin),
         final=jax.device_get(final),
         trace_every=k,
     )

@@ -225,6 +225,33 @@ def incast_storm(n_senders: int, n_receivers: int, n_nodes: int, *,
                label=f"storm{n_senders}to{n_receivers}")
 
 
+def group_shift(n_groups: int, hosts_per_group: int, *, shift: int = 1,
+                volume: float = INF, t_start: float = 0.0,
+                t_stop: float = 3e-3) -> Workload:
+    """Adversarial group-shifted permutation: host j of group g sends
+    to host j of group (g + shift) % n_groups.
+
+    On a dragonfly (``hosts_per_group = a * p``) this is the classic
+    worst case for minimal routing: every flow leaving group g wants
+    the *single* global channel g -> g+shift, so that one link carries
+    ``hosts_per_group`` line-rate flows while every other global
+    channel idles.  Valiant/UGAL detours spread the same traffic over
+    two hops through random intermediate groups — the scenario where
+    non-minimal routing must win.  (The pattern is fabric-agnostic:
+    hosts are numbered group-major, matching the dragonfly layout.)
+    """
+    if n_groups < 2 or shift % n_groups == 0:
+        raise ValueError(f"need >= 2 groups and a non-identity shift, "
+                         f"got {n_groups} groups, shift {shift}")
+    n = n_groups * hosts_per_group
+    src = list(range(n))
+    dst = [((g + shift) % n_groups) * hosts_per_group + j
+           for g in range(n_groups) for j in range(hosts_per_group)]
+    stop = INF if np.isfinite(volume) else t_stop
+    return _mk(src, dst, [t_start] * n, [stop] * n, [volume] * n,
+               label=f"gshift{n_groups}x{hosts_per_group}s{shift}")
+
+
 def hotspot(n_flows: int, n_nodes: int, *, hot_frac: float = 0.5,
             hot_node: int = 0, bg_rate_frac: float = 0.5,
             t_start: float = 0.5e-3, t_stop: float = 3e-3,

@@ -16,15 +16,22 @@ result to ``repro.core.experiments.Sweep`` for one-jit batched
 """
 
 from .fabric import FabricSpec
-from .routing import (RouteTable, clos_route_table, dragonfly_path,
-                      dragonfly_route_table, stage_balance, validate_table,
-                      xgft_path, xgft_route_table)
+from .routing import (RouteSet, RouteTable, clos_route_set,
+                      clos_route_table, clos_valiant_path,
+                      dragonfly_path, dragonfly_route_set,
+                      dragonfly_route_table, dragonfly_valiant_path,
+                      stage_balance, validate_route_set, validate_table,
+                      xgft_path, xgft_route_set, xgft_route_table,
+                      xgft_valiant_path)
 from .topologies import (DragonflyIndex, XGFTIndex, make_dragonfly,
                          make_fat_tree, make_xgft)
 
 __all__ = [
-    "FabricSpec", "RouteTable", "clos_route_table", "dragonfly_path",
-    "dragonfly_route_table", "stage_balance", "validate_table",
-    "xgft_path", "xgft_route_table", "DragonflyIndex", "XGFTIndex",
+    "FabricSpec", "RouteSet", "RouteTable", "clos_route_set",
+    "clos_route_table", "clos_valiant_path", "dragonfly_path",
+    "dragonfly_route_set", "dragonfly_route_table",
+    "dragonfly_valiant_path", "stage_balance", "validate_route_set",
+    "validate_table", "xgft_path", "xgft_route_set", "xgft_route_table",
+    "xgft_valiant_path", "DragonflyIndex", "XGFTIndex",
     "make_dragonfly", "make_fat_tree", "make_xgft",
 ]

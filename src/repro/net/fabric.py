@@ -5,7 +5,9 @@ data, so it can sit inside a (frozen, hashable) ``ScenarioSpec`` and
 key jit/result caches.  ``build`` / ``route_table`` materialise the
 ``Topology`` and its validated ``RouteTable`` once per (spec,
 line_rate) — sweeping 3 CC schemes over one fabric builds its table a
-single time.
+single time.  ``route_set(k, seed)`` is the multi-path analogue
+(minimal + Valiant detour candidates, cached per (spec, k, seed)) that
+adaptive routing modes select from at run time.
 
 Families:
   * ``clos3``      — the paper's 3-stage CLOS (closed-form D-mod-K,
@@ -22,8 +24,10 @@ import functools
 
 from repro.core.topology import Topology, make_clos3
 
-from .routing import (RouteTable, clos_route_table, dragonfly_route_table,
-                      validate_table, xgft_route_table)
+from .routing import (RouteSet, RouteTable, clos_route_set,
+                      clos_route_table, dragonfly_route_set,
+                      dragonfly_route_table, validate_route_set,
+                      validate_table, xgft_route_set, xgft_route_table)
 from .topologies import fat_tree_mw, make_dragonfly, make_xgft
 
 
@@ -100,6 +104,11 @@ class FabricSpec:
         """
         return _build_table(self)
 
+    def route_set(self, k_paths: int = 4, seed: int = 0) -> RouteSet:
+        """K-candidate multi-path routes (slot 0 minimal, 1..K-1
+        Valiant detours); validated + cached per (spec, k, seed)."""
+        return _build_route_set(self, int(k_paths), int(seed))
+
 
 @functools.lru_cache(maxsize=64)
 def _build_topo(spec: FabricSpec, line_rate: float) -> Topology:
@@ -135,3 +144,20 @@ def _build_table(spec: FabricSpec) -> RouteTable:
         raise ValueError(f"unknown fabric kind: {spec.kind!r}")
     validate_table(_build_topo(spec, 12.5e9), table)
     return table
+
+
+@functools.lru_cache(maxsize=64)
+def _build_route_set(spec: FabricSpec, k: int, seed: int) -> RouteSet:
+    """Build + validate one fabric's multi-path RouteSet; cached."""
+    if spec.kind == "clos3":
+        rset = clos_route_set(spec.arity, k=k, seed=seed, roll=spec.roll)
+    elif spec.kind == "xgft":
+        _, idx = make_xgft(spec.m, spec.w)
+        rset = xgft_route_set(idx, k=k, seed=seed, roll=spec.roll)
+    elif spec.kind == "dragonfly":
+        _, idx = make_dragonfly(spec.a, spec.p, spec.h, groups=spec.groups)
+        rset = dragonfly_route_set(idx, k=k, seed=seed)
+    else:
+        raise ValueError(f"unknown fabric kind: {spec.kind!r}")
+    validate_route_set(_build_topo(spec, 12.5e9), rset)
+    return rset

@@ -17,6 +17,14 @@ recomputed per flow.
 ``validate_table`` is the vectorised validity checker every builder is
 held to: paths start at the source host, end at the destination host,
 consecutive links share a switch, and padding is trailing-only.
+
+Multi-path routing generalises the table to a ``RouteSet`` — K
+candidate paths per pair ([N, N, K, H_MAX]): slot 0 is the minimal
+path, slots 1..K-1 are Valiant/VLB detours (random spine for CLOS,
+random root for XGFT, random intermediate group for dragonfly).  The
+fluid loop selects among candidates at run time (``min`` pins slot 0,
+``valiant`` pins a sampled detour, ``ugal`` compares queue-weighted
+hop costs — see ``repro.core.fluid``).
 """
 
 from __future__ import annotations
@@ -29,6 +37,17 @@ from repro.core.routing import PAD, clos_route
 from repro.core.topology import ClosIndex, Topology
 
 from .topologies import DragonflyIndex, XGFTIndex
+
+
+def _pair_index(pairs, n_nodes: int) -> np.ndarray:
+    """Validate (src, dst) pairs into an [F, 2] host-id index."""
+    idx = np.asarray(pairs, np.int64)
+    if idx.ndim != 2 or idx.shape[1] != 2:
+        raise ValueError(f"pairs must be [F, 2], got {idx.shape}")
+    if (idx < 0).any() or (idx >= n_nodes).any():
+        raise ValueError(
+            f"pair endpoints must be host ids in [0, {n_nodes})")
+    return idx
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,20 +73,34 @@ class RouteTable:
         """[F, H_MAX] int32 route matrix for (src, dst) pairs."""
         if not len(pairs):
             return np.empty((0, self.h_max), np.int32)
-        idx = np.asarray(pairs, np.int64)
-        if idx.ndim != 2 or idx.shape[1] != 2:
-            raise ValueError(f"pairs must be [F, 2], got {idx.shape}")
-        if (idx < 0).any() or (idx >= self.n_nodes).any():
-            raise ValueError(
-                f"pair endpoints must be host ids in [0, {self.n_nodes})")
+        idx = _pair_index(pairs, self.n_nodes)
         return self.paths[idx[:, 0], idx[:, 1]].copy()
+
+    def hops_for_pairs(self, pairs) -> np.ndarray:
+        """[F] int32 hop counts for (src, dst) pairs."""
+        if not len(pairs):
+            return np.empty((0,), np.int32)
+        idx = _pair_index(pairs, self.n_nodes)
+        return self.hops[idx[:, 0], idx[:, 1]].copy()
 
     def link_load(self, n_links: int,
                   pairs=None) -> np.ndarray:
-        """Flow-routes crossing each link (all-to-all, or given pairs)."""
-        routes = (self.paths.reshape(-1, self.h_max) if pairs is None
-                  else self.routes_for_pairs(pairs))
-        ids = routes[routes != PAD]
+        """Flow-routes crossing each link (all-to-all, or given pairs).
+
+        Real hops are selected by each path's hop *count*, not by
+        scanning for the PAD sentinel: tables whose paths have unequal
+        lengths may legally carry anything (stale ids, scratch slots)
+        beyond ``hops[s, d]``, and counting those slots silently
+        inflated the load of whichever link id the padding aliased.
+        """
+        if pairs is None:
+            routes = self.paths.reshape(-1, self.h_max)
+            hops = self.hops.reshape(-1)
+        else:
+            routes = self.routes_for_pairs(pairs)
+            hops = self.hops_for_pairs(pairs)
+        mask = np.arange(self.h_max)[None, :] < hops[:, None]
+        ids = routes[mask]
         return np.bincount(ids, minlength=n_links).astype(np.int64)
 
 
@@ -86,6 +119,97 @@ def _from_path_fn(n: int, h_max: int, path_fn) -> RouteTable:
             paths[s, d, : len(p)] = p
             hops[s, d] = len(p)
     return RouteTable(paths=paths, hops=hops)
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteSet:
+    """Multi-path routes: K candidate paths per (src, dst) pair.
+
+    ``paths[s, d, k, :hops[s, d, k]]`` are real link ids; slot ``k = 0``
+    is always the fabric's minimal (deterministic) path, slots
+    ``1..K-1`` are the Valiant/VLB detour candidates.  Every slot of an
+    ``s != d`` pair holds a *valid* path — builders that cannot detour
+    a pair (e.g. same-leaf XGFT) fall back to the minimal path for that
+    slot, so selection logic never has to special-case missing
+    candidates.  A ``RouteTable`` is the ``K = 1`` degenerate case
+    (``minimal`` recovers it; ``slot(k)`` views any candidate layer).
+    """
+
+    paths: np.ndarray             # [N, N, K, H_MAX] int32, PAD-padded
+    hops: np.ndarray              # [N, N, K] int32
+
+    @property
+    def n_nodes(self) -> int:
+        return self.paths.shape[0]
+
+    @property
+    def k_paths(self) -> int:
+        return self.paths.shape[2]
+
+    @property
+    def h_max(self) -> int:
+        return self.paths.shape[3]
+
+    def slot(self, k: int) -> RouteTable:
+        """Candidate layer ``k`` as a single-path RouteTable view."""
+        return RouteTable(paths=self.paths[:, :, k], hops=self.hops[:, :, k])
+
+    @property
+    def minimal(self) -> RouteTable:
+        return self.slot(0)
+
+    def routes_for_pairs(self, pairs) -> np.ndarray:
+        """[F, K, H_MAX] int32 candidate routes for (src, dst) pairs."""
+        if not len(pairs):
+            return np.empty((0, self.k_paths, self.h_max), np.int32)
+        idx = _pair_index(pairs, self.n_nodes)
+        return self.paths[idx[:, 0], idx[:, 1]].copy()
+
+    def hops_for_pairs(self, pairs) -> np.ndarray:
+        """[F, K] int32 per-candidate hop counts."""
+        if not len(pairs):
+            return np.empty((0, self.k_paths), np.int32)
+        idx = _pair_index(pairs, self.n_nodes)
+        return self.hops[idx[:, 0], idx[:, 1]].copy()
+
+    def link_load(self, n_links: int, pairs=None,
+                  k: int | None = None) -> np.ndarray:
+        """Flow-routes crossing each link; ``k`` selects one candidate
+        layer (None sums all K layers, hop-count-masked)."""
+        if k is not None:
+            return self.slot(k).link_load(n_links, pairs=pairs)
+        return sum(self.slot(j).link_load(n_links, pairs=pairs)
+                   for j in range(self.k_paths))
+
+
+def _rng_for(seed: int, s: int, d: int, k: int) -> np.random.RandomState:
+    """Independent, order-free stream per (seed, src, dst, slot)."""
+    return np.random.RandomState(
+        np.array([seed & 0x7FFFFFFF, s, d, k], np.uint32))
+
+
+def _route_set_from_fns(n: int, h_max: int, k: int, seed: int,
+                        min_fn, alt_fn) -> RouteSet:
+    """Assemble a RouteSet: slot 0 = ``min_fn(s, d)``; slots 1..k-1 =
+    ``alt_fn(s, d, rng)`` with a deterministic per-(s, d, slot) rng."""
+    if k < 1:
+        raise ValueError(f"need k >= 1 candidate paths, got {k}")
+    paths = np.full((n, n, k, h_max), PAD, np.int32)
+    hops = np.zeros((n, n, k), np.int32)
+    for s in range(n):
+        for d in range(n):
+            if s == d:
+                continue
+            for j in range(k):
+                p = min_fn(s, d) if j == 0 else \
+                    alt_fn(s, d, _rng_for(seed, s, d, j))
+                if len(p) > h_max:
+                    raise ValueError(
+                        f"path {s}->{d} slot {j} has {len(p)} hops "
+                        f"> H_MAX={h_max}")
+                paths[s, d, j, : len(p)] = p
+                hops[s, d, j] = len(p)
+    return RouteSet(paths=paths, hops=hops)
 
 
 # ---------------------------------------------------------------------------
@@ -169,6 +293,141 @@ def dragonfly_route_table(idx: DragonflyIndex) -> RouteTable:
 
 
 # ---------------------------------------------------------------------------
+# Valiant (VLB) detour candidates + multi-path route sets
+# ---------------------------------------------------------------------------
+
+
+def clos_valiant_path(idx: ClosIndex, s: int, d: int,
+                      rng: np.random.RandomState) -> list[int]:
+    """Randomised up-route through the 3-stage CLOS.
+
+    The CLOS is single-length up-down, so "Valiant" degenerates to a
+    random spine (random digit selectors u0, u1 instead of D-mod-K):
+    same hop count, different — congestion-decorrelated — middle links.
+    Same-leaf pairs have a forced path and fall back to it.
+    """
+    a = idx.arity
+    if s == d:
+        return []
+    s_leaf, d_leaf = s // a, d // a
+    s_grp, d_grp = s_leaf // a, d_leaf // a
+    path = [idx.nic_up(s)]
+    if d_leaf == s_leaf:                        # forced: no detour exists
+        path.append(idx.leaf_dn(d))
+        return path
+    u0 = int(rng.randint(a))
+    path.append(idx.leaf_up(s_leaf, u0))
+    if d_grp == s_grp:
+        path.append(idx.agg_dn(s_grp, u0, d_leaf % a))
+        path.append(idx.leaf_dn(d))
+        return path
+    u1 = int(rng.randint(a))
+    path.append(idx.agg_up(s_grp, u0, u1))
+    path.append(idx.spine_dn(u0 * a + u1, d_grp))
+    path.append(idx.agg_dn(d_grp, u0, d_leaf % a))
+    path.append(idx.leaf_dn(d))
+    return path
+
+
+def xgft_valiant_path(idx: XGFTIndex, s: int, d: int,
+                      rng: np.random.RandomState) -> list[int]:
+    """VLB detour in XGFT(h; m; w): ascend all the way to a *random*
+    root (uniform parent slot at every level), then descend along d's
+    digits — the fat-tree form of "route to a random intermediate",
+    since the root choice fixes the intermediate subtree.  Always 2h
+    links (non-minimal whenever the true LCA is below the roots)."""
+    if s == d:
+        return []
+    h = idx.h
+    sx, dx = idx.host_digits(s), idx.host_digits(d)
+    path = []
+    y = [0] * h
+    cur = s
+    for j in range(1, h + 1):                   # ascend with random slots
+        y[j - 1] = int(rng.randint(idx.w[j - 1]))
+        path.append(idx.up(j, cur, y[j - 1]))
+        cur = idx.node_index(j, sx, y)
+    for j in range(h, 0, -1):                   # descend along d's digits
+        path.append(idx.dn(j, cur, dx[j - 1]))
+        cur = idx.node_index(j - 1, dx, y)
+    return path
+
+
+def dragonfly_valiant_path(idx: DragonflyIndex, s: int, d: int,
+                           rng: np.random.RandomState) -> list[int]:
+    """VLB detour in a dragonfly: route minimally to a random
+    *intermediate group* (neither source nor destination group), then
+    minimally on to the destination — two global hops, <= 7 links.
+    Intra-group pairs detour via a random intermediate router instead;
+    pairs with no possible detour fall back to the minimal path.
+    """
+    if s == d:
+        return []
+    a, p = idx.a, idx.p
+    rs, rd = (s // p) % a, (d // p) % a
+    gs, gd = s // (a * p), d // (a * p)
+    up, dn = s, idx.n_hosts + d
+    if gs == gd:                                # in-group router detour
+        cand = [r for r in range(a) if r not in (rs, rd)]
+        if not cand:
+            return dragonfly_path(idx, s, d)
+        ri = cand[int(rng.randint(len(cand)))]
+        return [up, idx.local(gs, rs, ri), idx.local(gs, ri, rd), dn]
+    cand = [g for g in range(idx.g) if g not in (gs, gd)]
+    if not cand:
+        return dragonfly_path(idx, s, d)
+    gi = cand[int(rng.randint(len(cand)))]
+    path = [up]
+    gw = idx.gl_owner(gs, gi)                   # leg 1: gs -> gi
+    if rs != gw:
+        path.append(idx.local(gs, rs, gw))
+    path.append(idx.gl_port(gs, gi))
+    rin = idx.gl_owner(gi, gs)
+    gw2 = idx.gl_owner(gi, gd)                  # leg 2: gi -> gd
+    if rin != gw2:
+        path.append(idx.local(gi, rin, gw2))
+    path.append(idx.gl_port(gi, gd))
+    rin2 = idx.gl_owner(gd, gi)
+    if rin2 != rd:
+        path.append(idx.local(gd, rin2, rd))
+    path.append(dn)
+    return path
+
+
+DFLY_VLB_H_MAX = 7        # up + local + global + local + global + local + dn
+
+
+def clos_route_set(arity: int = 4, k: int = 4, seed: int = 0,
+                   roll: int = 0) -> RouteSet:
+    """Minimal D-mod-K + k-1 random-spine candidates; H_MAX = 6."""
+    idx = ClosIndex(arity)
+    return _route_set_from_fns(
+        arity ** 3, 6, k, seed,
+        lambda s, d: clos_route(idx, s, d, roll=roll),
+        lambda s, d, rng: clos_valiant_path(idx, s, d, rng))
+
+
+def xgft_route_set(idx: XGFTIndex, k: int = 4, seed: int = 0,
+                   roll: int = 0) -> RouteSet:
+    """Minimal D-mod-K + k-1 random-root VLB candidates; H_MAX = 2h."""
+    return _route_set_from_fns(
+        idx.n_hosts, 2 * idx.h, k, seed,
+        lambda s, d: xgft_path(idx, s, d, roll=roll),
+        lambda s, d, rng: xgft_valiant_path(idx, s, d, rng))
+
+
+def dragonfly_route_set(idx: DragonflyIndex, k: int = 4,
+                        seed: int = 0) -> RouteSet:
+    """Minimal + k-1 intermediate-group VLB candidates; H_MAX = 7
+    (the VLB worst case) once any detour slot exists, else 5."""
+    h_max = DFLY_VLB_H_MAX if k > 1 else 5
+    return _route_set_from_fns(
+        idx.n_hosts, h_max, k, seed,
+        lambda s, d: dragonfly_path(idx, s, d),
+        lambda s, d, rng: dragonfly_valiant_path(idx, s, d, rng))
+
+
+# ---------------------------------------------------------------------------
 # validity checking
 # ---------------------------------------------------------------------------
 
@@ -223,6 +482,20 @@ def validate_table(topo: Topology, table: RouteTable) -> None:
         raise AssertionError(
             f"path {s}->{d}: hop {j} sinks at {topo.link_dst[paths[s,d,j]]}"
             f" but hop {j+1} departs {topo.link_src[paths[s,d,j+1]]}")
+
+
+def validate_route_set(topo: Topology, rset: RouteSet) -> None:
+    """Every candidate layer of a RouteSet passes ``validate_table``.
+
+    Builders guarantee each slot of an ``s != d`` pair holds a complete
+    valid path (detour or minimal fallback), so the single-table checker
+    applies verbatim per layer.
+    """
+    for k in range(rset.k_paths):
+        try:
+            validate_table(topo, rset.slot(k))
+        except AssertionError as e:
+            raise AssertionError(f"candidate layer {k}: {e}") from e
 
 
 def stage_balance(load: np.ndarray, ids: np.ndarray) -> tuple[int, int]:

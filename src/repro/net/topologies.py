@@ -284,6 +284,43 @@ class DragonflyIndex:
     def local_ids(self) -> np.ndarray:
         return np.arange(self.local_base, self.global_base)
 
+    # -- reverse lookups (tests + adaptive-routing diagnostics) -------------
+
+    def host_group(self, n: int) -> int:
+        return n // (self.a * self.p)
+
+    def host_router(self, n: int) -> int:
+        return self.router(self.host_group(n), (n // self.p) % self.a)
+
+    def is_global(self, lid: int) -> bool:
+        return self.global_base <= lid < self.n_links
+
+    def global_endpoints(self, lid: int) -> tuple[int, int]:
+        """(src group, dst group) of a global channel's link id."""
+        if not self.is_global(lid):
+            raise ValueError(f"link {lid} is not a global channel")
+        ports_per_group = min(self.g - 1, self.a * self.h)
+        off = lid - self.global_base
+        grp, port = off // ports_per_group, off % ports_per_group
+        return grp, self.peer_group(grp, port)
+
+    def groups_visited(self, path: list[int]) -> list[int]:
+        """Ordered group sequence a link-id path passes through
+        (consecutive duplicates collapsed)."""
+        out: list[int] = []
+        for lid in path:
+            if lid < self.local_base:            # host up/down link
+                n = lid if lid < self.n_hosts else lid - self.n_hosts
+                grps = [self.host_group(n)]
+            elif lid < self.global_base:         # local link
+                grps = [(lid - self.local_base) // (self.a * (self.a - 1))]
+            else:                                # global channel
+                grps = list(self.global_endpoints(lid))
+            for grp in grps:
+                if not out or out[-1] != grp:
+                    out.append(grp)
+        return out
+
 
 def make_dragonfly(a: int = 4, p: int = 2, h: int = 2,
                    groups: int | None = None,

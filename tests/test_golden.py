@@ -1,0 +1,133 @@
+"""Golden-trace regression suite: frozen SweepResult summaries.
+
+A fixed grid — 3 schemes x 2 fabrics x {min, valiant, ugal} under
+pinned seeds — runs as one Sweep launch; headline numbers (throughput,
+completion, delivered bytes, ECN-mark / CNP counts, peak non-minimal
+flow count) are compared against ``tests/golden/routing_sweep.json``.
+Kernel or fluid-model refactors that change numerics now fail loudly
+instead of silently drifting the paper's tables.
+
+Regenerate (after an *intentional* numerics change, with a line in the
+commit message saying why):
+
+    PYTHONPATH=src python tests/test_golden.py --regen
+
+Tolerances: floats rtol=2e-3 (covers accumulation-order jitter across
+BLAS/jax versions), counters within 2% or +-2 events.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import CCScheme, PAPER_CONFIG, ScenarioSpec, Sweep
+from repro.core.workloads import group_shift
+from repro.net import FabricSpec
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "routing_sweep.json")
+N_STEPS = 600
+ROUTINGS = ("min", "valiant", "ugal")
+
+FLOAT_KEYS = ("aggregate_gbps", "completion_ms", "delivered_mb",
+              "peak_queue_kb")
+COUNT_KEYS = ("marks", "cnps", "peak_nonmin_flows")
+
+
+def _grid() -> Sweep:
+    """The frozen grid; every seed and shape pinned."""
+    dfly = FabricSpec.dragonfly(a=2, p=2, h=2)          # 20 hosts, 5 groups
+    ft = FabricSpec.fat_tree(4, taper=2)                # 64 hosts, 2:1
+    scenarios = {
+        "dfly_adv": group_shift(5, 4, t_stop=0.5e-3).spec(
+            fabric=dfly, n_paths=4, route_seed=0, label="dfly_adv"),
+        "ft_perm": ScenarioSpec.permutation(
+            16, seed=2, fabric=ft, n_paths=4, route_seed=0,
+            t_start=0.0, t_stop=0.5e-3, label="ft_perm"),
+    }
+    configs = {f"{s.name}/{r}": PAPER_CONFIG.replace(scheme=s, routing=r)
+               for s in CCScheme for r in ROUTINGS}
+    return Sweep.grid(configs=configs, scenarios=scenarios)
+
+
+def current_summaries() -> dict:
+    res = _grid().run(n_steps=N_STEPS)
+    out = {}
+    for name, row in res.summary().items():
+        out[name] = {k: row[k] for k in FLOAT_KEYS + COUNT_KEYS}
+    return out
+
+
+@pytest.fixture(scope="module")
+def summaries():
+    return current_summaries()
+
+
+def _golden() -> dict:
+    if not os.path.exists(GOLDEN_PATH):
+        pytest.fail(f"golden file missing: {GOLDEN_PATH}; regenerate with "
+                    f"PYTHONPATH=src python tests/test_golden.py --regen")
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)["summaries"]
+
+
+def test_golden_grid_covers_full_routing_axis(summaries):
+    assert len(summaries) == 3 * 2 * 3
+    golden = _golden()
+    assert set(golden) == set(summaries)
+
+
+@pytest.mark.parametrize("routing", ROUTINGS)
+def test_golden_summaries_match(summaries, routing):
+    golden = _golden()
+    for name, got in summaries.items():
+        if f"/{routing}/" not in name:
+            continue
+        want = golden[name]
+        for k in FLOAT_KEYS:
+            g, w = got[k], want[k]
+            if np.isnan(w):
+                assert np.isnan(g), (name, k, g)
+                continue
+            np.testing.assert_allclose(
+                g, w, rtol=2e-3, atol=1e-9,
+                err_msg=f"{name}.{k} drifted (golden {w}, got {g}); "
+                        f"if intentional: tests/test_golden.py --regen")
+        for k in COUNT_KEYS:
+            g, w = got[k], want[k]
+            assert abs(g - w) <= max(2, 0.02 * w), \
+                f"{name}.{k} drifted (golden {w}, got {g})"
+
+
+def test_golden_encodes_the_acceptance_ordering():
+    """The frozen numbers themselves must witness the adaptive-routing
+    claim: UGAL >= minimal delivered bytes on the adversarial pattern."""
+    golden = _golden()
+    for s in CCScheme:
+        u = golden[f"{s.name}/ugal/dfly_adv"]["delivered_mb"]
+        m = golden[f"{s.name}/min/dfly_adv"]["delivered_mb"]
+        assert u >= m, (s.name, u, m)
+
+
+def _regen() -> None:
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    doc = {
+        "comment": "frozen by tests/test_golden.py --regen; see module "
+                   "docstring for when regeneration is legitimate",
+        "n_steps": N_STEPS,
+        "summaries": current_summaries(),
+    }
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {GOLDEN_PATH} ({len(doc['summaries'])} points)")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)

@@ -129,6 +129,33 @@ def test_dragonfly_paths_at_most_five_links():
     assert table.h_max == 5
 
 
+def test_link_load_masks_by_hop_count_at_mixed_depths():
+    """Regression: padding slots beyond ``hops[s, d]`` must never be
+    counted, even when they alias a real link id.
+
+    With unequal path lengths in one table the padded tail is only
+    *conventionally* PAD; a builder (or a multi-path gather) may leave
+    any sentinel there.  ``link_load`` used to scan for the -1 sentinel
+    instead of masking by hop count, silently inflating whichever link
+    the stale slots named."""
+    from repro.net.routing import RouteTable
+    table = FabricSpec.dragonfly(a=2, p=2, h=1, groups=3).route_table()
+    n_links = int(table.paths.max()) + 1
+    want = table.link_load(n_links)
+    assert table.hops.min(initial=7, where=table.hops > 0) < table.h_max
+    # poison every slot past the hop count with a real link id (0)
+    poison = table.paths.copy()
+    mask = np.arange(table.h_max)[None, None, :] >= table.hops[..., None]
+    poison[mask] = 0
+    got = RouteTable(paths=poison, hops=table.hops).link_load(n_links)
+    np.testing.assert_array_equal(got, want)
+    # pairs path goes through the same mask
+    pairs = [(0, 5), (0, 1), (3, 11)]
+    np.testing.assert_array_equal(
+        RouteTable(paths=poison, hops=table.hops).link_load(n_links, pairs),
+        table.link_load(n_links, pairs))
+
+
 def test_routes_for_pairs_bounds_checked():
     table = FabricSpec.dragonfly(a=2, p=1, h=1).route_table()
     with pytest.raises(ValueError):
