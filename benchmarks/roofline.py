@@ -1,4 +1,5 @@
-"""§Roofline — three-term roofline from the dry-run artifacts.
+"""§Roofline — three-term roofline from the dry-run artifacts, plus
+the analytic roofline of the CC hot-loop kernels.
 
 Per (arch x shape) on the single-pod mesh:
     compute    = HLO_FLOPs / peak_FLOPs            (per device)
@@ -6,6 +7,14 @@ Per (arch x shape) on the single-pod mesh:
     collective = collective_bytes / link_bw        (per device)
 plus MODEL_FLOPS = 6·N·D (6·N_active·D for MoE) and the useful-compute
 ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy waste).
+
+CC kernels (``cc_kernel_rows``): the fluid-reduce segment reduction
+and the fused per-flow block (gen/np-timer + RP + ERP) are pure
+bandwidth shapes — a handful of adds per element over many state
+vectors — so their roofline is the HBM term: one read of every input
+vector + one write of every output per dt.  The rows report the
+bytes-per-step each kernel moves at DC scale and the implied ceiling
+on steps/sec, alongside the attention kernels' measured cells.
 
 Hardware constants (TPU v5e per assignment): 197 TFLOP/s bf16,
 819 GB/s HBM, ~50 GB/s/link ICI.
@@ -92,11 +101,65 @@ def to_markdown(rows: list[dict]) -> str:
     return hdr + body
 
 
+def cc_kernel_rows() -> list[dict]:
+    """Analytic roofline cells for the fluid hot-loop kernels.
+
+    Shapes follow the perf harness's scaling curve extrapolated to DC
+    scale (10^5..10^6 flows).  Bytes are f32 vectors moved per dt:
+
+      * fluid_reduce — per reduction pass: [N, C] data + int32 segment
+        ids in, [S, C] sums out; the fluid step runs 3 passes with
+        (3, 3, 2) channels over N = F*K*H rows, S = L+1 links.
+      * cc_flow_block — gen/np-timer (9 in / 4 out), RP (9/8) and ERP
+        (5/5 incl. params) per-flow kernels: 40 [F] vectors total, the
+        "one HBM round trip per state vector" budget.
+    """
+    rows = []
+    for F, K, H, L in [(1 << 17, 1, 6, 1 << 14), (1 << 20, 4, 6, 1 << 16)]:
+        n = F * K * H
+        passes = ((3, n), (3, n), (2, n))
+        red_bytes = sum(c * n * 4 + n * 4 + c * (L + 1) * 4
+                        for c, n in passes)
+        red_flops = sum(c * n for c, n in passes)
+        flow_bytes = 40 * F * 4
+        flow_flops = 60 * F
+        for name, byts, flops in [
+                ("fluid_reduce", red_bytes, red_flops),
+                ("cc_flow_block", flow_bytes, flow_flops)]:
+            t_mem = byts / HBM_BW
+            t_comp = flops / PEAK_FLOPS
+            rows.append({
+                "kernel": name,
+                "shape": f"f{F}k{K}l{L}",
+                "bytes_per_step": byts,
+                "memory_s": t_mem,
+                "compute_s": t_comp,
+                "dominant": "memory" if t_mem >= t_comp else "compute",
+                "steps_per_s_ceiling": 1.0 / max(t_mem, t_comp),
+            })
+    return rows
+
+
+def cc_to_markdown(rows: list[dict]) -> str:
+    hdr = ("| kernel | shape | MB/step | memory s | dominant | "
+           "steps/s ceiling |\n|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += (f"| {r['kernel']} | {r['shape']} | "
+                 f"{r['bytes_per_step'] / 2**20:.1f} | "
+                 f"{r['memory_s']:.3e} | **{r['dominant']}** | "
+                 f"{r['steps_per_s_ceiling']:.3e} |\n")
+    return hdr + body
+
+
 def main() -> list[tuple]:
     rows = build_table()
+    cc_rows = cc_kernel_rows()
     os.makedirs("artifacts", exist_ok=True)
     with open("artifacts/roofline.md", "w") as f:
         f.write(to_markdown(rows))
+        f.write("\n## CC hot-loop kernels (analytic)\n\n")
+        f.write(cc_to_markdown(cc_rows))
     out = []
     for r in rows:
         out.append((f"roofline.{r['arch']}.{r['shape']}",
@@ -104,6 +167,11 @@ def main() -> list[tuple]:
                         r["collective_s"]) * 1e6,
                     f"dom={r['dominant']} frac={r['roofline_fraction']:.3f}"
                     f" useful={r['useful_ratio']:.2f}"))
+    for r in cc_rows:
+        out.append((f"roofline.cc.{r['kernel']}.{r['shape']}",
+                    r["memory_s"] * 1e6,
+                    f"dom={r['dominant']} "
+                    f"ceil={r['steps_per_s_ceiling']:.2e}steps/s"))
     return out
 
 

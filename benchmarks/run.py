@@ -13,6 +13,11 @@ beyond-paper harnesses.  Prints ``name,us_per_call,derived`` CSV.
 single jitted launch) and exits non-zero on failure — the CI hook.
 ``--scale`` runs only the fabric matrix and appends a record to
 ``BENCH_net.json`` (``--quick`` shrinks it to CI size).
+``--perf`` runs the fluid hot-loop F/L scaling curve (fused one-pass
+reduction vs the legacy scatter path) and appends a record to
+``BENCH_fluid.json``; with ``--check`` it exits non-zero when the
+fused/scat speedup falls below 80% of the committed baseline's (floor
+capped at 2.0x for cross-runner noise — the CI perf-smoke gate).
 """
 
 from __future__ import annotations
@@ -108,18 +113,26 @@ def main() -> None:
                     help="one tiny end-to-end sweep (CI tier-1 hook)")
     ap.add_argument("--scale", action="store_true",
                     help="fabric-family scaling matrix -> BENCH_net.json")
+    ap.add_argument("--perf", action="store_true",
+                    help="fluid hot-loop scaling curve -> BENCH_fluid.json")
+    ap.add_argument("--check", action="store_true",
+                    help="with --perf: fail when fused/scat speedup "
+                         "drops below 80%% of the committed "
+                         "BENCH_fluid.json baseline (floor capped at "
+                         "2.0x for cross-runner noise)")
     ap.add_argument("--quick", action="store_true",
-                    help="with --scale: CI-sized matrix")
+                    help="with --scale/--perf: CI-sized grid")
     args = ap.parse_args()
     if args.smoke:
         raise SystemExit(smoke())
 
     if __package__:
         from . import (ablation, cc_scale, cosim, fig2_throughput,
-                       fig3_perflow, net_scale, roofline)
+                       fig3_perflow, net_scale, perf_fluid, roofline)
     else:                    # `python benchmarks/run.py` (no package ctx)
         import ablation, cc_scale, cosim, fig2_throughput  # noqa: E401
-        import fig3_perflow, net_scale, roofline           # noqa: E401
+        import fig3_perflow, net_scale, perf_fluid         # noqa: E401
+        import roofline                                    # noqa: E401
 
     if args.scale:
         rows = _section("net_scale",
@@ -129,12 +142,22 @@ def main() -> None:
             raise SystemExit(1)
         return
 
+    if args.perf:
+        rows = _section("perf_fluid",
+                        lambda: perf_fluid.main(quick=args.quick,
+                                                check=args.check))
+        _print_rows(rows)
+        if any(".ERROR" in r[0] or "REGRESSION" in r[0] for r in rows):
+            raise SystemExit(1)
+        return
+
     all_rows = []
     all_rows += _section("fig2", fig2_throughput.main)
     all_rows += _section("fig3", fig3_perflow.main)
     all_rows += _section("ablation", ablation.main)
     all_rows += _section("cc_scale", cc_scale.main)
     all_rows += _section("net_scale", net_scale.main)
+    all_rows += _section("perf_fluid", lambda: perf_fluid.main(quick=True))
     all_rows += _section("roofline", roofline.main)
     all_rows += _section("cosim", cosim.main)
     all_rows += _section("train", bench_train_step)

@@ -17,10 +17,12 @@ Public surface:
 from .params import (CCConfig, CCScheme, DCQCNParams, LinkParams,
                      PAPER_CONFIG, ROUTING_MODES, RevParams, SimParams)
 from .topology import ClosIndex, Topology, make_clos3, make_paper_clos
-from .routing import build_flow_routes, clos_route, route_hops
+from .routing import (build_flow_routes, clos_route, link_incidence,
+                      route_hops)
 from .fluid import (FluidState, Scenario, ScenarioDev, StepParams,
-                    delay_depth, fluid_step, init_state, make_step_fn,
-                    scenario_device, step_params)
+                    delay_depth, dense_reduce_rows, fluid_step,
+                    init_state, make_step_fn, scenario_device,
+                    step_params)
 from .simulator import SimResult, run, run_all_schemes
 from .experiments import (ScenarioSpec, Sweep, SweepResult, config_grid,
                           pad_scenario, stack_scenarios)
@@ -33,10 +35,12 @@ from . import workloads
 __all__ = [
     "CCConfig", "CCScheme", "DCQCNParams", "LinkParams", "PAPER_CONFIG",
     "ROUTING_MODES", "RevParams", "SimParams", "ClosIndex", "Topology", "make_clos3",
-    "make_paper_clos", "build_flow_routes", "clos_route", "route_hops",
+    "make_paper_clos", "build_flow_routes", "clos_route",
+    "link_incidence", "route_hops",
     "FluidState", "Scenario", "ScenarioDev", "StepParams", "delay_depth",
-    "fluid_step", "init_state", "make_step_fn", "scenario_device",
-    "step_params", "SimResult", "run", "run_all_schemes",
+    "dense_reduce_rows", "fluid_step", "init_state", "make_step_fn",
+    "scenario_device", "step_params", "SimResult", "run",
+    "run_all_schemes",
     "ScenarioSpec", "Sweep", "SweepResult", "config_grid",
     "pad_scenario", "stack_scenarios", "PAPER_FLOW_NAMES",
     "collective_flows", "incast", "paper_incast", "paper_incast_volume",

@@ -41,8 +41,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .fluid import (FluidState, Scenario, delay_depth, fluid_step,
-                    init_state, scenario_device, step_params)
+from .fluid import (FluidState, Scenario, clamp_dense_rows, delay_depth,
+                    dense_reduce_rows, fluid_step, init_state,
+                    scenario_device, step_params)
 from .params import CCConfig
 from .routing import PAD, route_hops
 from .simulator import SimResult, _resolve_steps, decimating_scan
@@ -238,14 +239,17 @@ class ScenarioSpec:
         # n_paths > 1 pulls the fabric's multi-path RouteSet instead:
         # slot 0 (minimal) fills the legacy single-path tensors, the
         # full candidate stack rides along for run-time selection.
+        # flow_routes / flow_route_set are cached per (spec hash, pairs):
+        # every grid point sharing a fabric reuses one extraction, and
+        # the identical arrays downstream hit the device-upload and
+        # incidence caches of ``scenario_device``.
         alt_routes = alt_hops = None
         if self.n_paths > 1:
-            rset = fab.route_set(self.n_paths, seed=self.route_seed)
-            alt_routes = rset.routes_for_pairs(pairs)
-            alt_hops = rset.hops_for_pairs(pairs)
+            alt_routes, alt_hops = fab.flow_route_set(
+                pairs, self.n_paths, seed=self.route_seed)
             routes = alt_routes[:, 0].copy()
         else:
-            routes = fab.route_table().routes_for_pairs(pairs)
+            routes = fab.flow_routes(pairs)
         F = len(pairs)
         hops = route_hops(routes)
         # CNP feedback delay ~ 2 * hops * (prop + serialisation) + NIC
@@ -411,19 +415,43 @@ def config_grid(cfg: CCConfig, **axes) -> dict[str, CCConfig]:
     return out
 
 
-@functools.partial(jax.jit, static_argnums=(3, 4, 5, 6))
-def _sweep_scan(st_b, sd_b, par_b, n_samples: int, trace_every: int,
-                dt: float, n_switches: int):
-    """The whole sweep: one vmap-of-(decimating)-scan, jitted once per
-    batch shape.  Re-running a same-shaped sweep reuses the executable."""
+@functools.lru_cache(maxsize=32)
+def _sweep_exec(n_samples: int, trace_every: int, dt: float,
+                n_switches: int, reduce: str, dense_rows: int,
+                use_kernels: bool, interpret: bool, mesh):
+    """Build + jit the sweep executable for one static configuration.
 
-    def step(st):
-        return jax.vmap(
-            lambda s, sd, par: fluid_step(s, sd, par, dt=dt,
-                                          n_switches=n_switches)
-        )(st, sd_b, par_b)
+    The whole sweep is one vmap-of-(decimating)-scan; re-running a
+    same-shaped sweep reuses the jitted executable.  With ``mesh`` the
+    run axis is sharded over every mesh axis via ``shard_map`` — each
+    device advances (and decimates the traces of) its own slice of the
+    run batch, with zero cross-device communication, so a sharded sweep
+    is bitwise the single-device sweep cut into ``mesh.size`` pieces.
+    """
 
-    return decimating_scan(step, st_b, n_samples, trace_every, dt)
+    def scan_fn(st_b, sd_b, par_b):
+        def step(st):
+            return jax.vmap(
+                lambda s, sd, par: fluid_step(
+                    s, sd, par, dt=dt, n_switches=n_switches,
+                    reduce=reduce, dense_rows=dense_rows,
+                    use_kernels=use_kernels, interpret=interpret)
+            )(st, sd_b, par_b)
+
+        return decimating_scan(step, st_b, n_samples, trace_every, dt)
+
+    if mesh is None:
+        return jax.jit(scan_fn)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    run_spec = P(tuple(mesh.axis_names))     # leading run axis sharded
+    sharded = shard_map(
+        scan_fn, mesh=mesh,
+        in_specs=(run_spec, run_spec, run_spec),
+        # decimating_scan returns (final [R, ...], traces [T, R, ...])
+        out_specs=(run_spec, P(None, *run_spec)),
+        check_rep=False)
+    return jax.jit(sharded)
 
 
 class Sweep:
@@ -475,7 +503,21 @@ class Sweep:
         return cls(points)
 
     def run(self, n_steps: int | None = None,
-            trace_every: int | None = None) -> "SweepResult":
+            trace_every: int | None = None, *, mesh=None,
+            reduce: str = "fused", use_kernels: bool = False,
+            interpret: bool = False) -> "SweepResult":
+        """Execute all points as one device launch.
+
+        ``mesh``: a ``jax.sharding.Mesh`` (e.g. ``repro.dist.sweep_mesh()``)
+        shards the run axis across its devices with ``shard_map``; the
+        batch is padded to a multiple of ``mesh.size`` by replicating
+        the last point (padding runs are discarded on return) and each
+        shard decimates its own traces.  Results are bitwise identical
+        to the single-device launch, run for run.
+
+        ``reduce`` / ``use_kernels`` / ``interpret`` select the per-step
+        reduction engine and Pallas per-flow block (see ``fluid_step``).
+        """
         cfg0 = self.points[0].cfg
         n_samples, k = _resolve_steps(cfg0, n_steps, trace_every)
         scns = [p.scenario for p in self.points]
@@ -488,15 +530,40 @@ class Sweep:
         par_b = jax.tree.map(
             lambda *xs: jnp.stack(xs),
             *[step_params(p.cfg) for p in self.points])
-        final, tr = _sweep_scan(st_b, sd_b, par_b, n_samples, k,
-                                float(cfg0.sim.dt), n_sw)
+        R = len(self.points)
+        if mesh is not None and R % mesh.size:
+            pad_r = mesh.size - R % mesh.size    # replicate the last run
+            rep = lambda x: jnp.concatenate(
+                [x] + [x[-1:]] * pad_r, axis=0)
+            st_b, sd_b, par_b = (jax.tree.map(rep, t)
+                                 for t in (st_b, sd_b, par_b))
+        # dense-CSR engine: static row count must cover every run in
+        # the batch; any over-skew scenario disables it for the batch,
+        # and the batch-wide max is re-clamped so one skewed run can't
+        # force the rest onto an oversized table
+        dense_rows = 0
+        if reduce == "fused":
+            mls = [dense_reduce_rows(s) for s in padded]
+            if 0 not in mls:
+                s0 = padded[0]
+                K = (1 if s0.alt_routes is None
+                     else s0.alt_routes.shape[1])
+                dense_rows = clamp_dense_rows(
+                    max(mls), s0.capacity.shape[0],
+                    s0.routes.shape[0] * K * s0.routes.shape[1])
+        exec_fn = _sweep_exec(n_samples, k, float(cfg0.sim.dt), n_sw,
+                              reduce, dense_rows, use_kernels, interpret,
+                              mesh)
+        final, tr = exec_fn(st_b, sd_b, par_b)
         times = (np.arange(n_samples) + 1) * k * cfg0.sim.dt
         # scan stacks samples on axis 0 -> [T, R, ...]; runs lead on host
         return SweepResult(
             points=self.points, times=times,
             traces=jax.tree.map(
-                lambda x: np.moveaxis(np.asarray(x), 0, 1), tr),
-            final=jax.device_get(final), trace_every=k)
+                lambda x: np.moveaxis(np.asarray(x), 0, 1)[:R], tr),
+            final=jax.tree.map(lambda x: np.asarray(x)[:R],
+                               jax.device_get(final)),
+            trace_every=k)
 
 
 def _slice_final(fin: FluidState, r: int, F: int) -> FluidState:

@@ -64,6 +64,9 @@ Layering (the Sweep engine in ``experiments.py`` builds on this):
 
 from __future__ import annotations
 
+import collections
+import functools
+import hashlib
 from typing import NamedTuple
 
 import jax
@@ -71,7 +74,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .params import CCConfig, CCScheme, ROUTING_MODES
-from .routing import PAD
+from .routing import PAD, link_incidence
 
 
 class Scenario(NamedTuple):
@@ -118,6 +121,21 @@ class ScenarioDev(NamedTuple):
     nic_buffer: jnp.ndarray   # [F] f32 (host scalars broadcast per flow)
     alt_routes: jnp.ndarray   # [F, K, H] int32 (K = 1 mirrors ``routes``)
     alt_hops: jnp.ndarray     # [F, K] int32
+    # per-flow ERP recovery jitter (Weyl sequence), hoisted here so the
+    # step never rebuilds host constants inside a trace
+    jitter: jnp.ndarray       # [F] f32
+    # fused-reduction incidence (see core.routing.link_incidence): the
+    # flattened [F*K*H] candidate entries stably sorted by link id.
+    # Every per-link scatter-add of the step becomes one gather by
+    # ``red_perm`` + sorted multi-channel segment sum over ``red_seg``;
+    # ``red_off`` are the CSR offsets the Pallas kernel tiles by.
+    red_perm: jnp.ndarray     # [F*K*H] int32
+    red_seg: jnp.ndarray      # [F*K*H] int32
+    red_off: jnp.ndarray      # [L+2] int32
+    # same trick for the per-switch shared-pool reduction: link ids
+    # stably sorted by sink switch (host sinks -> scratch segment)
+    pool_perm: jnp.ndarray    # [L] int32
+    pool_seg: jnp.ndarray     # [L] int32
 
 
 class StepParams(NamedTuple):
@@ -225,30 +243,149 @@ def _flow_jitter(n: int) -> np.ndarray:
     return (x.astype(np.float64) / 2**31 - 1.0).astype(np.float32)
 
 
+@functools.lru_cache(maxsize=128)
+def _index_consts(F: int, H: int) -> tuple[np.ndarray, np.ndarray]:
+    """(arange_h [1, H], fidx [F]) — shared across traces of one shape."""
+    return (np.arange(H, dtype=np.int32)[None, :],
+            np.arange(F, dtype=np.int32))
+
+
+def _digest(x: np.ndarray) -> tuple:
+    x = np.ascontiguousarray(x)
+    return (x.shape, x.dtype.str, hashlib.sha1(x.tobytes()).hexdigest())
+
+
+def _memo_lru(cache: collections.OrderedDict, maxsize: int, key, fn):
+    """Bounded content-keyed LRU shared by the host-side caches below."""
+    hit = cache.get(key)
+    if hit is not None:
+        cache.move_to_end(key)
+        return hit
+    out = cache[key] = fn()
+    while len(cache) > maxsize:
+        cache.popitem(last=False)
+    return out
+
+
+# Content-keyed device-placement cache.  A sweep's grid points mostly
+# share a FabricSpec, so the route/capacity/incidence tensors of every
+# point are byte-identical; hashing is cheaper than re-uploading (and
+# than re-sorting the incidence).  Keys carry shape + dtype + digest, so
+# two different tensors never alias.  Bounded LRU: a long-lived process
+# sweeping many fabrics cannot leak device memory.
+_PUT_CACHE: "collections.OrderedDict[tuple, jnp.ndarray]" = \
+    collections.OrderedDict()
+_PUT_CACHE_SIZE = 256
+
+_INC_CACHE: "collections.OrderedDict[tuple, tuple]" = collections.OrderedDict()
+_INC_CACHE_SIZE = 128
+
+
+def _cached_put(x: np.ndarray, dtype) -> jnp.ndarray:
+    x = np.ascontiguousarray(np.asarray(x, dtype))
+    return _memo_lru(_PUT_CACHE, _PUT_CACHE_SIZE, _digest(x),
+                     lambda: jnp.asarray(x))
+
+
+def _incidence(alt_routes: np.ndarray, n_links: int):
+    """``link_incidence`` memoised on route-stack content (the sort is
+    O(FKH log FKH) on host; grid points sharing a fabric pay it once)."""
+    return _memo_lru(_INC_CACHE, _INC_CACHE_SIZE,
+                     _digest(alt_routes) + (n_links,),
+                     lambda: link_incidence(alt_routes, n_links))
+
+
+def _pool_incidence(sink_switch: np.ndarray, n_switches: int):
+    """Link ids stably sorted by sink switch (-1 hosts -> scratch)."""
+    seg = np.where(sink_switch >= 0, sink_switch, n_switches)
+    perm = np.argsort(seg, kind="stable").astype(np.int32)
+    return perm, seg[perm].astype(np.int32)
+
+
+#: Longest per-link contributor list the dense reduction will tile; more
+#: skewed scenarios (massive incast onto one link) fall back to the
+#: sorted segment-sum engine.
+DENSE_ROWS_CAP = 1024
+
+
+def clamp_dense_rows(ml: int, n_links: int, n_entries: int) -> int:
+    """Apply the dense-CSR size guard to a row count (0 = disable).
+
+    One guard for single scenarios AND batches: a batch must re-clamp
+    its *maximum* per-run row count here, otherwise one high-skew run
+    would drag every run onto an oversized [L, rows] table the
+    per-scenario check was meant to refuse.
+    """
+    if ml == 0 or ml > DENSE_ROWS_CAP:
+        return 0
+    if n_links * ml > max(16 * n_entries, 1 << 20):
+        return 0
+    return ml
+
+
+def dense_reduce_rows(scn: Scenario) -> int:
+    """Static row count for the dense-CSR fused reduction (0 = disable).
+
+    The fused reduction can run scatter-free: lay each link's (sorted)
+    contributors out as a dense [L, rows] table derived from the CSR
+    offsets and accumulate positions left-to-right — bit-identical to
+    the sequential scatter, but pure gathers + vector adds.  The table
+    blows up with load skew (rows = max contributors on one link), so
+    scenarios past ``DENSE_ROWS_CAP`` — or whose table would dwarf the
+    incidence itself — report 0 and use the segment-sum engine.
+    """
+    alt = scn.routes[:, None, :] if scn.alt_routes is None \
+        else scn.alt_routes
+    alt = np.asarray(alt, np.int32)
+    L = scn.capacity.shape[0]
+    if L == 0:
+        return 0
+    _, _, off = _incidence(alt, L)
+    ml = int(np.max(off[1:L + 1] - off[:L]))
+    return clamp_dense_rows(ml, L, alt.size)
+
+
 def scenario_device(scn: Scenario) -> ScenarioDev:
-    """Move one scenario's tensors to device-ready arrays."""
+    """Move one scenario's tensors to device-ready arrays.
+
+    Fabric-shaped tensors (routes, capacities, incidence) go through a
+    content-keyed placement cache: grid points sharing a ``FabricSpec``
+    upload them once instead of once per point.
+    """
     if scn.alt_routes is None:          # single-path: K = 1 mirror
         alt_routes = scn.routes[:, None, :]
         alt_hops = scn.hops[:, None]
     else:
         alt_routes, alt_hops = scn.alt_routes, scn.alt_hops
+    alt_routes = np.asarray(alt_routes, np.int32)
+    F = scn.routes.shape[0]
+    L = scn.capacity.shape[0]
+    perm, seg, off = _incidence(alt_routes, L)
+    pool_perm, pool_seg = _pool_incidence(
+        np.asarray(scn.sink_switch, np.int32), int(scn.n_switches))
     return ScenarioDev(
-        alt_routes=jnp.asarray(alt_routes, jnp.int32),
-        alt_hops=jnp.asarray(alt_hops, jnp.int32),
+        alt_routes=_cached_put(alt_routes, np.int32),
+        alt_hops=_cached_put(alt_hops, np.int32),
         gen_rate=jnp.asarray(scn.gen_rate, jnp.float32),
         t_start=jnp.asarray(scn.t_start, jnp.float32),
         t_stop=jnp.asarray(scn.t_stop, jnp.float32),
         volume=jnp.asarray(scn.volume, jnp.float32),
-        cap_ext=jnp.asarray(
-            np.concatenate([scn.capacity, [np.inf]]), jnp.float32),
-        sink_ext=jnp.asarray(
-            np.concatenate([scn.sink_switch, [-1]]), jnp.int32),
+        cap_ext=_cached_put(
+            np.concatenate([scn.capacity, [np.inf]]), np.float32),
+        sink_ext=_cached_put(
+            np.concatenate([scn.sink_switch, [-1]]), np.int32),
         rtt=jnp.asarray(scn.rtt_steps, jnp.int32),
         # broadcast to [F] so scalar- and per-flow-buffer scenarios share
         # one device shape (batched sweeps stack them along a run axis)
         nic_buffer=jnp.broadcast_to(
             jnp.asarray(scn.nic_buffer, jnp.float32),
             scn.routes.shape[:1]),
+        jitter=_cached_put(_flow_jitter(F), np.float32),
+        red_perm=_cached_put(perm, np.int32),
+        red_seg=_cached_put(seg, np.int32),
+        red_off=_cached_put(off, np.int32),
+        pool_perm=_cached_put(pool_perm, np.int32),
+        pool_seg=_cached_put(pool_seg, np.int32),
     )
 
 
@@ -365,20 +502,53 @@ def _react_erp(st: FluidState, par: StepParams, cnp, tgt_rx, erp_slope, dt):
 
 
 def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
-               dt: float, n_switches: int):
+               dt: float, n_switches: int, reduce: str = "fused",
+               dense_rows: int = 0, use_kernels: bool = False,
+               interpret: bool = False):
     """One ``dt`` update: (state, scenario, params) -> (state, trace).
 
-    Pure in all array arguments; ``dt`` / ``n_switches`` are static.
-    ``sd`` and ``par`` are data, so a sweep vmaps this over a leading run
-    axis with a single compilation.
+    Pure in all array arguments; ``dt`` / ``n_switches`` and the
+    pipeline switches are static.  ``sd`` and ``par`` are data, so a
+    sweep vmaps this over a leading run axis with a single compilation.
+
+    ``reduce`` picks the per-link reduction engine:
+      * ``"fused"`` (default) — every per-link sum rides one of three
+        multi-channel sorted segment reductions over the precomputed
+        incidence (``sd.red_perm``/``red_seg``), bit-identical to the
+        scatter path (stable sort preserves each link's contributor
+        order; interleaved +0.0 terms from unselected candidates are
+        exact no-ops).
+      * ``"pallas"`` — same fused layout, summed by the
+        ``repro.kernels.fluid_reduce`` Pallas TPU kernel (all channels
+        resident in VMEM, ordered accumulation, so still bit-exact).
+      * ``"scat"`` — the legacy one-scatter-per-quantity path, kept as
+        the parity/benchmark baseline.
+
+    ``dense_rows`` (static, from ``dense_reduce_rows``) upgrades the
+    ``"fused"`` engine to the scatter-free dense-CSR form: each pass
+    gathers contributors into a [L, dense_rows] table and accumulates
+    positions left-to-right — the fastest path when link load is not
+    pathologically skewed, still bit-identical.  Must cover the longest
+    per-link contributor list; 0 keeps the segment-sum engine.
+
+    ``use_kernels`` routes the per-flow block (generation, notification
+    timer, RP/ERP reaction) through the Pallas kernels in
+    ``repro.kernels.cc_step`` — one HBM round trip per state vector
+    instead of one per intermediate.  ``interpret=True`` runs every
+    Pallas kernel in interpreter mode (CPU tests).
     """
+    if reduce not in ("fused", "pallas", "scat"):
+        raise ValueError(
+            f"reduce must be 'fused', 'pallas' or 'scat', got {reduce!r}")
+    fused = reduce != "scat"
     F, K, H = sd.alt_routes.shape
     L = sd.cap_ext.shape[0] - 1
     D = st.trig_buf.shape[0]
     dt = jnp.float32(dt)
 
-    arange_h = jnp.arange(H, dtype=jnp.int32)[None, :]
-    fidx = jnp.arange(F, dtype=jnp.int32)
+    _ah, _fi = _index_consts(F, H)
+    arange_h = jnp.asarray(_ah)
+    fidx = jnp.asarray(_fi)
     t_sec = st.t.astype(jnp.float32) * dt
 
     def pick_paths(k_idx):
@@ -387,6 +557,59 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
                                 axis=1)[:, 0]
         h = jnp.take_along_axis(sd.alt_hops, k_idx[:, None], axis=1)[:, 0]
         return r, h
+
+    if fused and dense_rows:
+        # dense-CSR row table, shared by every reduction pass this
+        # step: position p of link l reads sorted row off[l] + p (the
+        # sentinel F*K*H reads an all-zero row).
+        _lens = sd.red_off[1:L + 1] - sd.red_off[:L]        # [L]
+        _pos = jnp.arange(dense_rows, dtype=jnp.int32)[None, :]
+        dense_idx = jnp.where(_pos < _lens[:, None],
+                              sd.red_off[:L, None] + _pos,
+                              F * K * H).reshape(-1)
+
+    def link_sums(channels, k_sel):
+        """All per-link sums of the [F, H] ``channels`` in ONE sweep.
+
+        Channels are laid out on candidate slot ``k_sel`` per flow
+        (zeros elsewhere) and gathered into the link-sorted incidence
+        order; one [F*K*H, C] pass produces every [L+1] per-link
+        vector at once instead of C scatters.  The pass is summed by
+        the dense-CSR tiles, the Pallas kernel, or a sorted segment
+        sum — all three accumulate each link's contributors in the
+        same order, so the result is bit-identical across engines.
+        """
+        data = jnp.stack(channels, axis=-1)                 # [F, H, C]
+        C = data.shape[-1]
+        if K > 1:
+            onehot = (jnp.arange(K, dtype=jnp.int32)[None, :]
+                      == k_sel[:, None])                    # [F, K]
+            data = data[:, None] * \
+                onehot[:, :, None, None].astype(jnp.float32)
+        data = jnp.take(data.reshape(F * K * H, C), sd.red_perm, axis=0)
+        if reduce == "pallas":
+            from repro.kernels.fluid_reduce import segment_reduce
+            sums = segment_reduce(data, sd.red_seg, L + 1,
+                                  interpret=interpret)
+        elif dense_rows:
+            data_ext = jnp.concatenate(
+                [data, jnp.zeros((1, C), jnp.float32)])
+            dense = jnp.take(data_ext, dense_idx,
+                             axis=0).reshape(L, dense_rows, C)
+
+            def body(p, acc):
+                return acc + jax.lax.dynamic_slice_in_dim(
+                    dense, p, 1, 1)[:, 0]
+
+            acc = jax.lax.fori_loop(0, dense_rows, body,
+                                    jnp.zeros((L, C), jnp.float32))
+            sums = jnp.concatenate(
+                [acc, jnp.zeros((1, C), jnp.float32)])
+        else:
+            sums = jax.ops.segment_sum(data, sd.red_seg,
+                                       num_segments=L + 1,
+                                       indices_are_sorted=True)
+        return [sums[:, c] for c in range(C)]
 
     # ---- 0. path selection (min / valiant / ugal) -------------------------
     if K == 1:
@@ -400,9 +623,13 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
         routes_old, hops_old = pick_paths(st.path_idx)
         v_old = routes_old != PAD
         hq_old = v_old & (arange_h < (hops_old[:, None] - 1))
-        B_prev = jnp.zeros((L + 1,), jnp.float32).at[
-            jnp.where(v_old, routes_old, L)].add(
-                jnp.where(hq_old, st.qh, 0.0))
+        if fused:
+            (B_prev,) = link_sums([jnp.where(hq_old, st.qh, 0.0)],
+                                  st.path_idx)
+        else:
+            B_prev = jnp.zeros((L + 1,), jnp.float32).at[
+                jnp.where(v_old, routes_old, L)].add(
+                    jnp.where(hq_old, st.qh, 0.0))
 
         def path_cost(k_idx):
             """UGAL cost: hop count x backlog along the candidate."""
@@ -438,8 +665,7 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     widx = jnp.where(valid, routes, L)         # PAD -> scratch slot L
     is_last = valid & (arange_h == (hops[:, None] - 1))
     holds_queue = valid & (arange_h < (hops[:, None] - 1))
-    jitter = jnp.asarray(_flow_jitter(F))
-    erp_slope = par.erp_rai * (1.0 + par.erp_jitter * jitter)
+    erp_slope = par.erp_rai * (1.0 + par.erp_jitter * sd.jitter)
     eps_rate = jnp.float32(1e6)                # B/s: "active" demand
 
     def scat(values_fh, init=0.0):
@@ -448,14 +674,22 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
         return out.at[widx].add(values_fh)
 
     # ---- 1. generation ----------------------------------------------------
-    active = (t_sec >= sd.t_start) & (t_sec < sd.t_stop)
-    gen = jnp.where(active, sd.gen_rate, 0.0) * dt
-    gen = jnp.minimum(gen, jnp.maximum(sd.volume - st.offered, 0.0))
-    nicq = st.nicq + gen
-    over = jnp.maximum(nicq - sd.nic_buffer, 0.0)
-    nicq = nicq - over
-    offered = st.offered + gen - over
-    dropped = st.dropped + over
+    if use_kernels:
+        from repro.kernels.cc_step import gen_np_step
+        nicq, offered, dropped, np_tmr_t = gen_np_step(
+            st.nicq, st.offered, st.dropped, st.np_tmr,
+            sd.gen_rate, sd.t_start, sd.t_stop, sd.volume, sd.nic_buffer,
+            t_sec=t_sec, dt=dt, interpret=interpret)
+    else:
+        active = (t_sec >= sd.t_start) & (t_sec < sd.t_stop)
+        gen = jnp.where(active, sd.gen_rate, 0.0) * dt
+        gen = jnp.minimum(gen, jnp.maximum(sd.volume - st.offered, 0.0))
+        nicq = st.nicq + gen
+        over = jnp.maximum(nicq - sd.nic_buffer, 0.0)
+        nicq = nicq - over
+        offered = st.offered + gen - over
+        dropped = st.dropped + over
+        np_tmr_t = st.np_tmr + dt              # notification-window tick
 
     # ---- 2. transfers -----------------------------------------------------
     src_inj = jnp.minimum(nicq, jnp.minimum(st.rate, par.line_rate) * dt)
@@ -470,13 +704,18 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     next_open = jnp.concatenate(
         [wire_open[:, 1:], jnp.ones((F, 1), bool)], axis=1)
     q_here = jnp.where(holds_queue, st.qh, 0.0)        # queue at sink(h)
-    num = scat(q_here * next_open)
-    den = scat(q_here)
+    weight = jnp.where(wire_open, src_q, 0.0)
+    caps_w = sd.cap_ext[widx]                          # [F,H]
+    if fused:
+        num, den, sum_w = link_sums(
+            [q_here * next_open, q_here, weight], path_idx)
+    else:
+        num = scat(q_here * next_open)
+        den = scat(q_here)
+        sum_w = scat(weight)
     fifo_ok = jnp.where(den > 0, num / jnp.maximum(den, 1e-9), 1.0)
 
-    weight = jnp.where(wire_open, src_q, 0.0)
-    sum_w = scat(weight)
-    budget = sd.cap_ext[widx] * dt * fifo_ok[widx]
+    budget = caps_w * dt * fifo_ok[widx]
     share = jnp.where(sum_w[widx] > 0,
                       budget * weight / jnp.maximum(sum_w[widx], 1e-9),
                       0.0)
@@ -492,34 +731,55 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     # crossing-rate EWMA (doubles as arrival-into-queue estimate)
     est = (1 - par.ecp_beta) * st.est + par.ecp_beta * (T / dt)
 
+    # Demand to cross wire h = arrival rate into the queue feeding it
+    # (pre-stall, so FIFO-blocked victims keep their true demand).
+    # Computed here so the post-transfer reduction pass covers the PFC
+    # sink queues AND the marking activity sums in one sweep.
+    dem = jnp.concatenate([est[:, :1], est[:, :-1]], axis=1)
+    dem = jnp.where(valid, dem, 0.0)
+    act = (dem > eps_rate) & valid
+
     # ---- 3. PFC -----------------------------------------------------------
-    B = scat(jnp.where(holds_queue, qh, 0.0))[:L]      # [L] sink queues
+    if fused:
+        B_ext, n_act, sum_dem = link_sums(
+            [jnp.where(holds_queue, qh, 0.0),
+             act.astype(jnp.float32),
+             jnp.where(act, dem, 0.0)], path_idx)
+        B = B_ext[:L]                                  # [L] sink queues
+    else:
+        B = scat(jnp.where(holds_queue, qh, 0.0))[:L]
+        n_act = scat(act.astype(jnp.float32), init=0.0)
+        sum_dem = scat(jnp.where(act, dem, 0.0))
     paused = jnp.where(B > par.xoff, True,
                        jnp.where(B < par.xon, False, st.paused))
     sink_l = sd.sink_ext[:L]
-    pool = jnp.zeros((n_switches,), jnp.float32).at[
-        jnp.maximum(sink_l, 0)].add(jnp.where(sink_l >= 0, B, 0.0))
+    if fused:
+        pool = jax.ops.segment_sum(
+            jnp.take(jnp.where(sink_l >= 0, B, 0.0), sd.pool_perm),
+            sd.pool_seg, num_segments=n_switches + 1,
+            indices_are_sorted=True)[:n_switches]
+    else:
+        pool = jnp.zeros((n_switches,), jnp.float32).at[
+            jnp.maximum(sink_l, 0)].add(jnp.where(sink_l >= 0, B, 0.0))
     pool_hot = pool > par.pool_xoff
     paused = paused | jnp.where(sink_l >= 0,
                                 pool_hot[jnp.maximum(sink_l, 0)], False)
 
     # ---- 4. marking -------------------------------------------------------
     B1 = jnp.concatenate([B, jnp.zeros((1,), jnp.float32)])
-    q_over = B1[widx] > par.v_thresh                   # [F,H] queue hot?
+    B1_w = B1[widx]
+    q_over = B1_w > par.v_thresh                       # [F,H] queue hot?
     present = (qh > 0) | (T > 0)
 
-    # Demand to cross wire h = arrival rate into the queue feeding it
-    # (pre-stall, so FIFO-blocked victims keep their true demand).
-    dem = jnp.concatenate([est[:, :1], est[:, :-1]], axis=1)
-    dem = jnp.where(valid, dem, 0.0)
-    act = (dem > eps_rate) & valid
-    n_act = scat(act.astype(jnp.float32), init=0.0)
-    caps_w = sd.cap_ext[widx]
-    sum_dem = scat(jnp.where(act, dem, 0.0))
     share0 = caps_w / jnp.maximum(n_act[widx], 1.0)
     under = dem < share0
-    surplus = scat(jnp.where(act & under, share0 - dem, 0.0))
-    n_heavy = scat((act & ~under).astype(jnp.float32))
+    if fused:
+        surplus, n_heavy = link_sums(
+            [jnp.where(act & under, share0 - dem, 0.0),
+             (act & ~under).astype(jnp.float32)], path_idx)
+    else:
+        surplus = scat(jnp.where(act & under, share0 - dem, 0.0))
+        n_heavy = scat((act & ~under).astype(jnp.float32))
     grant = jnp.where(
         under, dem,
         share0 + surplus[widx] / jnp.maximum(n_heavy[widx], 1.0))
@@ -543,30 +803,72 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     # severity payload: fair grant at the marking queue, scaled down by
     # the queue's excess over V so standing backlog drains (ENP carries
     # "timely congestion severity", ERP converges to fair as B -> V).
-    qexc = jnp.clip((B1[widx] - par.v_thresh) / par.port_buffer, 0.0, 1.0)
+    qexc = jnp.clip((B1_w - par.v_thresh) / par.port_buffer, 0.0, 1.0)
     sev = grant_next * (1.0 - par.erp_drain_gain * qexc)
     tgt = jnp.min(jnp.where(mark_fh, sev, jnp.inf), axis=1)
     tgt = jnp.where(jnp.isfinite(tgt), tgt, par.line_rate)
 
     # ---- 5. notification (NP / ENP) --------------------------------------
-    np_tmr = st.np_tmr + dt
-    emit = marked & (np_tmr >= par.window)
-    np_tmr = jnp.where(emit, 0.0, np_tmr)
+    emit = marked & (np_tmr_t >= par.window)
+    np_tmr = jnp.where(emit, 0.0, np_tmr_t)
     # delay line sized >= max(rtt)+1 (see delay_depth), so the modulo is a
     # ring-buffer index, never an aliased (shortened) feedback delay.
     wslot = (st.t + sd.rtt) % D
-    trig_buf = st.trig_buf.at[wslot, fidx].add(emit.astype(jnp.float32))
-    tgt_buf = st.tgt_buf.at[wslot, fidx].set(
-        jnp.where(emit, tgt, st.tgt_buf[wslot, fidx]))
     rslot = st.t % D
-    cnp = trig_buf[rslot] > 0
-    tgt_rx = tgt_buf[rslot]
-    trig_buf = trig_buf.at[rslot].set(0.0)
+    if fused:
+        # branch-free ring ops: one-hot compare instead of scatters.
+        # Exact: each (wslot[f], f) cell gets the same single add/set,
+        # every other cell an exact +0.0 / keep; the read row rslot is
+        # disjoint from all write slots (0 < rtt < D).
+        d_iota = jnp.arange(D, dtype=jnp.int32)[:, None]       # [D, 1]
+        w_hot = d_iota == wslot[None, :]                       # [D, F]
+        trig_buf = st.trig_buf + \
+            jnp.where(w_hot, emit.astype(jnp.float32), 0.0)
+        tgt_buf = jnp.where(w_hot & emit[None, :], tgt[None, :],
+                            st.tgt_buf)
+        cnp = trig_buf[rslot] > 0
+        tgt_rx = tgt_buf[rslot]
+        trig_buf = jnp.where(d_iota == rslot, 0.0, trig_buf)
+    else:
+        trig_buf = st.trig_buf.at[wslot, fidx].add(
+            emit.astype(jnp.float32))
+        tgt_buf = st.tgt_buf.at[wslot, fidx].set(
+            jnp.where(emit, tgt, st.tgt_buf[wslot, fidx]))
+        cnp = trig_buf[rslot] > 0
+        tgt_rx = tgt_buf[rslot]
+        trig_buf = trig_buf.at[rslot].set(0.0)
 
     # ---- 6. reaction (PFC source / RP / ERP), branchless ------------------
-    (rate_rp, rp_target_rp, alpha_rp, byte_cnt_rp, tmr_rp, alpha_tmr_rp,
-     bc_stage_rp, t_stage_rp) = _react_rp(st, par, cnp, dt)
-    rate_erp, hold_erp = _react_erp(st, par, cnp, tgt_rx, erp_slope, dt)
+    if use_kernels:
+        from repro.kernels.cc_step import erp_step, rp_step
+        from repro.kernels.ref import ERPParams, RPParams, RPState
+        rp_out = rp_step(
+            RPState(st.rate, st.rp_target, st.alpha, st.byte_cnt, st.tmr,
+                    st.alpha_tmr, st.bc_stage.astype(jnp.float32),
+                    st.t_stage.astype(jnp.float32)),
+            cnp,
+            RPParams(g=par.g, rate_decrease=par.rdf, timer_T=par.timer_T,
+                     byte_B=par.byte_B, rai=par.rai, rhai=par.rhai,
+                     fr_stages=par.fr_stages.astype(jnp.float32),
+                     min_rate=par.rp_min_rate, line_rate=par.line_rate,
+                     dt=dt),
+            interpret=interpret)
+        (rate_rp, rp_target_rp, alpha_rp, byte_cnt_rp, tmr_rp,
+         alpha_tmr_rp) = rp_out[:6]
+        bc_stage_rp = rp_out.bc_stage.astype(jnp.int32)
+        t_stage_rp = rp_out.t_stage.astype(jnp.int32)
+        rate_erp, hold_erp = erp_step(
+            st.rate, st.hold, cnp, tgt_rx, erp_slope,
+            ERPParams(settle=par.erp_settle, hold=par.erp_hold,
+                      min_rate=par.erp_min_rate, line_rate=par.line_rate,
+                      dt=dt),
+            interpret=interpret)
+    else:
+        (rate_rp, rp_target_rp, alpha_rp, byte_cnt_rp, tmr_rp,
+         alpha_tmr_rp, bc_stage_rp, t_stage_rp) = _react_rp(st, par, cnp,
+                                                            dt)
+        rate_erp, hold_erp = _react_erp(st, par, cnp, tgt_rx, erp_slope,
+                                        dt)
     rate_pfc = jnp.minimum(sd.gen_rate, par.line_rate)
 
     is_rp = par.react_code == 1
@@ -597,12 +899,18 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
 
 
 def make_step_fn(scn: Scenario, cfg: CCConfig,
-                 delay_slots: int | None = None):
+                 delay_slots: int | None = None, *,
+                 reduce: str = "fused", dense_rows: int | None = None,
+                 use_kernels: bool = False, interpret: bool = False):
     """Returns step(state) -> (state, StepTrace). Pure; closes over statics.
 
     ``delay_slots`` pins a fixed delay-line depth (legacy callers passing
     ``DELAY_SLOTS``); it raises if any flow's RTT would overflow it.  By
     default the depth is sized from the scenario (``delay_depth``).
+    ``reduce`` / ``use_kernels`` / ``interpret`` select the reduction
+    engine and the Pallas per-flow block (see ``fluid_step``);
+    ``dense_rows=None`` auto-sizes the dense-CSR engine from the
+    scenario (``dense_reduce_rows``), 0 forces the segment-sum engine.
     """
     if delay_slots is not None:
         _check_delay(scn, delay_slots)
@@ -610,8 +918,12 @@ def make_step_fn(scn: Scenario, cfg: CCConfig,
     par = step_params(cfg)
     n_sw = int(scn.n_switches)
     dt = float(cfg.sim.dt)
+    if dense_rows is None:
+        dense_rows = dense_reduce_rows(scn) if reduce == "fused" else 0
 
     def step(st: FluidState):
-        return fluid_step(st, sd, par, dt=dt, n_switches=n_sw)
+        return fluid_step(st, sd, par, dt=dt, n_switches=n_sw,
+                          reduce=reduce, dense_rows=dense_rows,
+                          use_kernels=use_kernels, interpret=interpret)
 
     return step

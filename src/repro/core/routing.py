@@ -96,6 +96,34 @@ def validate_routes(topo: Topology, routes: np.ndarray) -> None:
                     f"{topo.link_src[hops[i+1]]}")
 
 
+def link_incidence(alt_routes: np.ndarray, n_links: int
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sorted (flow, path, hop) -> link incidence for fused reductions.
+
+    ``alt_routes`` is the [F, K, H] candidate stack (PAD = -1).  The
+    flattened (f, k, h) entries are stably sorted by link id (PAD maps
+    to the scratch segment ``n_links``), which turns every per-link
+    scatter-add of the fluid step into ONE gather + sorted segment sum:
+    the stable sort keeps each link's contributors in flattened (f, k,
+    h) order, so sequential segment accumulation is bit-identical to
+    the legacy ``.at[widx].add`` path.
+
+    Returns ``(perm, seg, offsets)``:
+      * ``perm``    [F*K*H] int32 — gather order into the sorted layout
+      * ``seg``     [F*K*H] int32 — sorted segment (link) id per entry
+      * ``offsets`` [n_links + 2] int32 — CSR row pointers: entries of
+        link l live at ``perm[offsets[l]:offsets[l + 1]]`` (segment
+        ``n_links`` is the PAD scratch)
+    """
+    flat = alt_routes.reshape(-1).astype(np.int64)
+    seg = np.where(flat == PAD, n_links, flat)
+    perm = np.argsort(seg, kind="stable").astype(np.int32)
+    seg_sorted = seg[perm].astype(np.int32)
+    offsets = np.zeros((n_links + 2,), np.int64)
+    np.add.at(offsets, seg_sorted + 1, 1)
+    return perm, seg_sorted, np.cumsum(offsets).astype(np.int32)
+
+
 def stage_load(routes: np.ndarray, n_links: int) -> np.ndarray:
     """How many flow routes cross each link (balance diagnostic)."""
     load = np.zeros((n_links,), dtype=np.int64)

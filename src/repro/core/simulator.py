@@ -179,15 +179,19 @@ class SimResult:
 
 
 def run(scn: Scenario, cfg: CCConfig, n_steps: int | None = None,
-        trace_every: int | None = None) -> SimResult:
+        trace_every: int | None = None, *, reduce: str = "fused",
+        use_kernels: bool = False, interpret: bool = False) -> SimResult:
     """Simulate one point and pull (decimated) traces to host.
 
     ``trace_every`` defaults to ``cfg.sim.trace_every``; pass 1 for a
     full-resolution trace.  ``n_steps`` is rounded up to a whole number
-    of trace windows.
+    of trace windows.  ``reduce`` / ``use_kernels`` / ``interpret``
+    select the reduction engine and Pallas per-flow block (see
+    ``repro.core.fluid.fluid_step``).
     """
     n_samples, k = _resolve_steps(cfg, n_steps, trace_every)
-    step = make_step_fn(scn, cfg)
+    step = make_step_fn(scn, cfg, reduce=reduce, use_kernels=use_kernels,
+                        interpret=interpret)
     st0 = init_state(scn, cfg)
     final, tr = _run_scan(st0, step, n_samples, k, float(cfg.sim.dt))
     # (i+1)*k first (exact int), then *dt — so decimated times are the

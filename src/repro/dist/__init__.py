@@ -2,12 +2,15 @@
 collective scheduler, and pipeline parallelism.
 
 Public surface:
-  * sharding: shard / logical_sharding / pspec / DEFAULT_RULES
+  * sharding: shard / logical_sharding / pspec / DEFAULT_RULES /
+    sweep_mesh (run-axis mesh for sharded Sweeps)
   * pacer:    chunk_bytes_of / erp_chunk_schedule
   * pipeline: pipeline_apply
 """
 
 from . import _compat  # noqa: F401  (installs jax API shims; must be first)
-from .sharding import DEFAULT_RULES, logical_sharding, pspec, shard
+from .sharding import (DEFAULT_RULES, logical_sharding, pspec, shard,
+                       sweep_mesh)
 
-__all__ = ["DEFAULT_RULES", "logical_sharding", "pspec", "shard"]
+__all__ = ["DEFAULT_RULES", "logical_sharding", "pspec", "shard",
+           "sweep_mesh"]

@@ -27,6 +27,9 @@ from jax.sharding import NamedSharding, PartitionSpec
 DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "batch": ("pod", "data"),
     "cache_batch": ("pod", "data"),
+    # the Sweep engine's run axis (independent (config, scenario)
+    # points): batch-like, spans DP axes
+    "run": ("pod", "data"),
     "fsdp": ("data",),
     "vocab": ("model",),
     "embed": (),
@@ -83,6 +86,22 @@ def _ambient_mesh():
         return None if m.empty else m
     except Exception:  # noqa: BLE001 — any jax-internal drift => no mesh
         return None
+
+
+def sweep_mesh(n_devices: int | None = None, axis: str = "run"):
+    """1-axis device mesh for ``Sweep.run(mesh=...)``.
+
+    Takes the first ``n_devices`` local devices (all by default) on one
+    axis named ``axis``; the Sweep engine shards its run batch over
+    every axis of whatever mesh it is given, so any custom mesh works —
+    this is just the common single-axis spelling.
+    """
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"n_devices={n} outside 1..{len(devs)}")
+    import numpy as np
+    return jax.sharding.Mesh(np.array(devs[:n]), (axis,))
 
 
 def shard(x, *dims):

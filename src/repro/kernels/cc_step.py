@@ -1,26 +1,35 @@
-"""DC-scale reaction-point update — Pallas TPU kernel (the paper's hot
+"""DC-scale per-flow CC updates — Pallas TPU kernels (the paper's hot
 loop).
 
 A datacenter NIC fleet runs the RP/ERP state machine for every active
-flow (10^5..10^6 QPs).  The update is elementwise over flows — pure VPU
-work — so the kernel's value is bandwidth shape: all 8 state vectors for
-a flow tile are resident in VMEM simultaneously, giving one HBM round
-trip per state per dt instead of the ~20 the unfused jnp version issues
-(one per intermediate).  Tiles are (8, 128)-aligned rows of a [F8, 128]
-layout.
+flow (10^5..10^6 QPs).  The updates are elementwise over flows — pure
+VPU work — so the kernels' value is bandwidth shape: all state vectors
+for a flow tile are resident in VMEM simultaneously, giving one HBM
+round trip per state per dt instead of the ~20 the unfused jnp version
+issues (one per intermediate).  Tiles are (8, 128)-aligned rows of a
+[F8, 128] layout.
 
-Both reaction points are provided:
-  * rp_step   — DCQCN RP (alpha EWMA + staged FR/AI/HI recovery)
-  * erp_step  — the paper's ERP (jump-to-fair, hold, jittered recovery)
+Three kernels cover the fluid step's per-flow phases (wired into
+``repro.core.fluid.fluid_step`` behind ``use_kernels=True``):
+  * gen_np_step — fused generation + notification-timer tick (phase 1
+                  + the per-flow half of phase 5)
+  * rp_step     — DCQCN RP (alpha EWMA + staged FR/AI/HI recovery)
+  * erp_step    — the paper's ERP (jump-to-fair, hold, jittered
+                  recovery)
+
+CC constants enter as a tiny (1, NP) SMEM vector rather than baked-in
+python floats, so the *same compiled kernel* serves traced parameter
+grids (the Sweep engine stacks ``StepParams`` and vmaps) — the
+RPParams/ERPParams fields may be python floats or traced f32 scalars
+interchangeably.
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from .ref import ERPParams, RPParams, RPState
 
@@ -40,40 +49,106 @@ def _unpad(x2d: jax.Array, f: int) -> jax.Array:
     return x2d.reshape(-1)[:f]
 
 
+def _param_vec(*vals) -> jax.Array:
+    """(1, NP) f32 row for the SMEM params block (floats or tracers)."""
+    return jnp.stack([jnp.asarray(v, jnp.float32).reshape(())
+                      for v in vals]).reshape(1, -1)
+
+
+def _flow_call(kernel, inputs, params, n_out, *, interpret: bool):
+    """Launch an elementwise per-flow kernel over (8,128)-tiled rows.
+
+    ``inputs`` are [F] f32 vectors; ``params`` the (1, NP) SMEM row.
+    Returns ``n_out`` [F] vectors.
+    """
+    padded = [_pad_to_grid(x)[0] for x in inputs]
+    f = inputs[0].shape[0]
+    rows = padded[0].shape[0]
+    spec = pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0),
+                        memory_space=pltpu.VMEM)
+    pspec = pl.BlockSpec((1, params.shape[1]), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[pspec] + [spec] * len(padded),
+        out_specs=[spec] * n_out,
+        out_shape=[jax.ShapeDtypeStruct((rows, LANE), jnp.float32)] * n_out,
+        interpret=interpret,
+    )(params, *padded)
+    return [_unpad(o, f) for o in outs]
+
+
+# ---------------------------------------------------------------------------
+# fused generation + notification timer (fluid phases 1 and 5a)
+# ---------------------------------------------------------------------------
+
+def _gen_np_kernel(par_ref, nicq_ref, off_ref, drop_ref, tmr_ref,
+                   rate_ref, ts_ref, te_ref, vol_ref, buf_ref,
+                   o_nicq, o_off, o_drop, o_tmr):
+    t_sec = par_ref[0, 0]
+    dt = par_ref[0, 1]
+    active = (t_sec >= ts_ref[...]) & (t_sec < te_ref[...])
+    gen = jnp.where(active, rate_ref[...], 0.0) * dt
+    gen = jnp.minimum(gen, jnp.maximum(vol_ref[...] - off_ref[...], 0.0))
+    nicq = nicq_ref[...] + gen
+    over = jnp.maximum(nicq - buf_ref[...], 0.0)
+    o_nicq[...] = nicq - over
+    o_off[...] = off_ref[...] + gen - over
+    o_drop[...] = drop_ref[...] + over
+    o_tmr[...] = tmr_ref[...] + dt
+
+
+def gen_np_step(nicq, offered, dropped, np_tmr, gen_rate, t_start, t_stop,
+                volume, nic_buffer, *, t_sec, dt,
+                interpret: bool = False):
+    """Fused window generator + NP suppression-timer tick for F flows.
+
+    Returns ``(nicq', offered', dropped', np_tmr + dt)`` — the exact
+    phase-1/5a arithmetic of the jnp fluid step, one VMEM residency.
+    """
+    return _flow_call(
+        _gen_np_kernel,
+        [nicq, offered, dropped, np_tmr, gen_rate, t_start, t_stop,
+         volume, nic_buffer],
+        _param_vec(t_sec, dt), 4, interpret=interpret)
+
+
 # ---------------------------------------------------------------------------
 # DCQCN RP
 # ---------------------------------------------------------------------------
 
-def _rp_kernel(rate_ref, tgt_ref, alpha_ref, bc_ref, tmr_ref, atmr_ref,
-               bst_ref, tst_ref, cnp_ref,
-               o_rate, o_tgt, o_alpha, o_bc, o_tmr, o_atmr, o_bst, o_tst,
-               *, p: RPParams):
+def _rp_kernel(par_ref, rate_ref, tgt_ref, alpha_ref, bc_ref, tmr_ref,
+               atmr_ref, bst_ref, tst_ref, cnp_ref,
+               o_rate, o_tgt, o_alpha, o_bc, o_tmr, o_atmr, o_bst, o_tst):
+    (g, rate_decrease, timer_T, byte_B, rai, rhai, fr_stages, min_rate,
+     line_rate, dt) = (par_ref[0, i] for i in range(10))
     rate = rate_ref[...]
     target = tgt_ref[...]
     alpha = alpha_ref[...]
     byte_cnt = bc_ref[...]
     tmr = tmr_ref[...]
-    alpha_tmr = atmr_ref[...] + p.dt
+    alpha_tmr = atmr_ref[...] + dt
     bc_stage = bst_ref[...]
     t_stage = tst_ref[...]
     cnp = cnp_ref[...] > 0
 
-    a_tick = alpha_tmr >= p.timer_T
-    alpha = jnp.where(a_tick, (1 - p.g) * alpha, alpha)
+    a_tick = alpha_tmr >= timer_T
+    alpha = jnp.where(a_tick, (1 - g) * alpha, alpha)
     alpha_tmr = jnp.where(a_tick, 0.0, alpha_tmr)
 
     target = jnp.where(cnp, rate, target)
-    new_rate = jnp.where(cnp, rate * (1 - alpha * p.rate_decrease), rate)
-    alpha = jnp.where(cnp, (1 - p.g) * alpha + p.g, alpha)
-    byte_cnt = jnp.where(cnp, 0.0, byte_cnt + rate * p.dt)
-    tmr = jnp.where(cnp, 0.0, tmr + p.dt)
+    new_rate = jnp.where(cnp, rate * (1 - alpha * rate_decrease), rate)
+    alpha = jnp.where(cnp, (1 - g) * alpha + g, alpha)
+    byte_cnt = jnp.where(cnp, 0.0, byte_cnt + rate * dt)
+    tmr = jnp.where(cnp, 0.0, tmr + dt)
     alpha_tmr = jnp.where(cnp, 0.0, alpha_tmr)
     bc_stage = jnp.where(cnp, 0.0, bc_stage)
     t_stage = jnp.where(cnp, 0.0, t_stage)
     rate = new_rate
 
-    b_ev = byte_cnt >= p.byte_B
-    t_ev = tmr >= p.timer_T
+    b_ev = byte_cnt >= byte_B
+    t_ev = tmr >= timer_T
     byte_cnt = jnp.where(b_ev, 0.0, byte_cnt)
     tmr = jnp.where(t_ev, 0.0, tmr)
     bc_stage = bc_stage + b_ev
@@ -81,15 +156,15 @@ def _rp_kernel(rate_ref, tgt_ref, alpha_ref, bc_ref, tmr_ref, atmr_ref,
     ev = b_ev | t_ev
     imax = jnp.maximum(bc_stage, t_stage)
     imin = jnp.minimum(bc_stage, t_stage)
-    in_fr = imax <= p.fr_stages
-    in_hyper = imin > p.fr_stages
-    target = jnp.where(ev & ~in_fr & ~in_hyper, target + p.rai, target)
+    in_fr = imax <= fr_stages
+    in_hyper = imin > fr_stages
+    target = jnp.where(ev & ~in_fr & ~in_hyper, target + rai, target)
     target = jnp.where(ev & in_hyper,
-                       target + p.rhai * (imin - p.fr_stages), target)
+                       target + rhai * (imin - fr_stages), target)
     rate = jnp.where(ev, 0.5 * (rate + target), rate)
 
-    o_rate[...] = jnp.clip(rate, p.min_rate, p.line_rate)
-    o_tgt[...] = jnp.clip(target, p.min_rate, p.line_rate)
+    o_rate[...] = jnp.clip(rate, min_rate, line_rate)
+    o_tgt[...] = jnp.clip(target, min_rate, line_rate)
     o_alpha[...] = alpha
     o_bc[...] = byte_cnt
     o_tmr[...] = tmr
@@ -101,56 +176,41 @@ def _rp_kernel(rate_ref, tgt_ref, alpha_ref, bc_ref, tmr_ref, atmr_ref,
 def rp_step(st: RPState, cnp: jax.Array, p: RPParams,
             interpret: bool = False) -> RPState:
     """Vectorised DCQCN RP update for F flows (any F)."""
-    flat = [st.rate, st.target, st.alpha, st.byte_cnt, st.tmr,
-            st.alpha_tmr, st.bc_stage, st.t_stage,
-            cnp.astype(jnp.float32)]
-    padded = [_pad_to_grid(x)[0] for x in flat]
-    f = st.rate.shape[0]
-    rows = padded[0].shape[0]
-    grid = (rows // BLOCK_ROWS,)
-    spec = pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0))
-    outs = pl.pallas_call(
-        functools.partial(_rp_kernel, p=p),
-        grid=grid,
-        in_specs=[spec] * 9,
-        out_specs=[spec] * 8,
-        out_shape=[jax.ShapeDtypeStruct((rows, LANE), jnp.float32)] * 8,
-        interpret=interpret,
-    )(*padded)
-    return RPState(*[_unpad(o, f) for o in outs])
+    outs = _flow_call(
+        _rp_kernel,
+        [st.rate, st.target, st.alpha, st.byte_cnt, st.tmr, st.alpha_tmr,
+         st.bc_stage, st.t_stage, cnp.astype(jnp.float32)],
+        _param_vec(p.g, p.rate_decrease, p.timer_T, p.byte_B, p.rai,
+                   p.rhai, p.fr_stages, p.min_rate, p.line_rate, p.dt),
+        8, interpret=interpret)
+    return RPState(*outs)
 
 
 # ---------------------------------------------------------------------------
 # the paper's ERP
 # ---------------------------------------------------------------------------
 
-def _erp_kernel(rate_ref, hold_ref, cnp_ref, tgt_ref, slope_ref,
-                o_rate, o_hold, *, p: ERPParams):
+def _erp_kernel(par_ref, rate_ref, hold_ref, cnp_ref, tgt_ref, slope_ref,
+                o_rate, o_hold):
+    settle, hold_T, min_rate, line_rate, dt = (
+        par_ref[0, i] for i in range(5))
     rate = rate_ref[...]
     hold = hold_ref[...]
     cnp = cnp_ref[...] > 0
     tgt = tgt_ref[...]
     slope = slope_ref[...]
-    rate = jnp.where(cnp, jnp.maximum(p.settle * tgt, p.min_rate), rate)
-    hold = jnp.where(cnp, p.hold, jnp.maximum(hold - p.dt, 0.0))
-    rate = jnp.where(~cnp & (hold <= 0), rate + slope * p.dt, rate)
-    o_rate[...] = jnp.clip(rate, p.min_rate, p.line_rate)
+    rate = jnp.where(cnp, jnp.maximum(settle * tgt, min_rate), rate)
+    hold = jnp.where(cnp, hold_T, jnp.maximum(hold - dt, 0.0))
+    rate = jnp.where(~cnp & (hold <= 0), rate + slope * dt, rate)
+    o_rate[...] = jnp.clip(rate, min_rate, line_rate)
     o_hold[...] = hold
 
 
 def erp_step(rate, hold, cnp, tgt_rx, slope, p: ERPParams,
              interpret: bool = False):
-    flat = [rate, hold, cnp.astype(jnp.float32), tgt_rx, slope]
-    padded = [_pad_to_grid(x)[0] for x in flat]
-    f = rate.shape[0]
-    rows = padded[0].shape[0]
-    spec = pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0))
-    outs = pl.pallas_call(
-        functools.partial(_erp_kernel, p=p),
-        grid=(rows // BLOCK_ROWS,),
-        in_specs=[spec] * 5,
-        out_specs=[spec] * 2,
-        out_shape=[jax.ShapeDtypeStruct((rows, LANE), jnp.float32)] * 2,
-        interpret=interpret,
-    )(*padded)
-    return _unpad(outs[0], f), _unpad(outs[1], f)
+    outs = _flow_call(
+        _erp_kernel,
+        [rate, hold, cnp.astype(jnp.float32), tgt_rx, slope],
+        _param_vec(p.settle, p.hold, p.min_rate, p.line_rate, p.dt),
+        2, interpret=interpret)
+    return outs[0], outs[1]

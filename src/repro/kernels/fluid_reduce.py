@@ -1,0 +1,109 @@
+"""Fused per-link segment reduction — Pallas TPU kernel for the fluid
+hot loop.
+
+The fluid step's per-link sums (FIFO num/den, transfer weights, PFC
+sink queues, marking activity/surplus) all reduce the same [F*K*H]
+link-sorted incidence (``ScenarioDev.red_perm``/``red_seg``, see
+``repro.core.routing.link_incidence``).  This kernel performs one
+multi-channel sorted segment sum: a single sweep over the [N, C] data
+tile stream produces every per-link channel at once, with the output
+accumulator and all C channels resident in VMEM for the whole pass —
+the jnp path instead issues one XLA scatter per channel group and
+bounces each through HBM.  Data streams at its true [N, C] width (C is
+small — 1..3 channels per fluid pass), so HBM traffic is the payload
+bytes, not a lane-padded copy.
+
+Bit-exactness is a hard requirement (the golden suite freezes sweep
+summaries), which pins the accumulation *order*: each segment's
+contributions must be added in incidence order, exactly like the
+sequential scatter-add they replace.  The kernel therefore walks the
+rows of each tile in order (grid steps are sequential on a TPU core,
+so cross-tile segments accumulate correctly) instead of using the
+faster order-losing tricks (one-hot matmul scatter, cumsum
+differencing).  Segment ids ride in SMEM via scalar prefetch.
+
+The [S, C] accumulator must fit in VMEM alongside one data tile; with
+the fluid step's C <= 3 that is ~2^20 segments before the guard below
+trips — callers past it (or with pathological channel counts) should
+use the ``reduce="fused"`` segment-sum engine instead.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE_ROWS = 512          # rows per grid step
+#: VMEM budget for the [S_pad, C] accumulator block (per-core VMEM is
+#: ~16 MB and the data tile + ids need room too)
+ACC_VMEM_CAP = 12 << 20
+
+
+def _reduce_kernel(seg_ref, data_ref, out_ref):
+    """Accumulate one row tile into the [S_pad, C] output block.
+
+    ``out_ref`` maps to the same block on every grid step; step 0
+    zeroes it, later steps keep accumulating (TPU grid steps run
+    sequentially on a core, preserving the global row order).
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    base = i * TILE_ROWS
+
+    def body(r, carry):
+        s = seg_ref[base + r]
+        out_ref[pl.ds(s, 1), :] += data_ref[pl.ds(r, 1), :]
+        return carry
+
+    jax.lax.fori_loop(0, TILE_ROWS, body, 0)
+
+
+def segment_reduce(data: jax.Array, seg: jax.Array, num_segments: int,
+                   *, interpret: bool = False) -> jax.Array:
+    """Multi-channel sorted segment sum: [N, C] + [N] ids -> [S, C].
+
+    ``seg`` must be ascending (sorted incidence); equal-id rows are
+    accumulated in row order, bit-identical to a sequential
+    ``zeros.at[seg].add(data)``.  ``num_segments`` is static.
+    """
+    N, C = data.shape
+    if N == 0:
+        # grid would be empty and the zeroing step would never run
+        return jnp.zeros((num_segments, C), jnp.float32)
+    n_pad = (-N) % TILE_ROWS
+    s_pad = (-(num_segments + 1)) % 8
+    s_rows = num_segments + 1 + s_pad
+    if s_rows * C * 4 > ACC_VMEM_CAP:
+        raise ValueError(
+            f"segment_reduce accumulator [{s_rows}, {C}] f32 exceeds the "
+            f"{ACC_VMEM_CAP >> 20} MB VMEM budget; use the segment-sum "
+            f"engine (reduce='fused') for this shape")
+    # padded rows land in a scratch segment past every real one
+    scratch = num_segments
+    data_p = jnp.pad(data, ((0, n_pad), (0, 0)))
+    seg_p = jnp.pad(seg.astype(jnp.int32), (0, n_pad),
+                    constant_values=scratch)
+    rows = N + n_pad
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(rows // TILE_ROWS,),
+        in_specs=[
+            pl.BlockSpec((TILE_ROWS, C), lambda i, seg_ref: (i, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((s_rows, C), lambda i, seg_ref: (0, 0),
+                               memory_space=pltpu.VMEM),
+    )
+    out = pl.pallas_call(
+        _reduce_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s_rows, C), jnp.float32),
+        interpret=interpret,
+    )(seg_p, data_p)
+    return out[:num_segments]

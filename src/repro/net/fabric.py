@@ -22,6 +22,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 
+import numpy as np
+
 from repro.core.topology import Topology, make_clos3
 
 from .routing import (RouteSet, RouteTable, clos_route_set,
@@ -109,6 +111,21 @@ class FabricSpec:
         Valiant detours); validated + cached per (spec, k, seed)."""
         return _build_route_set(self, int(k_paths), int(seed))
 
+    def flow_routes(self, pairs) -> "np.ndarray":
+        """[F, H_MAX] minimal routes for (src, dst) pairs, cached per
+        (spec hash, pairs) — a sweep's grid points share one extraction
+        (and, downstream, one device upload + one incidence sort).
+        Treat as read-only: the array is shared across callers.
+        """
+        return _flow_routes(self, tuple(tuple(p) for p in pairs))
+
+    def flow_route_set(self, pairs, k_paths: int = 4, seed: int = 0):
+        """([F, K, H_MAX] candidate routes, [F, K] hops) for pairs,
+        cached per (spec hash, pairs, k, seed); read-only like
+        ``flow_routes``."""
+        return _flow_route_set(self, tuple(tuple(p) for p in pairs),
+                               int(k_paths), int(seed))
+
 
 @functools.lru_cache(maxsize=64)
 def _build_topo(spec: FabricSpec, line_rate: float) -> Topology:
@@ -144,6 +161,25 @@ def _build_table(spec: FabricSpec) -> RouteTable:
         raise ValueError(f"unknown fabric kind: {spec.kind!r}")
     validate_table(_build_topo(spec, 12.5e9), table)
     return table
+
+
+def _frozen(a: np.ndarray) -> np.ndarray:
+    """Cached arrays are shared across callers; make 'read-only' real —
+    an in-place edit raises instead of corrupting every later build."""
+    a.setflags(write=False)
+    return a
+
+
+@functools.lru_cache(maxsize=256)
+def _flow_routes(spec: FabricSpec, pairs: tuple):
+    return _frozen(_build_table(spec).routes_for_pairs(pairs))
+
+
+@functools.lru_cache(maxsize=256)
+def _flow_route_set(spec: FabricSpec, pairs: tuple, k: int, seed: int):
+    rset = _build_route_set(spec, k, seed)
+    return (_frozen(rset.routes_for_pairs(pairs)),
+            _frozen(rset.hops_for_pairs(pairs)))
 
 
 @functools.lru_cache(maxsize=64)

@@ -33,7 +33,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.routing import PAD, clos_route
+from repro.core.routing import PAD, clos_route, link_incidence
 from repro.core.topology import ClosIndex, Topology
 
 from .topologies import DragonflyIndex, XGFTIndex
@@ -102,6 +102,21 @@ class RouteTable:
         mask = np.arange(self.h_max)[None, :] < hops[:, None]
         ids = routes[mask]
         return np.bincount(ids, minlength=n_links).astype(np.int64)
+
+    def incidence(self, n_links: int, pairs=None):
+        """Link-sorted (flow, hop) incidence of this table's routes.
+
+        ``(perm, seg, offsets)`` per ``repro.core.routing
+        .link_incidence``.  For a single-path scenario built from the
+        same ``pairs`` this is exactly the ``ScenarioDev.red_perm`` /
+        ``red_seg`` / ``red_off`` layout the fluid loop's fused
+        reductions tile by (cross-checked in tests/test_fluid_fused) —
+        the host-side view for inspecting load skew (``offsets`` row
+        lengths size the dense-CSR engine) without building a scenario.
+        """
+        routes = (self.paths.reshape(-1, self.h_max) if pairs is None
+                  else self.routes_for_pairs(pairs))
+        return link_incidence(routes[:, None, :], n_links)
 
 
 def _from_path_fn(n: int, h_max: int, path_fn) -> RouteTable:
@@ -180,6 +195,17 @@ class RouteSet:
             return self.slot(k).link_load(n_links, pairs=pairs)
         return sum(self.slot(j).link_load(n_links, pairs=pairs)
                    for j in range(self.k_paths))
+
+    def incidence(self, n_links: int, pairs=None):
+        """Link-sorted (flow, slot, hop) incidence over ALL K candidate
+        layers — for a ``pairs`` scenario with ``n_paths == K`` this is
+        exactly the [F*K*H] ``ScenarioDev.red_*`` layout the fluid loop
+        reduces at run time (unselected slots contribute exact zeros).
+        See ``RouteTable.incidence``.
+        """
+        routes = (self.paths.reshape(-1, self.k_paths, self.h_max)
+                  if pairs is None else self.routes_for_pairs(pairs))
+        return link_incidence(routes, n_links)
 
 
 def _rng_for(seed: int, s: int, d: int, k: int) -> np.random.RandomState:

@@ -1,0 +1,219 @@
+"""Bit-exact parity suite for the one-pass hot loop.
+
+The fused segment-reduction rewrite and the Pallas per-flow kernels
+must be *indistinguishable* from the legacy paths: the golden suite
+freezes summaries, so even one reordered f32 add would show.  This
+module pins the strongest form — exact array equality — across the
+same 18-point scheme x fabric x routing grid the golden suite runs:
+
+  * ``reduce="fused"``  vs ``reduce="scat"``  (segment sum vs scatter)
+  * ``reduce="pallas"`` vs ``reduce="fused"`` (fluid_reduce kernel,
+    interpret mode)
+  * ``use_kernels=True`` vs jnp per-flow block (gen/np-timer + RP/ERP
+    kernels, interpret mode)
+
+plus unit-level checks of the incidence precompute and the
+content-keyed device-placement cache.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import CCScheme, PAPER_CONFIG, ScenarioSpec, Sweep
+from repro.core.fluid import (_flow_jitter, init_state, make_step_fn,
+                              scenario_device)
+from repro.core.routing import PAD, link_incidence
+from repro.core.workloads import group_shift
+from repro.kernels.fluid_reduce import segment_reduce
+from repro.net import FabricSpec
+
+TRACE_FIELDS = ("delivered", "rate", "inst_thr", "max_q", "n_paused",
+                "marked", "cnp", "n_nonmin")
+
+
+def _grid() -> Sweep:
+    """The golden suite's 18-point grid (same seeds/shapes)."""
+    dfly = FabricSpec.dragonfly(a=2, p=2, h=2)
+    ft = FabricSpec.fat_tree(4, taper=2)
+    scenarios = {
+        "dfly_adv": group_shift(5, 4, t_stop=0.5e-3).spec(
+            fabric=dfly, n_paths=4, route_seed=0, label="dfly_adv"),
+        "ft_perm": ScenarioSpec.permutation(
+            16, seed=2, fabric=ft, n_paths=4, route_seed=0,
+            t_start=0.0, t_stop=0.5e-3, label="ft_perm"),
+    }
+    configs = {f"{s.name}/{r}": PAPER_CONFIG.replace(scheme=s, routing=r)
+               for s in CCScheme for r in ("min", "valiant", "ugal")}
+    return Sweep.grid(configs=configs, scenarios=scenarios)
+
+
+def _assert_bitwise(res_a, res_b, ctx: str):
+    assert res_a.names == res_b.names
+    for name in res_a.names:
+        a, b = res_a[name], res_b[name]
+        for f in TRACE_FIELDS:
+            ga, gb = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+            assert np.array_equal(ga, gb), (ctx, name, f)
+        for f, ga, gb in zip(a.final._fields, a.final, b.final):
+            assert np.array_equal(np.asarray(ga), np.asarray(gb)), \
+                (ctx, name, "final." + f)
+
+
+def test_fused_matches_scat_on_golden_grid():
+    """One sweep launch per engine; every decimated trace and the final
+    state must agree to the bit across all 18 points."""
+    sweep = _grid()
+    _assert_bitwise(sweep.run(n_steps=150, reduce="fused"),
+                    sweep.run(n_steps=150, reduce="scat"),
+                    "fused-vs-scat")
+
+
+def test_kernel_flow_block_matches_jnp_on_golden_grid():
+    """Pallas gen/np-timer + RP/ERP kernels (interpret mode) vs the jnp
+    per-flow block: exact f32 equality."""
+    sweep = _grid()
+    _assert_bitwise(
+        sweep.run(n_steps=60),
+        sweep.run(n_steps=60, use_kernels=True, interpret=True),
+        "kernels-vs-jnp")
+
+
+def test_pallas_reduce_matches_fused_single_point():
+    """The fluid_reduce kernel inside a real stepping loop."""
+    cfg = PAPER_CONFIG.replace(routing="ugal")
+    scn = ScenarioSpec.permutation(
+        16, seed=2, fabric=FabricSpec.fat_tree(4, taper=2), n_paths=4,
+        route_seed=0, t_start=0.0, t_stop=0.5e-3).build(cfg)
+    outs = []
+    for kw in (dict(reduce="fused"),
+               dict(reduce="pallas", interpret=True)):
+        step = jax.jit(make_step_fn(scn, cfg, **kw))
+        st = init_state(scn, cfg)
+        for _ in range(100):
+            st, _ = step(st)
+        outs.append(st)
+    for f, a, b in zip(outs[0]._fields, outs[0], outs[1]):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), f
+
+
+# ---------------------------------------------------------------------------
+# segment_reduce kernel unit tests
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,c,s", [(1, 1, 1), (100, 3, 17), (513, 2, 5),
+                                   (1536, 8, 300), (4096, 5, 1000)])
+def test_segment_reduce_exact(n, c, s):
+    rng = np.random.RandomState(n + c + s)
+    seg = np.sort(rng.randint(0, s, size=n)).astype(np.int32)
+    data = rng.randn(n, c).astype(np.float32)
+    got = segment_reduce(jax.numpy.asarray(data), jax.numpy.asarray(seg),
+                         s, interpret=True)
+    want = jax.ops.segment_sum(jax.numpy.asarray(data),
+                               jax.numpy.asarray(seg), num_segments=s,
+                               indices_are_sorted=True)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_segment_reduce_empty_input():
+    """Zero rows must yield exact zeros (the grid never runs, so the
+    wrapper must not hand back uninitialised output)."""
+    out = segment_reduce(jax.numpy.zeros((0, 3), jax.numpy.float32),
+                         jax.numpy.zeros((0,), jax.numpy.int32), 7,
+                         interpret=True)
+    assert np.array_equal(np.asarray(out), np.zeros((7, 3), np.float32))
+
+
+def test_segment_reduce_rejects_oversized_accumulator():
+    """Shapes whose [S, C] accumulator cannot sit in VMEM are refused
+    with a pointer at the segment-sum engine, not silently compiled."""
+    with pytest.raises(ValueError, match="VMEM"):
+        segment_reduce(jax.numpy.zeros((512, 128), jax.numpy.float32),
+                       jax.numpy.zeros((512,), jax.numpy.int32),
+                       1 << 16, interpret=True)
+
+
+def test_segment_reduce_empty_segments():
+    """Links no flow crosses must come back exactly 0."""
+    seg = np.asarray([3, 3, 7], np.int32)
+    data = np.ones((3, 2), np.float32)
+    out = np.asarray(segment_reduce(jax.numpy.asarray(data),
+                                    jax.numpy.asarray(seg), 10,
+                                    interpret=True))
+    want = np.zeros((10, 2), np.float32)
+    want[3] = 2.0
+    want[7] = 1.0
+    assert np.array_equal(out, want)
+
+
+# ---------------------------------------------------------------------------
+# incidence precompute + device-placement cache
+# ---------------------------------------------------------------------------
+
+def test_link_incidence_structure():
+    rng = np.random.RandomState(0)
+    F, K, H, L = 13, 3, 5, 40
+    alt = rng.randint(-1, L, size=(F, K, H)).astype(np.int32)
+    perm, seg, off = link_incidence(alt, L)
+    assert sorted(perm.tolist()) == list(range(F * K * H))
+    assert (np.diff(seg) >= 0).all()                  # sorted
+    flat = alt.reshape(-1)
+    np.testing.assert_array_equal(
+        seg, np.where(flat[perm] == PAD, L, flat[perm]))
+    # CSR offsets: segment l spans [off[l], off[l+1])
+    assert off[0] == 0 and off[-1] == F * K * H
+    for l in (0, L // 2, L):                          # spot-check rows
+        rows = perm[off[l]:off[l + 1]]
+        vals = np.where(flat == PAD, L, flat)[rows]
+        assert (vals == l).all()
+    # stability: equal-id entries keep flattened order
+    for l in range(L + 1):
+        assert (np.diff(perm[off[l]:off[l + 1]]) > 0).all()
+
+
+def test_clamp_dense_rows_guards_batch_max():
+    """The dense-CSR size guard applies to batch-wide row counts too:
+    a skewed maximum that would dwarf the incidence disables the dense
+    engine instead of inflating every run's table."""
+    from repro.core.fluid import DENSE_ROWS_CAP, clamp_dense_rows
+    assert clamp_dense_rows(4, 384, 30) == 4
+    assert clamp_dense_rows(0, 384, 30) == 0
+    assert clamp_dense_rows(DENSE_ROWS_CAP + 1, 10, 10 ** 9) == 0
+    # L * ml far beyond 16x the incidence entries -> disabled
+    assert clamp_dense_rows(1000, 100_000, 6_000) == 0
+
+
+def test_fabric_incidence_mirrors_scenario_device():
+    """RouteTable/RouteSet.incidence are the host-side view of the
+    exact ``red_*`` layout ``scenario_device`` ships: same permutation,
+    segments and CSR offsets for the same pairs."""
+    fab = FabricSpec.fat_tree(4, taper=2)
+    pairs = [(0, 9), (3, 17), (22, 41), (5, 60), (13, 2)]
+    for spec, inc in [
+            (ScenarioSpec.flows(pairs, fabric=fab),
+             lambda L: fab.route_table().incidence(L, pairs)),
+            (ScenarioSpec.flows(pairs, fabric=fab, n_paths=4,
+                                route_seed=0),
+             lambda L: fab.route_set(4, seed=0).incidence(L, pairs))]:
+        scn = spec.build(PAPER_CONFIG)
+        sd = scenario_device(scn)
+        perm, seg, off = inc(scn.capacity.shape[0])
+        np.testing.assert_array_equal(np.asarray(sd.red_perm), perm)
+        np.testing.assert_array_equal(np.asarray(sd.red_seg), seg)
+        np.testing.assert_array_equal(np.asarray(sd.red_off), off)
+
+
+def test_scenario_device_upload_cache_and_jitter():
+    """Two grid points sharing a fabric must share the device buffers
+    of its route/capacity tensors (content-keyed placement cache), and
+    the ERP jitter must be hoisted into the scenario."""
+    cfg = PAPER_CONFIG
+    spec = ScenarioSpec.paper_incast(roll=0)
+    sd1 = scenario_device(spec.build(cfg))
+    sd2 = scenario_device(spec.build(cfg.replace(scheme=CCScheme.DCQCN)))
+    for f in ("cap_ext", "sink_ext", "alt_routes", "alt_hops",
+              "red_perm", "red_seg", "red_off", "pool_perm", "pool_seg",
+              "jitter"):
+        assert getattr(sd1, f) is getattr(sd2, f), f
+    F = sd1.gen_rate.shape[0]
+    np.testing.assert_array_equal(np.asarray(sd1.jitter), _flow_jitter(F))

@@ -11,7 +11,7 @@ except ImportError:          # image without hypothesis: deterministic sweep
     from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.kernels import ref
-from repro.kernels.cc_step import erp_step, rp_step
+from repro.kernels.cc_step import erp_step, gen_np_step, rp_step
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 
@@ -158,6 +158,70 @@ def test_erp_kernel_matches_ref(F):
     r2, h2 = ref.erp_update_ref(*args, p)
     np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), rtol=1e-6)
     np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-6)
+
+
+@pytest.mark.parametrize("F", [1, 127, 129, 8193])
+def test_gen_np_kernel_matches_jnp(F):
+    """Fused generation + notification-timer kernel vs the fluid step's
+    phase-1/5a arithmetic (exact, incl. inf volumes / buffers)."""
+    r = np.random.RandomState(F)
+    nicq = jnp.asarray(r.rand(F) * 1e6, jnp.float32)
+    offered = jnp.asarray(r.rand(F) * 1e7, jnp.float32)
+    dropped = jnp.asarray(r.rand(F) * 1e5, jnp.float32)
+    np_tmr = jnp.asarray(r.rand(F) * 1e-4, jnp.float32)
+    gen_rate = jnp.asarray(r.rand(F) * 12.5e9, jnp.float32)
+    t_start = jnp.asarray(r.rand(F) * 2e-3, jnp.float32)
+    t_stop = jnp.asarray(
+        np.where(r.rand(F) > 0.5, r.rand(F) * 3e-3, np.inf), jnp.float32)
+    volume = jnp.asarray(
+        np.where(r.rand(F) > 0.5, r.rand(F) * 2e7, np.inf), jnp.float32)
+    nic_buffer = jnp.asarray(
+        np.where(r.rand(F) > 0.3, 4e6, np.inf), jnp.float32)
+    t_sec, dt = jnp.float32(1.2e-3), jnp.float32(1e-6)
+    got = gen_np_step(nicq, offered, dropped, np_tmr, gen_rate, t_start,
+                      t_stop, volume, nic_buffer, t_sec=t_sec, dt=dt,
+                      interpret=True)
+    active = (t_sec >= t_start) & (t_sec < t_stop)
+    gen = jnp.where(active, gen_rate, 0.0) * dt
+    gen = jnp.minimum(gen, jnp.maximum(volume - offered, 0.0))
+    q = nicq + gen
+    over = jnp.maximum(q - nic_buffer, 0.0)
+    want = (q - over, offered + gen - over, dropped + over, np_tmr + dt)
+    for g, w, name in zip(got, want,
+                          ("nicq", "offered", "dropped", "np_tmr")):
+        assert np.array_equal(np.asarray(g), np.asarray(w)), (F, name)
+
+
+def test_cc_kernels_accept_traced_params():
+    """CC constants are SMEM data, not compile-time floats: jitting over
+    traced params must work and vary the result without recompiling."""
+    F = 300
+    r = np.random.RandomState(3)
+    rate = jnp.asarray(r.rand(F) * 12.5e9, jnp.float32)
+    hold = jnp.zeros((F,), jnp.float32)
+    cnp = jnp.asarray(r.rand(F) > 0.5)
+    tgt = jnp.asarray(r.rand(F) * 12.5e9, jnp.float32)
+    slope = jnp.full((F,), 5e12, jnp.float32)
+
+    calls = []
+
+    @jax.jit
+    def f(settle):
+        calls.append(None)       # traces once per shape, not per value
+        p = ref.ERPParams(settle=settle, hold=jnp.float32(50e-6),
+                          min_rate=jnp.float32(1e6),
+                          line_rate=jnp.float32(12.5e9),
+                          dt=jnp.float32(1e-6))
+        return erp_step(rate, hold, cnp, tgt, slope, p, interpret=True)
+
+    r1, _ = f(jnp.float32(0.98))
+    r2, _ = f(jnp.float32(0.50))
+    assert len(calls) == 1
+    assert not np.array_equal(np.asarray(r1), np.asarray(r2))
+    want, _ = ref.erp_update_ref(
+        rate, hold, cnp, tgt, slope,
+        ref.ERPParams(0.5, 50e-6, 1e6, 12.5e9, 1e-6))
+    np.testing.assert_allclose(np.asarray(r2), np.asarray(want), rtol=1e-6)
 
 
 # ---------------------------------------------------------------------------

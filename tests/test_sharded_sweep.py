@@ -1,0 +1,95 @@
+"""Mesh-sharded Sweep: multi-device runs must be bitwise single-device.
+
+``Sweep.run(mesh=...)`` shard_maps the run axis, so a sharded sweep is
+the single-device sweep cut into per-device slices with zero
+cross-device math.  The pytest process owns a single-CPU jax backend,
+so the >= 2-device check runs in a subprocess with
+``--xla_force_host_platform_device_count`` (the standard way to fake a
+multi-device host); the in-process tests cover the 1-device mesh and
+the batch-padding path, which exercise the same shard_map code.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.core import CCScheme, PAPER_CONFIG, ScenarioSpec, Sweep
+from repro.dist import sweep_mesh
+
+_SWEEP_SRC = """
+from repro.core import CCScheme, PAPER_CONFIG, ScenarioSpec, Sweep
+spec = ScenarioSpec.paper_incast(roll=0)
+sweep = Sweep.grid(
+    configs={{s.name: PAPER_CONFIG.replace(scheme=s) for s in CCScheme}},
+    scenarios={{"hol": spec}})
+res = sweep.run(n_steps=300{mesh})
+"""
+
+_CHILD = """
+import jax, numpy as np
+assert len(jax.devices()) == 2, jax.devices()
+from repro.dist import sweep_mesh
+{single}
+ref = res
+{sharded}
+for name in ref.names:
+    a, b = ref[name], res[name]
+    for f in ("delivered", "rate", "inst_thr", "max_q", "n_paused",
+              "marked", "cnp", "n_nonmin"):
+        ga, gb = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        assert np.array_equal(ga, gb), (name, f)
+    for f, ga, gb in zip(a.final._fields, a.final, b.final):
+        assert np.array_equal(np.asarray(ga), np.asarray(gb)), \\
+            (name, "final." + f)
+print("SHARDED_BITWISE_OK")
+"""
+
+
+def _env_with_devices(n: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={n}")
+    src = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (src, env.get("PYTHONPATH")) if p)
+    return env
+
+
+def test_sharded_sweep_bitwise_on_two_devices():
+    """3 runs on a 2-device mesh (pads to 4) == single device, bitwise."""
+    src = _CHILD.format(
+        single=_SWEEP_SRC.format(mesh=""),
+        sharded=_SWEEP_SRC.format(mesh=", mesh=sweep_mesh()"))
+    out = subprocess.run([sys.executable, "-c", src],
+                         env=_env_with_devices(2), capture_output=True,
+                         text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDED_BITWISE_OK" in out.stdout
+
+
+def test_one_device_mesh_in_process():
+    """mesh= with a single device goes through the same shard_map path
+    (incl. padding 3 runs -> 3, i.e. no pad) and must be bitwise."""
+    spec = ScenarioSpec.paper_incast(roll=0)
+    sweep = Sweep.grid(
+        configs={s.name: PAPER_CONFIG.replace(scheme=s)
+                 for s in CCScheme},
+        scenarios={"hol": spec})
+    r1 = sweep.run(n_steps=200)
+    r2 = sweep.run(n_steps=200, mesh=sweep_mesh(1))
+    for name in r1.names:
+        a, b = r1[name], r2[name]
+        assert np.array_equal(a.delivered, b.delivered)
+        assert np.array_equal(np.asarray(a.final.qh),
+                              np.asarray(b.final.qh))
+
+
+def test_sweep_mesh_validation():
+    import pytest
+    with pytest.raises(ValueError):
+        sweep_mesh(0)
+    with pytest.raises(ValueError):
+        sweep_mesh(10_000)
