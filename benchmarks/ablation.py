@@ -1,28 +1,50 @@
 """Beyond-paper ablation: which of DCQCN-Rev's mechanisms buys what?
 
-Cross the marking stage {CP, ECP} with the reaction stage {RP, ERP}
-(notification follows reaction: NP with RP, ENP with ERP) on the paper's
-equal-work scenario (roll=0).  (CP,RP) = DCQCN; (ECP,ERP) = DCQCN-Rev.
-The 4 mechanism combinations are one Sweep — the marking/reaction
-selectors are traced data, so the grid shares a single compiled step.
+Cross the **registered** marking stages with the registered reaction
+stages (notification follows reaction like the legacy schemes: NP with
+RP, ENP otherwise) on the paper's equal-work scenario (roll=0).
+(cp, rp) = DCQCN; (ecp, erp) = DCQCN-Rev; everything else — including
+any stage registered after this file was written — appears in the grid
+automatically, because the combos are enumerated from
+``repro.core.cc.MARKING`` / ``REACTION`` rather than hardcoded.  All
+combinations ride one Sweep — the stage selectors are traced data, so
+the grid shares a single compiled step.
 """
 
 from __future__ import annotations
 
-from repro.core import CCConfig, CCScheme, ScenarioSpec, Sweep
+from repro.core import CCSpec, ScenarioSpec, Sweep, cc
 
-COMBOS = [("cp", "rp"), ("ecp", "rp"), ("cp", "erp"), ("ecp", "erp")]
+
+def combos() -> list[tuple[str, str]]:
+    """(marking, reaction) grid from the registry.
+
+    pfc is the no-CC baseline, not an injection-throttling mechanism —
+    excluded.  Mark-free reactions (``consumes_marks=False``, e.g. the
+    swift delay-target stage) make the marking axis dead, so they get
+    ONE row instead of a redundant cross with every marking."""
+    out = []
+    for stage in cc.REACTION.stages():
+        if stage.name == "pfc":
+            continue
+        markings = cc.MARKING.names() if stage.consumes_marks \
+            else cc.MARKING.names()[:1]
+        out += [(m, stage.name) for m in markings]
+    return out
+
+
+def _spec_for(marking: str, reaction: str) -> CCSpec:
+    return CCSpec(marking=marking, reaction=reaction,
+                  notification="np" if reaction == "rp" else "enp")
 
 
 def run_ablation(n_steps: int = 18000) -> list[dict]:
     spec = ScenarioSpec.paper_incast_volume(roll=0)
-    sweep = Sweep([
-        (f"{m}+{r}",
-         CCConfig(scheme=CCScheme.DCQCN, marking=m, reaction=r), spec)
-        for m, r in COMBOS])
+    sweep = Sweep([(f"{m}+{r}", _spec_for(m, r), spec)
+                   for m, r in combos()])
     results = sweep.run(n_steps=n_steps)
     out = []
-    for marking, reaction in COMBOS:
+    for marking, reaction in combos():
         res = results[f"{marking}+{reaction}"]
         thr = res.mean_throughput_while_active() / 1e9
         out.append({

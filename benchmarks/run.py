@@ -18,6 +18,10 @@ reduction vs the legacy scatter path) and appends a record to
 ``BENCH_fluid.json``; with ``--check`` it exits non-zero when the
 fused/scat speedup falls below 80% of the committed baseline's (floor
 capped at 2.0x for cross-runner noise — the CI perf-smoke gate).
+``--cc-matrix`` enumerates the ``repro.core.cc`` stage registries
+(every marking x notification x reaction combination) as ONE Sweep
+launch, appends the rows to ``BENCH_fluid.json`` under ``cc_matrix``
+and exits non-zero if the matrix needed more than one compile.
 """
 
 from __future__ import annotations
@@ -120,19 +124,32 @@ def main() -> None:
                          "drops below 80%% of the committed "
                          "BENCH_fluid.json baseline (floor capped at "
                          "2.0x for cross-runner noise)")
+    ap.add_argument("--cc-matrix", action="store_true", dest="cc_matrix",
+                    help="stage-registry combination sweep (marking x "
+                         "notification x reaction, one jit) -> "
+                         "BENCH_fluid.json")
     ap.add_argument("--quick", action="store_true",
-                    help="with --scale/--perf: CI-sized grid")
+                    help="with --scale/--perf/--cc-matrix: CI-sized grid")
     args = ap.parse_args()
     if args.smoke:
         raise SystemExit(smoke())
 
     if __package__:
-        from . import (ablation, cc_scale, cosim, fig2_throughput,
-                       fig3_perflow, net_scale, perf_fluid, roofline)
+        from . import (ablation, cc_matrix, cc_scale, cosim,
+                       fig2_throughput, fig3_perflow, net_scale,
+                       perf_fluid, roofline)
     else:                    # `python benchmarks/run.py` (no package ctx)
-        import ablation, cc_scale, cosim, fig2_throughput  # noqa: E401
-        import fig3_perflow, net_scale, perf_fluid         # noqa: E401
-        import roofline                                    # noqa: E401
+        import ablation, cc_matrix, cc_scale, cosim        # noqa: E401
+        import fig2_throughput, fig3_perflow, net_scale    # noqa: E401
+        import perf_fluid, roofline                        # noqa: E401
+
+    if args.cc_matrix:
+        rows = _section("cc_matrix",
+                        lambda: cc_matrix.main(quick=args.quick))
+        _print_rows(rows)
+        if any(".ERROR" in r[0] or "RECOMPILE" in r[0] for r in rows):
+            raise SystemExit(1)
+        return
 
     if args.scale:
         rows = _section("net_scale",
@@ -155,6 +172,7 @@ def main() -> None:
     all_rows += _section("fig2", fig2_throughput.main)
     all_rows += _section("fig3", fig3_perflow.main)
     all_rows += _section("ablation", ablation.main)
+    all_rows += _section("cc_matrix", lambda: cc_matrix.main(quick=True))
     all_rows += _section("cc_scale", cc_scale.main)
     all_rows += _section("net_scale", net_scale.main)
     all_rows += _section("perf_fluid", lambda: perf_fluid.main(quick=True))

@@ -1,7 +1,11 @@
 """repro.core — the paper's contribution: DCQCN-Rev congestion control.
 
 Public surface:
-  * params:      CCConfig / CCScheme / PAPER_CONFIG
+  * params:      CCConfig / CCScheme / CCSpec / PAPER_CONFIG
+  * cc:          the composable stage registries (MARKING /
+                 NOTIFICATION / REACTION) — pluggable detection,
+                 notification and reaction components selected by
+                 traced codes, all combinations riding one jit
   * topology:    make_paper_clos / make_clos3 / Topology
   * routing:     build_flow_routes / clos_route
   * fluid:       Scenario / FluidState / fluid_step / make_step_fn
@@ -14,8 +18,10 @@ Public surface:
                  bursts) — combine with ``repro.net`` fabrics
 """
 
-from .params import (CCConfig, CCScheme, DCQCNParams, LinkParams,
-                     PAPER_CONFIG, ROUTING_MODES, RevParams, SimParams)
+from .params import (CCConfig, CCScheme, CCSpec, DCQCNParams, FNCCParams,
+                     LinkParams, PAPER_CONFIG, ROUTING_MODES, RevParams,
+                     SimParams, SwiftParams)
+from . import cc
 from .topology import ClosIndex, Topology, make_clos3, make_paper_clos
 from .routing import (build_flow_routes, clos_route, link_incidence,
                       route_hops)
@@ -33,8 +39,10 @@ from .workloads import Workload
 from . import workloads
 
 __all__ = [
-    "CCConfig", "CCScheme", "DCQCNParams", "LinkParams", "PAPER_CONFIG",
-    "ROUTING_MODES", "RevParams", "SimParams", "ClosIndex", "Topology", "make_clos3",
+    "CCConfig", "CCScheme", "CCSpec", "DCQCNParams", "FNCCParams",
+    "LinkParams", "PAPER_CONFIG", "ROUTING_MODES", "RevParams",
+    "SimParams", "SwiftParams", "cc",
+    "ClosIndex", "Topology", "make_clos3",
     "make_paper_clos", "build_flow_routes", "clos_route",
     "link_incidence", "route_hops",
     "FluidState", "Scenario", "ScenarioDev", "StepParams", "delay_depth",

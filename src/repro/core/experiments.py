@@ -41,10 +41,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .fluid import (FluidState, Scenario, clamp_dense_rows, delay_depth,
-                    dense_reduce_rows, fluid_step, init_state,
-                    scenario_device, step_params)
-from .params import CCConfig
+from .fluid import (FluidState, Scenario, check_routing_paths,
+                    clamp_dense_rows, delay_depth, dense_reduce_rows,
+                    fluid_step, init_state, scenario_device, step_params)
+from .params import CCConfig, CCSpec
 from .routing import PAD, route_hops
 from .simulator import SimResult, _resolve_steps, decimating_scan
 from .topology import Topology
@@ -463,7 +463,7 @@ class Sweep:
     padded to the batch maximum.
     """
 
-    def __init__(self, points: Sequence[tuple[str, CCConfig,
+    def __init__(self, points: Sequence[tuple[str, "CCConfig | CCSpec",
                                               "ScenarioSpec | Scenario"]]):
         if not points:
             raise ValueError("empty sweep")
@@ -475,6 +475,7 @@ class Sweep:
             names.add(name)
             if isinstance(scn, ScenarioSpec):
                 scn = scn.build(cfg)
+            check_routing_paths(cfg, scn)
             self.points.append(SweepPoint(name, cfg, scn))
         dts = {p.cfg.sim.dt for p in self.points}
         kps = {p.cfg.sim.trace_every for p in self.points}
@@ -487,11 +488,11 @@ class Sweep:
     def grid(cls, configs, scenarios) -> "Sweep":
         """Cross named configs with named scenarios/specs.
 
-        ``configs``: dict[str, CCConfig] (or one CCConfig);
+        ``configs``: dict[str, CCConfig | CCSpec] (or one config);
         ``scenarios``: dict[str, ScenarioSpec | Scenario] (or one).
         Point names are "cfg/scenario" (or the sole non-dict's name).
         """
-        if isinstance(configs, CCConfig):
+        if isinstance(configs, (CCConfig, CCSpec)):
             configs = {"": configs}
         if isinstance(scenarios, (ScenarioSpec, Scenario)):
             scenarios = {getattr(scenarios, "name", "scenario"): scenarios}
@@ -579,6 +580,7 @@ def _slice_final(fin: FluidState, r: int, F: int) -> FluidState:
         t_stage=flow(fin.t_stage), hold=flow(fin.hold),
         np_tmr=flow(fin.np_tmr), trig_buf=fin.trig_buf[r][:, :F],
         tgt_buf=fin.tgt_buf[r][:, :F], path_idx=flow(fin.path_idx),
+        cc={k: flow(v) for k, v in fin.cc.items()},
         t=fin.t[r])
 
 

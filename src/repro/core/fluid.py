@@ -38,12 +38,17 @@ Per step (Jacobi, from pre-step state):
      flow stalls everyone — the paper's victim pathology);
   3. PFC: a wire pauses when its sink queue crosses XOFF (hysteresis XON),
      plus a shared-pool pause per switch;
-  4. marking: CP (occupancy only) vs ECP (occupancy AND flow rate above
-     its waterfilled fair grant on its next wire — victims never marked);
-  5. notification: NP (50us suppression) vs ENP (fast coalescing +
-     severity payload = fair grant at the marking queue);
-  6. reaction: RP (DCQCN alpha/stage machine) vs ERP (set to signalled
-     fair share, hold, desynchronised additive recovery).
+  4. marking: one registered ``repro.core.cc.MARKING`` stage — CP
+     (occupancy only), ECP (occupancy AND flow rate above its
+     waterfilled fair grant on its next wire — victims never marked),
+     slope (RED-style kmin..kmax ramp, error-diffused), ...;
+  5. notification: one ``cc.NOTIFICATION`` stage — NP (50us
+     suppression), ENP (fast coalescing + severity payload = fair
+     grant at the marking queue), FNCC (in-path: the marking hop
+     writes the return path, shrinking the feedback delay);
+  6. reaction: one ``cc.REACTION`` stage — fixed-rate PFC source, RP
+     (DCQCN alpha/stage machine), ERP (set to signalled fair share,
+     hold, desynchronised additive recovery), swift (delay-target).
 
 All arrays are float32; the update is pure jnp and runs inside lax.scan.
 
@@ -53,13 +58,15 @@ Layering (the Sweep engine in ``experiments.py`` builds on this):
                           pytree ``fluid_step`` consumes.  Batched sweeps
                           stack R of these and ``vmap`` over the leading
                           axis.
-  * ``StepParams``      — every CCConfig scalar the update reads, as
+  * ``StepParams``      — every config scalar the update reads, as
                           traced values (NOT python statics), so one
-                          compiled step serves all schemes / param grids.
-  * ``fluid_step``      — the pure per-``dt`` update.  Scheme selection
-                          (``mark_ecp`` / ``react_code``) happens with
-                          ``jnp.where`` on traced selectors, which is what
-                          lets a scheme ablation ride one jit.
+                          compiled step serves all stage combinations /
+                          param grids.
+  * ``fluid_step``      — the pure per-``dt`` update.  Stage selection
+                          (``mark_code`` / ``notif_code`` /
+                          ``react_code``, see ``repro.core.cc``) happens
+                          with ``jnp.where`` on traced selectors, which
+                          is what lets a stage ablation ride one jit.
 """
 
 from __future__ import annotations
@@ -73,7 +80,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .params import CCConfig, CCScheme, ROUTING_MODES
+from . import cc
+from .params import CCConfig, CCSpec, ROUTING_MODES
 from .routing import PAD, link_incidence
 
 
@@ -141,39 +149,29 @@ class ScenarioDev(NamedTuple):
 class StepParams(NamedTuple):
     """Per-run CC constants as traced scalars (stack + vmap for sweeps).
 
-    ``mark_ecp`` / ``react_code`` select the paper's mechanisms with
-    ``jnp.where`` instead of python branches: 0 = PFC fixed-rate source,
-    1 = DCQCN RP, 2 = ERP.
+    Stage selection is data, not structure: ``mark_code`` /
+    ``notif_code`` / ``react_code`` name one registered component per
+    family in ``repro.core.cc`` (selected inside the step with
+    ``jnp.where``, like ``route_code``), and ``mark`` / ``notif`` /
+    ``react`` carry each family's param union as a flat dict pytree —
+    so any (marking x notification x reaction x param grid) product
+    shares ONE compiled step.
     """
 
-    mark_ecp: jnp.ndarray     # [] bool   — ECP (vs CP) marking
-    react_code: jnp.ndarray   # [] int32  — 0 pfc / 1 rp / 2 erp
+    mark_code: jnp.ndarray    # [] int32 — cc.MARKING entry
+    notif_code: jnp.ndarray   # [] int32 — cc.NOTIFICATION entry
+    react_code: jnp.ndarray   # [] int32 — cc.REACTION entry
     route_code: jnp.ndarray   # [] int32  — 0 min / 1 valiant / 2 ugal
     line_rate: jnp.ndarray    # [] f32
     xoff: jnp.ndarray         # [] f32
     xon: jnp.ndarray          # [] f32
     pool_xoff: jnp.ndarray    # [] f32
     port_buffer: jnp.ndarray  # [] f32
-    v_thresh: jnp.ndarray     # [] f32  — Kmin (CP) or detect threshold (ECP)
-    window: jnp.ndarray       # [] f32  — NP suppression / ENP coalescing
-    # DCQCN RP
-    g: jnp.ndarray
-    rdf: jnp.ndarray          # rate decrease factor
-    timer_T: jnp.ndarray
-    byte_B: jnp.ndarray
-    rai: jnp.ndarray
-    rhai: jnp.ndarray
-    fr_stages: jnp.ndarray    # [] int32
-    rp_min_rate: jnp.ndarray
-    # DCQCN-Rev ECP/ERP
-    ecp_slack: jnp.ndarray
-    ecp_beta: jnp.ndarray     # arrival-rate EWMA gain
-    erp_settle: jnp.ndarray
-    erp_rai: jnp.ndarray
-    erp_jitter: jnp.ndarray
-    erp_hold: jnp.ndarray
-    erp_drain_gain: jnp.ndarray
-    erp_min_rate: jnp.ndarray
+    ecp_beta: jnp.ndarray     # [] f32 — crossing-rate EWMA gain (the
+    #   demand estimate is shared step infrastructure, not a stage)
+    mark: dict                # marking-family param union ([] scalars)
+    notif: dict               # notification-family param union
+    react: dict               # reaction-family param union
 
 
 class FluidState(NamedTuple):
@@ -198,6 +196,11 @@ class FluidState(NamedTuple):
     trig_buf: jnp.ndarray     # [D, F] CNP in flight (delay line)
     tgt_buf: jnp.ndarray      # [D, F] severity payload in flight
     path_idx: jnp.ndarray     # [F] int32 selected candidate (0 = minimal)
+    # per-stage state pytree: every registered cc stage contributes its
+    # [F]-shaped keys (e.g. slope marking's error-diffusion accumulator,
+    # swift's decrease-guard timer), so the structure is stable across a
+    # whole sweep batch and unselected stages pass theirs through.
+    cc: dict
     t: jnp.ndarray            # [] int32 step counter
 
 
@@ -389,43 +392,52 @@ def scenario_device(scn: Scenario) -> ScenarioDev:
     )
 
 
-def step_params(cfg: CCConfig) -> StepParams:
-    """Flatten a CCConfig into the traced scalars ``fluid_step`` reads."""
-    p, r, lk = cfg.dcqcn, cfg.rev, cfg.link
-    marking_kind = cfg.marking_kind
-    reaction_kind = cfg.reaction_kind
-    if cfg.scheme == CCScheme.PFC_ONLY:
-        react_code = 0
-    else:
-        react_code = 1 if reaction_kind == "rp" else 2
-    if cfg.routing not in ROUTING_MODES:
-        raise ValueError(f"unknown routing mode {cfg.routing!r}; "
-                         f"expected one of {ROUTING_MODES}")
-    route_code = ROUTING_MODES.index(cfg.routing)
+def step_params(cfg: "CCConfig | CCSpec") -> StepParams:
+    """Flatten a config into the traced scalars ``fluid_step`` reads.
+
+    Accepts the legacy ``CCConfig`` (mapped through ``to_spec()``, the
+    bit-exact shim) or a ``CCSpec`` directly.  Stage names resolve to
+    registry codes; each family's param union comes from the registered
+    stages' extractors.
+    """
+    spec: CCSpec = cfg.to_spec()
+    lk = spec.link
+    route_code = ROUTING_MODES.index(spec.routing)
     f32 = lambda v: jnp.asarray(v, jnp.float32)
     return StepParams(
-        mark_ecp=jnp.asarray(marking_kind == "ecp"),
-        react_code=jnp.asarray(react_code, jnp.int32),
+        mark_code=jnp.asarray(cc.MARKING.code(spec.marking), jnp.int32),
+        notif_code=jnp.asarray(cc.NOTIFICATION.code(spec.notification),
+                               jnp.int32),
+        react_code=jnp.asarray(cc.REACTION.code(spec.reaction), jnp.int32),
         route_code=jnp.asarray(route_code, jnp.int32),
         line_rate=f32(lk.line_rate),
         xoff=f32(lk.port_buffer * lk.pfc_xoff_frac),
         xon=f32(lk.port_buffer * lk.pfc_xon_frac),
         pool_xoff=f32(lk.shared_buffer * lk.pfc_xoff_frac),
         port_buffer=f32(lk.port_buffer),
-        v_thresh=f32(p.kmin if marking_kind == "cp" else r.detect_threshold),
-        window=f32(p.cnp_window if reaction_kind == "rp" else r.enp_coalesce),
-        g=f32(p.g), rdf=f32(p.rate_decrease_factor), timer_T=f32(p.timer_T),
-        byte_B=f32(p.byte_counter_B), rai=f32(p.rai), rhai=f32(p.rhai),
-        fr_stages=jnp.asarray(p.fr_stages, jnp.int32),
-        rp_min_rate=f32(p.min_rate),
-        ecp_slack=f32(r.ecp_fairness_slack), ecp_beta=f32(r.ecp_rate_ewma),
-        erp_settle=f32(r.erp_settle), erp_rai=f32(r.erp_rai),
-        erp_jitter=f32(r.erp_jitter), erp_hold=f32(r.erp_hold),
-        erp_drain_gain=f32(r.erp_drain_gain), erp_min_rate=f32(r.min_rate),
+        ecp_beta=f32(spec.rev.ecp_rate_ewma),
+        mark=cc.MARKING.device_params(spec),
+        notif=cc.NOTIFICATION.device_params(spec),
+        react=cc.REACTION.device_params(spec),
     )
 
 
-def init_state(scn: Scenario, cfg: CCConfig,
+def check_routing_paths(cfg: "CCConfig | CCSpec", scn: Scenario) -> None:
+    """Adaptive routing needs detour candidates to select from.
+
+    ``routing != "min"`` on a single-path scenario would silently
+    degenerate to minimal routing (there is nothing to pick); raise at
+    the point where config meets scenario instead.
+    """
+    K = 1 if scn.alt_routes is None else scn.alt_routes.shape[1]
+    if cfg.routing != "min" and K == 1:
+        raise ValueError(
+            f"routing={cfg.routing!r} needs a multi-path scenario with "
+            f"detour candidates (build it with ScenarioSpec(n_paths > 1) "
+            f"or Scenario.alt_routes); this scenario is single-path")
+
+
+def init_state(scn: Scenario, cfg: "CCConfig | CCSpec",
                delay_slots: int | None = None) -> FluidState:
     F, H = scn.routes.shape
     L = scn.capacity.shape[0]
@@ -449,56 +461,9 @@ def init_state(scn: Scenario, cfg: CCConfig,
         trig_buf=jnp.zeros((D, F), jnp.float32),
         tgt_buf=jnp.zeros((D, F), jnp.float32),
         path_idx=jnp.zeros((F,), jnp.int32),
+        cc=cc.init_cc_state(scn),
         t=jnp.zeros((), jnp.int32),
     )
-
-
-def _react_rp(st: FluidState, par: StepParams, cnp, dt):
-    """DCQCN RP: alpha EWMA + staged byte/timer recovery machine."""
-    g = par.g
-    alpha_tmr = st.alpha_tmr + dt
-    a_tick = alpha_tmr >= par.timer_T
-    alpha = jnp.where(a_tick, (1 - g) * st.alpha, st.alpha)
-    alpha_tmr = jnp.where(a_tick, 0.0, alpha_tmr)
-    rp_target = jnp.where(cnp, st.rate, st.rp_target)
-    rate = jnp.where(cnp, st.rate * (1 - alpha * par.rdf), st.rate)
-    alpha = jnp.where(cnp, (1 - g) * alpha + g, alpha)
-    byte_cnt = jnp.where(cnp, 0.0, st.byte_cnt + st.rate * dt)
-    tmr = jnp.where(cnp, 0.0, st.tmr + dt)
-    alpha_tmr = jnp.where(cnp, 0.0, alpha_tmr)
-    bc_stage = jnp.where(cnp, 0, st.bc_stage)
-    t_stage = jnp.where(cnp, 0, st.t_stage)
-    b_ev = byte_cnt >= par.byte_B
-    t_ev = tmr >= par.timer_T
-    byte_cnt = jnp.where(b_ev, 0.0, byte_cnt)
-    tmr = jnp.where(t_ev, 0.0, tmr)
-    bc_stage = bc_stage + b_ev.astype(jnp.int32)
-    t_stage = t_stage + t_ev.astype(jnp.int32)
-    ev = b_ev | t_ev
-    imax = jnp.maximum(bc_stage, t_stage)
-    imin = jnp.minimum(bc_stage, t_stage)
-    in_fr = imax <= par.fr_stages
-    in_hyper = imin > par.fr_stages
-    rp_target = jnp.where(ev & ~in_fr & ~in_hyper, rp_target + par.rai,
-                          rp_target)
-    rp_target = jnp.where(
-        ev & in_hyper,
-        rp_target + par.rhai * (imin - par.fr_stages).astype(jnp.float32),
-        rp_target)
-    rate = jnp.where(ev, 0.5 * (rate + rp_target), rate)
-    rate = jnp.clip(rate, par.rp_min_rate, par.line_rate)
-    rp_target = jnp.clip(rp_target, par.rp_min_rate, par.line_rate)
-    return rate, rp_target, alpha, byte_cnt, tmr, alpha_tmr, bc_stage, t_stage
-
-
-def _react_erp(st: FluidState, par: StepParams, cnp, tgt_rx, erp_slope, dt):
-    """ERP: settle to signalled fair share, hold, additive recovery."""
-    rate = jnp.where(
-        cnp, jnp.maximum(par.erp_settle * tgt_rx, par.erp_min_rate), st.rate)
-    hold = jnp.where(cnp, par.erp_hold, jnp.maximum(st.hold - dt, 0.0))
-    rate = jnp.where(~cnp & (hold <= 0), rate + erp_slope * dt, rate)
-    rate = jnp.clip(rate, par.erp_min_rate, par.line_rate)
-    return rate, hold
 
 
 def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
@@ -665,7 +630,6 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     widx = jnp.where(valid, routes, L)         # PAD -> scratch slot L
     is_last = valid & (arange_h == (hops[:, None] - 1))
     holds_queue = valid & (arange_h < (hops[:, None] - 1))
-    erp_slope = par.erp_rai * (1.0 + par.erp_jitter * sd.jitter)
     eps_rate = jnp.float32(1e6)                # B/s: "active" demand
 
     def scat(values_fh, init=0.0):
@@ -765,10 +729,9 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     paused = paused | jnp.where(sink_l >= 0,
                                 pool_hot[jnp.maximum(sink_l, 0)], False)
 
-    # ---- 4. marking -------------------------------------------------------
+    # ---- 4. marking (cc.MARKING dispatch) ---------------------------------
     B1 = jnp.concatenate([B, jnp.zeros((1,), jnp.float32)])
     B1_w = B1[widx]
-    q_over = B1_w > par.v_thresh                       # [F,H] queue hot?
     present = (qh > 0) | (T > 0)
 
     share0 = caps_w / jnp.maximum(n_act[widx], 1.0)
@@ -793,27 +756,35 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     over_next = jnp.concatenate(
         [oversub[:, 1:], jnp.zeros((F, 1), bool)], axis=1)
 
-    # CP: occupancy only.  ECP: queue over threshold AND the flow's
-    # requested output is oversubscribed AND its own demand exceeds its
-    # fair grant there.  Both are cheap; the selector is traced data.
-    congesting = over_next & (dem_next > par.ecp_slack * grant_next)
-    mark_base = q_over & present & holds_queue
-    mark_fh = mark_base & jnp.where(par.mark_ecp, congesting, True)
+    # Every registered marking stage (CP occupancy / ECP fair-grant /
+    # slope ramp / ...) computes its mark set + severity from this
+    # shared context; the traced ``mark_code`` selects one — so marking
+    # joins scheme constants and routing as a one-launch sweep axis.
+    (mark_fh, sev), cc_mark = cc.dispatch(
+        cc.MARKING, par.mark_code, par.mark,
+        cc.MarkCtx(B1_w=B1_w, present=present, holds_queue=holds_queue,
+                   dem_next=dem_next, grant_next=grant_next,
+                   over_next=over_next, port_buffer=par.port_buffer,
+                   line_rate=par.line_rate),
+        st.cc)
     marked = jnp.any(mark_fh, axis=1)
     # severity payload: fair grant at the marking queue, scaled down by
     # the queue's excess over V so standing backlog drains (ENP carries
     # "timely congestion severity", ERP converges to fair as B -> V).
-    qexc = jnp.clip((B1_w - par.v_thresh) / par.port_buffer, 0.0, 1.0)
-    sev = grant_next * (1.0 - par.erp_drain_gain * qexc)
     tgt = jnp.min(jnp.where(mark_fh, sev, jnp.inf), axis=1)
     tgt = jnp.where(jnp.isfinite(tgt), tgt, par.line_rate)
 
-    # ---- 5. notification (NP / ENP) --------------------------------------
-    emit = marked & (np_tmr_t >= par.window)
-    np_tmr = jnp.where(emit, 0.0, np_tmr_t)
-    # delay line sized >= max(rtt)+1 (see delay_depth), so the modulo is a
+    # ---- 5. notification (cc.NOTIFICATION dispatch) -----------------------
+    # Each stage decides who emits (suppression/coalescing window) and
+    # *when* the payload lands: NP/ENP after the end-to-end RTT, FNCC
+    # from the marking hop's position on the return path.  The delay
+    # line is sized >= max(rtt)+1 (see delay_depth), so the modulo is a
     # ring-buffer index, never an aliased (shortened) feedback delay.
-    wslot = (st.t + sd.rtt) % D
+    (emit, np_tmr, wslot), cc_notif = cc.dispatch(
+        cc.NOTIFICATION, par.notif_code, par.notif,
+        cc.NotifCtx(marked=marked, mark_fh=mark_fh, np_tmr_t=np_tmr_t,
+                    hops=hops, rtt=sd.rtt, t=st.t, D=D),
+        st.cc)
     rslot = st.t % D
     if fused:
         # branch-free ring ops: one-hot compare instead of scatters.
@@ -838,58 +809,35 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
         tgt_rx = tgt_buf[rslot]
         trig_buf = trig_buf.at[rslot].set(0.0)
 
-    # ---- 6. reaction (PFC source / RP / ERP), branchless ------------------
-    if use_kernels:
-        from repro.kernels.cc_step import erp_step, rp_step
-        from repro.kernels.ref import ERPParams, RPParams, RPState
-        rp_out = rp_step(
-            RPState(st.rate, st.rp_target, st.alpha, st.byte_cnt, st.tmr,
-                    st.alpha_tmr, st.bc_stage.astype(jnp.float32),
-                    st.t_stage.astype(jnp.float32)),
-            cnp,
-            RPParams(g=par.g, rate_decrease=par.rdf, timer_T=par.timer_T,
-                     byte_B=par.byte_B, rai=par.rai, rhai=par.rhai,
-                     fr_stages=par.fr_stages.astype(jnp.float32),
-                     min_rate=par.rp_min_rate, line_rate=par.line_rate,
-                     dt=dt),
-            interpret=interpret)
-        (rate_rp, rp_target_rp, alpha_rp, byte_cnt_rp, tmr_rp,
-         alpha_tmr_rp) = rp_out[:6]
-        bc_stage_rp = rp_out.bc_stage.astype(jnp.int32)
-        t_stage_rp = rp_out.t_stage.astype(jnp.int32)
-        rate_erp, hold_erp = erp_step(
-            st.rate, st.hold, cnp, tgt_rx, erp_slope,
-            ERPParams(settle=par.erp_settle, hold=par.erp_hold,
-                      min_rate=par.erp_min_rate, line_rate=par.line_rate,
-                      dt=dt),
-            interpret=interpret)
-    else:
-        (rate_rp, rp_target_rp, alpha_rp, byte_cnt_rp, tmr_rp,
-         alpha_tmr_rp, bc_stage_rp, t_stage_rp) = _react_rp(st, par, cnp,
-                                                            dt)
-        rate_erp, hold_erp = _react_erp(st, par, cnp, tgt_rx, erp_slope,
-                                        dt)
-    rate_pfc = jnp.minimum(sd.gen_rate, par.line_rate)
-
-    is_rp = par.react_code == 1
-    is_erp = par.react_code == 2
-    rate = jnp.where(is_rp, rate_rp, jnp.where(is_erp, rate_erp, rate_pfc))
-    rp_target = jnp.where(is_rp, rp_target_rp, st.rp_target)
-    alpha = jnp.where(is_rp, alpha_rp, st.alpha)
-    byte_cnt = jnp.where(is_rp, byte_cnt_rp, st.byte_cnt)
-    tmr = jnp.where(is_rp, tmr_rp, st.tmr)
-    alpha_tmr = jnp.where(is_rp, alpha_tmr_rp, st.alpha_tmr)
-    bc_stage = jnp.where(is_rp, bc_stage_rp, st.bc_stage)
-    t_stage = jnp.where(is_rp, t_stage_rp, st.t_stage)
-    hold = jnp.where(is_erp, hold_erp, st.hold)
+    # ---- 6. reaction (cc.REACTION dispatch), branchless -------------------
+    # Every registered reaction (fixed-rate PFC source / DCQCN RP / the
+    # paper's ERP / delay-target swift / ...) advances from the same
+    # context; the traced ``react_code`` selects one, and stages with a
+    # Pallas form route through it behind ``use_kernels``.  The queuing-
+    # delay estimate (bytes queued along the path / line rate) feeds the
+    # mark-free delay-based stages.
+    qdelay = jnp.sum(jnp.where(holds_queue, qh, 0.0),
+                     axis=1) / par.line_rate
+    react_out, cc_react = cc.dispatch(
+        cc.REACTION, par.react_code, par.react,
+        cc.ReactCtx(rate=st.rate, rp_target=st.rp_target, alpha=st.alpha,
+                    byte_cnt=st.byte_cnt, tmr=st.tmr,
+                    alpha_tmr=st.alpha_tmr, bc_stage=st.bc_stage,
+                    t_stage=st.t_stage, hold=st.hold, cnp=cnp,
+                    tgt_rx=tgt_rx, qdelay=qdelay, jitter=sd.jitter,
+                    gen_rate=sd.gen_rate, line_rate=par.line_rate, dt=dt),
+        st.cc, use_kernels=use_kernels, interpret=interpret)
 
     new = FluidState(
         qh=qh, nicq=nicq, delivered=delivered, offered=offered,
-        dropped=dropped, est=est, paused=paused, rate=rate,
-        rp_target=rp_target, alpha=alpha, byte_cnt=byte_cnt, tmr=tmr,
-        alpha_tmr=alpha_tmr, bc_stage=bc_stage, t_stage=t_stage,
-        hold=hold, np_tmr=np_tmr, trig_buf=trig_buf, tgt_buf=tgt_buf,
-        path_idx=path_idx, t=st.t + 1)
+        dropped=dropped, est=est, paused=paused, rate=react_out.rate,
+        rp_target=react_out.rp_target, alpha=react_out.alpha,
+        byte_cnt=react_out.byte_cnt, tmr=react_out.tmr,
+        alpha_tmr=react_out.alpha_tmr, bc_stage=react_out.bc_stage,
+        t_stage=react_out.t_stage, hold=react_out.hold, np_tmr=np_tmr,
+        trig_buf=trig_buf, tgt_buf=tgt_buf, path_idx=path_idx,
+        cc={**st.cc, **cc_mark, **cc_notif, **cc_react}, t=st.t + 1)
+    rate = react_out.rate
     trace = StepTrace(
         delivered=delivered, rate=rate, inst_thr=deliv_step / dt,
         max_q=jnp.max(B), n_paused=jnp.sum(paused.astype(jnp.int32)),
@@ -898,7 +846,7 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     return new, trace
 
 
-def make_step_fn(scn: Scenario, cfg: CCConfig,
+def make_step_fn(scn: Scenario, cfg: "CCConfig | CCSpec",
                  delay_slots: int | None = None, *,
                  reduce: str = "fused", dense_rows: int | None = None,
                  use_kernels: bool = False, interpret: bool = False):
@@ -914,6 +862,7 @@ def make_step_fn(scn: Scenario, cfg: CCConfig,
     """
     if delay_slots is not None:
         _check_delay(scn, delay_slots)
+    check_routing_paths(cfg, scn)
     sd = scenario_device(scn)
     par = step_params(cfg)
     n_sw = int(scn.n_switches)

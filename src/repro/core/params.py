@@ -42,6 +42,14 @@ class LinkParams:
     pfc_xoff_frac: float = 0.75
     pfc_xon_frac: float = 0.50
 
+    def __post_init__(self):
+        if self.pfc_xoff_frac <= self.pfc_xon_frac:
+            raise ValueError(
+                f"PFC XOFF threshold must sit above XON for the pause "
+                f"hysteresis to work: pfc_xoff_frac={self.pfc_xoff_frac} "
+                f"<= pfc_xon_frac={self.pfc_xon_frac} would pause and "
+                f"unpause in the same region (or never unpause)")
+
 
 @dataclasses.dataclass(frozen=True)
 class DCQCNParams:
@@ -63,6 +71,13 @@ class DCQCNParams:
     rhai: float = 25e6                 # B/s hyper increase   (200 Mbps)
     fr_stages: int = 5                 # fast-recovery stages before AI
     min_rate: float = 1e6              # B/s floor so flows never starve
+
+    def __post_init__(self):
+        if self.kmin > self.kmax:
+            raise ValueError(
+                f"kmin={self.kmin} > kmax={self.kmax}: the marking ramp "
+                f"must be non-decreasing (kmin == kmax gives step "
+                f"marking; kmin < kmax the slope ramp up to pmax)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +110,38 @@ class RevParams:
 
 
 @dataclasses.dataclass(frozen=True)
+class FNCCParams:
+    """FNCC-style fast in-path notification constants.
+
+    Instead of the destination NIC echoing a CNP after the full forward
+    trip, the congested switch writes the severity payload directly into
+    the *return* path: the feedback delay shrinks from one RTT to the
+    upstream trip from the marking hop back to the source,
+    ``rtt/2 * (h_mark+1)/hops`` (scaled by ``rtt_scale``).
+    """
+
+    coalesce: float = 5e-6             # s, per-flow notification coalescing
+    rtt_scale: float = 1.0             # scale on the hop-proportional delay
+
+
+@dataclasses.dataclass(frozen=True)
+class SwiftParams:
+    """Delay-target reaction constants (Swift-like, mark-free).
+
+    The source throttles on its *queuing-delay estimate* (bytes queued
+    along the path / line rate) instead of mark arrival: multiplicative
+    decrease proportional to the excess over ``target_delay`` (at most
+    once per ``guard`` seconds), additive recovery below target.
+    """
+
+    target_delay: float = 3e-6         # s of path queuing delay
+    beta: float = 0.8                  # max multiplicative decrease
+    ai: float = 1e12                   # B/s^2 additive recovery slope
+    guard: float = 25e-6               # s between decreases (~RTT pacing)
+    min_rate: float = 1e6              # B/s floor
+
+
+@dataclasses.dataclass(frozen=True)
 class SimParams:
     """Integrator constants."""
 
@@ -113,14 +160,92 @@ ROUTING_MODES = ("min", "valiant", "ugal")
 
 
 @dataclasses.dataclass(frozen=True)
+class CCSpec:
+    """Composable CC description: one pluggable component per stage.
+
+    The closed loop decomposes into three independently improvable
+    mechanisms — congestion detection (``marking``), notification
+    (``notification``) and injection throttling (``reaction``) — each
+    named by a registry entry in ``repro.core.cc``.  Every name traces
+    to an integer code in ``StepParams``, so any (marking x
+    notification x reaction x param-grid) product still compiles to ONE
+    ``Sweep`` launch.
+
+    Built-in stages (see ``repro.core.cc`` to add more):
+      * marking:      ``cp`` (step occupancy), ``ecp`` (occupancy AND
+                      rate over fair grant), ``slope`` (RED-style
+                      kmin<kmax ramp up to ``pmax``, error-diffused)
+      * notification: ``np`` (CNP window), ``enp`` (fast coalescing +
+                      severity), ``fncc`` (in-path: congested hop
+                      writes the return path, shrinking the delay)
+      * reaction:     ``pfc`` (fixed-rate source), ``rp`` (DCQCN),
+                      ``erp`` (the paper), ``swift`` (delay-target)
+
+    The legacy ``CCConfig`` maps onto this via ``CCConfig.to_spec()``
+    bit-exactly (golden-grid verified).
+    """
+
+    marking: str = "ecp"
+    notification: str = "enp"
+    reaction: str = "erp"
+    # adaptive-routing mode (see ROUTING_MODES); a traced selector, so
+    # routing joins the stage names as a one-launch sweep axis
+    routing: str = "min"
+    link: LinkParams = dataclasses.field(default_factory=LinkParams)
+    dcqcn: DCQCNParams = dataclasses.field(default_factory=DCQCNParams)
+    rev: RevParams = dataclasses.field(default_factory=RevParams)
+    fncc: FNCCParams = dataclasses.field(default_factory=FNCCParams)
+    swift: SwiftParams = dataclasses.field(default_factory=SwiftParams)
+    sim: SimParams = dataclasses.field(default_factory=SimParams)
+
+    def __post_init__(self):
+        from . import cc                     # deferred: cc imports params
+        for family, name in ((cc.MARKING, self.marking),
+                             (cc.NOTIFICATION, self.notification),
+                             (cc.REACTION, self.reaction)):
+            if name not in family:
+                raise ValueError(
+                    f"unknown {family.family} stage {name!r}; registered: "
+                    f"{family.names()} (register new stages via "
+                    f"repro.core.cc.{family.family.upper()}.register)")
+        if self.routing not in ROUTING_MODES:
+            raise ValueError(f"unknown routing mode {self.routing!r}; "
+                             f"expected one of {ROUTING_MODES}")
+
+    def replace(self, **kw) -> "CCSpec":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def name(self) -> str:
+        return f"{self.marking}+{self.notification}+{self.reaction}"
+
+    def to_spec(self) -> "CCSpec":
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
 class CCConfig:
+    """Legacy scheme-enum config — a thin shim over ``CCSpec``.
+
+    ``scheme`` (+ the ``marking``/``reaction`` ablation overrides) maps
+    onto stage-registry entries via ``to_spec()``; the mapping is
+    bit-exact on the golden grid, so existing configs and sweeps keep
+    their numerics.  New code should construct ``CCSpec`` directly —
+    it exposes notification as its own axis and accepts any registered
+    stage (the override fields here also accept new registry names,
+    e.g. ``marking="slope"`` or ``reaction="swift"``).
+    """
+
     scheme: CCScheme = CCScheme.DCQCN_REV
     link: LinkParams = dataclasses.field(default_factory=LinkParams)
     dcqcn: DCQCNParams = dataclasses.field(default_factory=DCQCNParams)
     rev: RevParams = dataclasses.field(default_factory=RevParams)
+    fncc: FNCCParams = dataclasses.field(default_factory=FNCCParams)
+    swift: SwiftParams = dataclasses.field(default_factory=SwiftParams)
     sim: SimParams = dataclasses.field(default_factory=SimParams)
     # ablation overrides (None -> derived from scheme): isolate the
-    # paper's mechanisms — marking in {cp, ecp}, reaction in {rp, erp}
+    # paper's mechanisms — marking in {cp, ecp, ...}, reaction in
+    # {rp, erp, ...} (any registered stage name)
     marking: str | None = None
     reaction: str | None = None
     # adaptive-routing mode (see ROUTING_MODES); a traced selector, so
@@ -141,6 +266,23 @@ class CCConfig:
         if self.reaction:
             return self.reaction
         return "erp" if self.scheme == CCScheme.DCQCN_REV else "rp"
+
+    def to_spec(self) -> CCSpec:
+        """The registry view of this config (bit-exact shim).
+
+        PFC_ONLY pins the fixed-rate ``pfc`` reaction (reaction
+        overrides are ignored, as before); notification follows the
+        reaction like the legacy window selection did — ``np`` with RP,
+        ``enp`` otherwise.
+        """
+        reaction = ("pfc" if self.scheme == CCScheme.PFC_ONLY
+                    else self.reaction_kind)
+        notification = "np" if self.reaction_kind == "rp" else "enp"
+        return CCSpec(
+            marking=self.marking_kind, notification=notification,
+            reaction=reaction, routing=self.routing, link=self.link,
+            dcqcn=self.dcqcn, rev=self.rev, fncc=self.fncc,
+            swift=self.swift, sim=self.sim)
 
 
 PAPER_CONFIG = CCConfig()

@@ -9,13 +9,17 @@ round trip per state per dt instead of the ~20 the unfused jnp version
 issues (one per intermediate).  Tiles are (8, 128)-aligned rows of a
 [F8, 128] layout.
 
-Three kernels cover the fluid step's per-flow phases (wired into
-``repro.core.fluid.fluid_step`` behind ``use_kernels=True``):
+The kernels are keyed per *stage*, not per scheme: each reaction
+component registered in ``repro.core.cc`` may carry its own
+``kernel_step``, and ``fluid_step(use_kernels=True)`` dispatches
+through the registry.  Current set:
   * gen_np_step — fused generation + notification-timer tick (phase 1
                   + the per-flow half of phase 5)
   * rp_step     — DCQCN RP (alpha EWMA + staged FR/AI/HI recovery)
   * erp_step    — the paper's ERP (jump-to-fair, hold, jittered
                   recovery)
+  * swift_step  — the delay-target reaction (queuing-delay signal,
+                  guard-paced multiplicative decrease)
 
 CC constants enter as a tiny (1, NP) SMEM vector rather than baked-in
 python floats, so the *same compiled kernel* serves traced parameter
@@ -31,7 +35,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .ref import ERPParams, RPParams, RPState
+from .ref import ERPParams, RPParams, RPState, SwiftKParams
 
 LANE = 128
 BLOCK_ROWS = 64          # (64, 128) f32 tiles = 32 KB per state vector
@@ -212,5 +216,42 @@ def erp_step(rate, hold, cnp, tgt_rx, slope, p: ERPParams,
         _erp_kernel,
         [rate, hold, cnp.astype(jnp.float32), tgt_rx, slope],
         _param_vec(p.settle, p.hold, p.min_rate, p.line_rate, p.dt),
+        2, interpret=interpret)
+    return outs[0], outs[1]
+
+
+# ---------------------------------------------------------------------------
+# delay-target reaction (Swift-like) — the mark-free stage variant
+# ---------------------------------------------------------------------------
+
+def _swift_kernel(par_ref, rate_ref, cool_ref, qd_ref, o_rate, o_cool):
+    target, beta, ai, guard, min_rate, line_rate, dt = (
+        par_ref[0, i] for i in range(7))
+    rate = rate_ref[...]
+    cool = jnp.maximum(cool_ref[...] - dt, 0.0)
+    qd = qd_ref[...]
+    over = qd > target
+    can = cool <= 0.0
+    factor = 1.0 - beta * (qd - target) / jnp.maximum(qd, 1e-12)
+    dec = jnp.maximum(rate * jnp.maximum(factor, 1.0 - beta), min_rate)
+    rate = jnp.where(over & can, dec,
+                     jnp.where(over, rate, rate + ai * dt))
+    o_cool[...] = jnp.where(over & can, guard, cool)
+    o_rate[...] = jnp.clip(rate, min_rate, line_rate)
+
+
+def swift_step(rate, cool, qdelay, p: SwiftKParams,
+               interpret: bool = False):
+    """Vectorised delay-target update for F flows (any F).
+
+    Exact f32 mirror of ``ref.swift_update_ref`` — the delay signal
+    replaces the CNP input, so the kernel reads (rate, guard cool-down,
+    queuing-delay estimate) and writes (rate', cool-down').
+    """
+    outs = _flow_call(
+        _swift_kernel,
+        [rate, cool, qdelay],
+        _param_vec(p.target, p.beta, p.ai, p.guard, p.min_rate,
+                   p.line_rate, p.dt),
         2, interpret=interpret)
     return outs[0], outs[1]

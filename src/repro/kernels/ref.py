@@ -148,3 +148,35 @@ def erp_update_ref(rate, hold, cnp, tgt_rx, slope, p: ERPParams):
     rate = jnp.where(~cnp & (hold <= 0), rate + slope * p.dt, rate)
     rate = jnp.clip(rate, p.min_rate, p.line_rate)
     return rate, hold
+
+
+class SwiftKParams(NamedTuple):
+    target: float              # s, queuing-delay target
+    beta: float                # max multiplicative decrease
+    ai: float                  # B/s^2 additive recovery slope
+    guard: float               # s between decreases
+    min_rate: float
+    line_rate: float
+    dt: float
+
+
+def swift_update_ref(rate, cool, qdelay, *, target, beta, ai, guard,
+                     min_rate, line_rate, dt):
+    """One dt of the delay-target reaction (Swift-like), [F] f32.
+
+    Multiplicative decrease proportional to the excess of the path
+    queuing-delay estimate over ``target`` — bounded by ``beta`` and
+    paced by the ``guard`` cool-down — additive recovery below target.
+    This is the single definition the jnp stage AND the Pallas kernel
+    reproduce (exact f32 parity is a tier-1 test).
+    """
+    cool = jnp.maximum(cool - dt, 0.0)
+    over = qdelay > target
+    can = cool <= 0.0
+    factor = 1.0 - beta * (qdelay - target) / jnp.maximum(qdelay, 1e-12)
+    dec = jnp.maximum(rate * jnp.maximum(factor, 1.0 - beta), min_rate)
+    rate = jnp.where(over & can, dec,
+                     jnp.where(over, rate, rate + ai * dt))
+    cool = jnp.where(over & can, guard, cool)
+    rate = jnp.clip(rate, min_rate, line_rate)
+    return rate, cool

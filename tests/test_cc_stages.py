@@ -1,0 +1,298 @@
+"""Composable CC-stage API: registry mechanics, construction-time
+validation, the three new stage variants (slope / fncc / swift), and
+the acceptance property — a mixed stage matrix riding ONE jit."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (CCScheme, CCSpec, DCQCNParams, LinkParams,
+                        PAPER_CONFIG, ScenarioSpec, SimParams, Sweep, cc,
+                        run)
+
+SCENE = ScenarioSpec.paper_incast(roll=0, t_start=0.1e-3, t_stop=1.2e-3)
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation
+# ---------------------------------------------------------------------------
+
+def test_pfc_thresholds_validated():
+    with pytest.raises(ValueError, match="XOFF.*XON|pfc_xoff"):
+        LinkParams(pfc_xoff_frac=0.4, pfc_xon_frac=0.5)
+    with pytest.raises(ValueError, match="pfc_xoff"):
+        LinkParams(pfc_xoff_frac=0.5, pfc_xon_frac=0.5)
+    LinkParams(pfc_xoff_frac=0.51, pfc_xon_frac=0.5)     # ok
+
+
+def test_marking_ramp_validated():
+    with pytest.raises(ValueError, match="kmin.*kmax"):
+        DCQCNParams(kmin=16 * 1024.0, kmax=15 * 1024.0)
+    DCQCNParams(kmin=15 * 1024.0, kmax=15 * 1024.0)      # step: ok
+
+
+def test_unknown_stage_names_raise():
+    with pytest.raises(ValueError, match="unknown marking stage"):
+        CCSpec(marking="nope")
+    with pytest.raises(ValueError, match="unknown notification stage"):
+        CCSpec(notification="nope")
+    with pytest.raises(ValueError, match="unknown reaction stage"):
+        CCSpec(reaction="nope")
+    with pytest.raises(ValueError, match="unknown routing"):
+        CCSpec(routing="nope")
+
+
+def test_adaptive_routing_needs_multipath_scenario():
+    """routing != 'min' on a single-path scenario must raise instead of
+    silently degenerating to minimal routing — in run() AND in Sweep."""
+    cfg = PAPER_CONFIG.replace(routing="ugal")
+    scn = SCENE.build(cfg)                     # n_paths = 1
+    with pytest.raises(ValueError, match="multi-path"):
+        run(scn, cfg, n_steps=10)
+    with pytest.raises(ValueError, match="multi-path"):
+        Sweep([("p", cfg, scn)])
+    # multi-path scenario: fine
+    multi = ScenarioSpec.permutation(
+        8, seed=0, n_paths=4, t_stop=0.3e-3).build(cfg)
+    Sweep([("p", cfg, multi)])
+
+
+# ---------------------------------------------------------------------------
+# registry mechanics
+# ---------------------------------------------------------------------------
+
+def test_builtin_codes_are_frozen():
+    assert [s.name for s in cc.MARKING.stages()] == ["cp", "ecp", "slope"]
+    assert [s.name for s in cc.NOTIFICATION.stages()] == \
+        ["np", "enp", "fncc"]
+    assert [s.name for s in cc.REACTION.stages()] == \
+        ["pfc", "rp", "erp", "swift"]
+    assert cc.MARKING.code("cp") == 0 and cc.REACTION.code("swift") == 3
+
+
+def test_register_rejects_duplicates_and_param_conflicts():
+    reg = cc.StageRegistry("test")
+    reg.register("a", step=lambda p, c, s: ((), {}),
+                 params={"shared": lambda spec: 1.0})
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("a", step=lambda p, c, s: ((), {}))
+    reg.register("b", step=lambda p, c, s: ((), {}),
+                 params={"shared": lambda spec: 2.0})
+    with pytest.raises(ValueError, match="conflicting"):
+        reg.device_params(PAPER_CONFIG.to_spec())
+
+
+def test_registered_state_rides_fluid_state():
+    """Every stage's init_state contributes to FluidState.cc with [F]
+    leaves, for every config (the pytree must be sweep-stable)."""
+    from repro.core.fluid import init_state
+    scn = SCENE.build(PAPER_CONFIG)
+    st = init_state(scn, PAPER_CONFIG)
+    assert set(st.cc) == {"slope_acc", "swift_cool"}
+    for v in st.cc.values():
+        assert v.shape == (scn.routes.shape[0],)
+
+
+# ---------------------------------------------------------------------------
+# slope marking (kmin < kmax ramp, pmax)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def slope_vs_cp():
+    ramp = DCQCNParams(kmin=15 * 1024.0, kmax=90 * 1024.0, pmax=0.3)
+    base = CCSpec(notification="enp", reaction="erp", dcqcn=ramp)
+    res = Sweep.grid(
+        configs={"cp": base.replace(marking="cp"),
+                 "slope": base.replace(marking="slope")},
+        scenarios={"hol": SCENE}).run(n_steps=2500)
+    return res
+
+
+def test_slope_marks_probabilistically(slope_vs_cp):
+    """With a real kmin<kmax ramp and pmax<1, slope marking thins the
+    mark stream relative to step marking at the same kmin — but still
+    marks (the loop stays closed) and still controls the queue."""
+    cp, slope = slope_vs_cp["cp/hol"], slope_vs_cp["slope/hol"]
+    m_cp, m_slope = int(cp.marked.sum()), int(slope.marked.sum())
+    assert 0 < m_slope < 0.8 * m_cp, (m_slope, m_cp)
+    # queue stays bounded well below the PFC pause point
+    assert float(slope.max_q.max()) < 0.9 * 512 * 1024
+
+
+def test_slope_with_step_params_degenerates_to_cp():
+    """kmin == kmax (the paper's V) makes the ramp a step of p=1 — the
+    error-diffusion accumulator fires every step, so slope == cp
+    bit-exactly (the shim's safety net for default params)."""
+    base = CCSpec(notification="enp", reaction="erp")
+    res = Sweep.grid(
+        configs={"cp": base.replace(marking="cp"),
+                 "slope": base.replace(marking="slope")},
+        scenarios={"hol": SCENE}).run(n_steps=1200)
+    a, b = res["cp/hol"], res["slope/hol"]
+    for f in ("delivered", "rate", "marked", "cnp", "max_q"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), f)
+
+
+# ---------------------------------------------------------------------------
+# FNCC in-path notification
+# ---------------------------------------------------------------------------
+
+def _first_event_ms(res, field) -> float:
+    ev = np.asarray(getattr(res, field)).sum(axis=1) > 0
+    return float(res.times[np.argmax(ev)]) if ev.any() else np.inf
+
+
+@pytest.fixture(scope="module")
+def fncc_vs_enp():
+    # 0.1 us integrator: the CNP feedback delay spans ~23 steps, so the
+    # in-path shortcut is resolvable (at dt = 1 us the whole RTT rounds
+    # down to the 2-step floor and fncc == enp by construction)
+    sim = SimParams(dt=1e-7, trace_every=1)
+    base = CCSpec(marking="ecp", reaction="erp", sim=sim)
+    scene = ScenarioSpec.paper_incast(roll=0, t_start=0.02e-3,
+                                      t_stop=0.5e-3)
+    return Sweep.grid(
+        configs={"enp": base.replace(notification="enp"),
+                 "fncc": base.replace(notification="fncc")},
+        scenarios={"hol": scene}).run(n_steps=2500)
+
+
+def test_fncc_feedback_arrives_earlier(fncc_vs_enp):
+    """Same marking stream, but the first CNP lands strictly earlier
+    through the in-path return than through the end-to-end echo."""
+    enp, fncc = fncc_vs_enp["enp/hol"], fncc_vs_enp["fncc/hol"]
+    t_mark_enp = _first_event_ms(enp, "marked")
+    t_mark_fncc = _first_event_ms(fncc, "marked")
+    assert t_mark_enp == t_mark_fncc          # detection unchanged
+    t_enp, t_fncc = _first_event_ms(enp, "cnp"), \
+        _first_event_ms(fncc, "cnp")
+    assert np.isfinite(t_enp) and np.isfinite(t_fncc)
+    assert t_fncc < t_enp, (t_fncc, t_enp)
+
+
+def test_fncc_never_slower_than_rtt(fncc_vs_enp):
+    """The shortened delay is clipped to [2 steps, rtt] — peak queue
+    under faster feedback must not blow past the end-to-end variant's
+    by more than noise (the loop is strictly tighter)."""
+    enp, fncc = fncc_vs_enp["enp/hol"], fncc_vs_enp["fncc/hol"]
+    assert float(fncc.max_q.max()) <= 1.1 * float(enp.max_q.max())
+
+
+# ---------------------------------------------------------------------------
+# swift delay-target reaction
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def swift_res():
+    base = CCSpec(marking="ecp", notification="enp")
+    return Sweep.grid(
+        configs={"swift": base.replace(reaction="swift"),
+                 "pfc": base.replace(reaction="pfc"),
+                 "swift_np": base.replace(reaction="swift",
+                                          notification="np")},
+        scenarios={"hol": SCENE}).run(n_steps=2500)
+
+
+def test_swift_throttles_on_delay_not_marks(swift_res):
+    """The delay-target reaction must actually throttle (rates fall
+    below line) and keep queues far below the uncontrolled PFC-only
+    run — despite never consuming a CNP."""
+    swift, pfc = swift_res["swift/hol"], swift_res["pfc/hol"]
+    line = PAPER_CONFIG.link.line_rate
+    assert float(np.asarray(swift.final.rate)[:4].max()) < 0.6 * line
+    assert float(np.asarray(pfc.final.rate).min()) >= line * 0.99
+    assert float(swift.max_q.max()) < 0.75 * float(pfc.max_q.max())
+    assert float(np.asarray(swift.final.delivered).sum()) > 0
+
+
+def test_swift_is_notification_independent(swift_res):
+    """Swapping the notification stage under swift changes which CNPs
+    fly, but not a single delivered byte or rate sample — reaction
+    composability is real, not nominal."""
+    a, b = swift_res["swift/hol"], swift_res["swift_np/hol"]
+    for f in ("delivered", "rate", "inst_thr", "max_q"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), f)
+
+
+def test_swift_kernel_matches_jnp():
+    """use_kernels routes swift through its Pallas kernel (interpret
+    mode on CPU) — exact f32 equality against the jnp stage."""
+    cfg = CCSpec(reaction="swift")
+    scn = SCENE.build(cfg)
+    a = run(scn, cfg, n_steps=600)
+    b = run(scn, cfg, n_steps=600, use_kernels=True, interpret=True)
+    for f in ("delivered", "rate", "max_q"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), f)
+    np.testing.assert_array_equal(
+        np.asarray(a.final.cc["swift_cool"]),
+        np.asarray(b.final.cc["swift_cool"]))
+
+
+# ---------------------------------------------------------------------------
+# acceptance: a mixed stage matrix rides ONE jit
+# ---------------------------------------------------------------------------
+
+def test_mixed_stage_matrix_one_jit_no_recompile():
+    """>= 3 marking x 2 notification x 3 reaction variants — including
+    slope, fncc and swift — in a single Sweep launch with exactly one
+    executable build, and the stage axes must be live (outputs differ
+    across combinations)."""
+    from repro.core.experiments import _sweep_exec
+    ramp = DCQCNParams(kmin=15 * 1024.0, kmax=90 * 1024.0, pmax=0.3)
+    combos = [(m, n, r)
+              for m in ("cp", "ecp", "slope")
+              for n in ("enp", "fncc")
+              for r in ("rp", "erp", "swift")]
+    configs = {f"{m}+{n}+{r}": CCSpec(marking=m, notification=n,
+                                      reaction=r, dcqcn=ramp)
+               for m, n, r in combos}
+    sweep = Sweep.grid(configs=configs, scenarios={"hol": SCENE})
+    _sweep_exec.cache_clear()
+    res = sweep.run(n_steps=1200)
+    assert _sweep_exec.cache_info().misses == 1, \
+        "mixed stage matrix must share one compiled executable"
+    assert len(res) == 18
+    delivered = {name: round(float(np.asarray(r.final.delivered).sum()))
+                 for name, r in res.items()}
+    # marking axis live (under erp), notification axis live via mark
+    # counts, reaction axis live
+    assert delivered["cp+enp+erp/hol"] != delivered["ecp+enp+erp/hol"]
+    assert delivered["ecp+enp+erp/hol"] != delivered["ecp+enp+swift/hol"]
+    marks = {name: int(r.marked.sum()) for name, r in res.items()}
+    assert marks["slope+enp+erp/hol"] != marks["cp+enp+erp/hol"]
+
+
+def test_shim_and_spec_share_the_one_jit():
+    """Legacy CCConfig points and CCSpec points can ride the same
+    launch — the shim is a mapping, not a second code path."""
+    cfg = PAPER_CONFIG.replace(scheme=CCScheme.DCQCN)
+    spec = CCSpec(marking="cp", notification="np", reaction="rp")
+    res = Sweep([("legacy", cfg, SCENE), ("spec", spec, SCENE)]).run(
+        n_steps=1200)
+    np.testing.assert_array_equal(res["legacy"].delivered,
+                                  res["spec"].delivered)
+
+
+def test_config_grid_sweeps_stage_params():
+    """Dotted-path grids reach the new stage param groups too."""
+    from repro.core import config_grid
+    grid = config_grid(CCSpec(reaction="swift"),
+                       **{"swift.target_delay": [2e-6, 8e-6]})
+    res = Sweep.grid(configs=grid, scenarios={"hol": SCENE}).run(
+        n_steps=1500)
+    qs = [float(r.max_q.max()) for _, r in res.items()]
+    assert qs[0] < qs[1]        # tighter delay target -> smaller queues
+
+
+def test_ccspec_is_frozen_and_replaceable():
+    s = CCSpec()
+    assert s.name == "ecp+enp+erp"
+    s2 = s.replace(marking="slope",
+                   dcqcn=DCQCNParams(kmax=60 * 1024.0))
+    assert s2.marking == "slope" and s.marking == "ecp"
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        s.marking = "cp"

@@ -20,7 +20,8 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core import CCScheme, PAPER_CONFIG, ScenarioSpec, Sweep
+from repro.core import (CCScheme, CCSpec, PAPER_CONFIG, ScenarioSpec,
+                        Sweep)
 from repro.core.fluid import (_flow_jitter, init_state, make_step_fn,
                               scenario_device)
 from repro.core.routing import PAD, link_incidence
@@ -32,20 +33,34 @@ TRACE_FIELDS = ("delivered", "rate", "inst_thr", "max_q", "n_paused",
                 "marked", "cnp", "n_nonmin")
 
 
-def _grid() -> Sweep:
-    """The golden suite's 18-point grid (same seeds/shapes)."""
+def _grid_scenarios() -> dict:
     dfly = FabricSpec.dragonfly(a=2, p=2, h=2)
     ft = FabricSpec.fat_tree(4, taper=2)
-    scenarios = {
+    return {
         "dfly_adv": group_shift(5, 4, t_stop=0.5e-3).spec(
             fabric=dfly, n_paths=4, route_seed=0, label="dfly_adv"),
         "ft_perm": ScenarioSpec.permutation(
             16, seed=2, fabric=ft, n_paths=4, route_seed=0,
             t_start=0.0, t_stop=0.5e-3, label="ft_perm"),
     }
+
+
+def _grid() -> Sweep:
+    """The golden suite's 18-point grid (same seeds/shapes)."""
     configs = {f"{s.name}/{r}": PAPER_CONFIG.replace(scheme=s, routing=r)
                for s in CCScheme for r in ("min", "valiant", "ugal")}
-    return Sweep.grid(configs=configs, scenarios=scenarios)
+    return Sweep.grid(configs=configs, scenarios=_grid_scenarios())
+
+
+def _assert_final_equal(fa, fb, ctx):
+    """Exact leaf-wise equality of two FluidStates (dict-state aware)."""
+    la = jax.tree_util.tree_flatten_with_path(fa)[0]
+    lb = jax.tree_util.tree_flatten_with_path(fb)[0]
+    assert len(la) == len(lb)
+    for (pa, ga), (pb, gb) in zip(la, lb):
+        assert pa == pb
+        assert np.array_equal(np.asarray(ga), np.asarray(gb)), \
+            ctx + (jax.tree_util.keystr(pa),)
 
 
 def _assert_bitwise(res_a, res_b, ctx: str):
@@ -55,9 +70,7 @@ def _assert_bitwise(res_a, res_b, ctx: str):
         for f in TRACE_FIELDS:
             ga, gb = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
             assert np.array_equal(ga, gb), (ctx, name, f)
-        for f, ga, gb in zip(a.final._fields, a.final, b.final):
-            assert np.array_equal(np.asarray(ga), np.asarray(gb)), \
-                (ctx, name, "final." + f)
+        _assert_final_equal(a.final, b.final, (ctx, name, "final"))
 
 
 def test_fused_matches_scat_on_golden_grid():
@@ -93,8 +106,61 @@ def test_pallas_reduce_matches_fused_single_point():
         for _ in range(100):
             st, _ = step(st)
         outs.append(st)
-    for f, a, b in zip(outs[0]._fields, outs[0], outs[1]):
-        assert np.array_equal(np.asarray(a), np.asarray(b)), f
+    _assert_final_equal(outs[0], outs[1], ("pallas-vs-fused",))
+
+
+# ---------------------------------------------------------------------------
+# legacy-scheme shim parity: CCConfig == hand-written CCSpec, bit for bit
+# ---------------------------------------------------------------------------
+
+#: what each legacy scheme must decompose into (the shim's contract)
+SCHEME_STAGES = {
+    CCScheme.PFC_ONLY: ("cp", "np", "pfc"),
+    CCScheme.DCQCN: ("cp", "np", "rp"),
+    CCScheme.DCQCN_REV: ("ecp", "enp", "erp"),
+}
+
+
+def test_legacy_shim_bitexact_on_golden_grid():
+    """Every legacy CCScheme x routing point must produce the same bits
+    through an *explicitly constructed* CCSpec as through the CCConfig
+    shim — one sweep launch each, traces AND final state compared."""
+    legacy = _grid()
+    spec_configs = {}
+    for s in CCScheme:
+        m, n, r = SCHEME_STAGES[s]
+        for routing in ("min", "valiant", "ugal"):
+            spec_configs[f"{s.name}/{routing}"] = CCSpec(
+                marking=m, notification=n, reaction=r, routing=routing)
+    explicit = Sweep.grid(configs=spec_configs,
+                          scenarios=_grid_scenarios())
+    _assert_bitwise(legacy.run(n_steps=150), explicit.run(n_steps=150),
+                    "shim-vs-spec")
+
+
+def test_legacy_override_shim_bitexact():
+    """The marking/reaction ablation overrides map through the registry
+    bit-exactly too (including the PFC_ONLY window quirk: notification
+    follows the reaction override even when the reaction is pinned)."""
+    spec_scn = ScenarioSpec.paper_incast(roll=0, t_start=0.1e-3)
+    cases = {
+        "ecp_rp": (PAPER_CONFIG.replace(scheme=CCScheme.DCQCN,
+                                        marking="ecp"),
+                   CCSpec(marking="ecp", notification="np",
+                          reaction="rp")),
+        "cp_erp": (PAPER_CONFIG.replace(scheme=CCScheme.DCQCN,
+                                        reaction="erp"),
+                   CCSpec(marking="cp", notification="enp",
+                          reaction="erp")),
+        "pfc_erp": (PAPER_CONFIG.replace(scheme=CCScheme.PFC_ONLY,
+                                         reaction="erp"),
+                    CCSpec(marking="cp", notification="enp",
+                           reaction="pfc")),
+    }
+    legacy = Sweep([(k, cfg, spec_scn) for k, (cfg, _) in cases.items()])
+    explicit = Sweep([(k, sp, spec_scn) for k, (_, sp) in cases.items()])
+    _assert_bitwise(legacy.run(n_steps=1500),
+                    explicit.run(n_steps=1500), "override-shim")
 
 
 # ---------------------------------------------------------------------------

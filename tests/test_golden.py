@@ -101,6 +101,29 @@ def test_golden_summaries_match(summaries, routing):
                 f"{name}.{k} drifted (golden {w}, got {g})"
 
 
+def test_legacy_grid_maps_through_stage_registry():
+    """Every golden-grid config decomposes into the expected
+    ``repro.core.cc`` stages with matching traced codes — the shim
+    contract whose *bitwise* form test_fluid_fused holds on this same
+    grid.  A change to the mapping (or a renumbering of the built-in
+    stages) fails here before it silently drifts the goldens."""
+    from repro.core import cc
+    from repro.core.fluid import step_params
+    expected = {CCScheme.PFC_ONLY: ("cp", "np", "pfc"),
+                CCScheme.DCQCN: ("cp", "np", "rp"),
+                CCScheme.DCQCN_REV: ("ecp", "enp", "erp")}
+    for s, (m, n, r) in expected.items():
+        for routing in ROUTINGS:
+            spec = PAPER_CONFIG.replace(scheme=s, routing=routing) \
+                .to_spec()
+            assert (spec.marking, spec.notification, spec.reaction) \
+                == (m, n, r), s
+            par = step_params(spec)
+            assert int(par.mark_code) == cc.MARKING.code(m)
+            assert int(par.notif_code) == cc.NOTIFICATION.code(n)
+            assert int(par.react_code) == cc.REACTION.code(r)
+
+
 def test_golden_encodes_the_acceptance_ordering():
     """The frozen numbers themselves must witness the adaptive-routing
     claim: UGAL >= minimal delivered bytes on the adversarial pattern."""

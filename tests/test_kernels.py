@@ -160,6 +160,29 @@ def test_erp_kernel_matches_ref(F):
     np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-6)
 
 
+@pytest.mark.parametrize("F", [1, 127, 129, 8193, 50_000])
+def test_swift_kernel_matches_ref(F):
+    """Delay-target reaction kernel vs its jnp oracle (exact f32 —
+    the fluid step's swift stage routes through this behind
+    use_kernels, so drift here is drift in the sweep)."""
+    from repro.kernels.cc_step import swift_step
+    r = np.random.RandomState(11)
+    p = ref.SwiftKParams(target=3e-6, beta=0.8, ai=1e12, guard=25e-6,
+                         min_rate=1e6, line_rate=12.5e9, dt=1e-6)
+    rate = jnp.asarray(r.rand(F) * 12.5e9, jnp.float32)
+    cool = jnp.asarray(np.where(r.rand(F) > 0.5, r.rand(F) * 5e-5, 0.0),
+                       jnp.float32)
+    qd = jnp.asarray(np.where(r.rand(F) > 0.3, r.rand(F) * 2e-5, 0.0),
+                     jnp.float32)
+    r1, c1 = swift_step(rate, cool, qd, p, interpret=True)
+    r2, c2 = ref.swift_update_ref(
+        rate, cool, qd, target=p.target, beta=p.beta, ai=p.ai,
+        guard=p.guard, min_rate=p.min_rate, line_rate=p.line_rate,
+        dt=p.dt)
+    assert np.array_equal(np.asarray(r1), np.asarray(r2)), F
+    assert np.array_equal(np.asarray(c1), np.asarray(c2)), F
+
+
 @pytest.mark.parametrize("F", [1, 127, 129, 8193])
 def test_gen_np_kernel_matches_jnp(F):
     """Fused generation + notification-timer kernel vs the fluid step's

@@ -222,3 +222,67 @@ def test_fabric_spec_in_scenario_spec_is_hashable():
     s1 = ScenarioSpec.incast(4, fabric=FabricSpec.dragonfly())
     s2 = ScenarioSpec.incast(4, fabric=FabricSpec.dragonfly())
     assert s1 == s2 and hash(s1) == hash(s2)
+
+
+# ---------------------------------------------------------------------------
+# per-link capacity heterogeneity (FabricSpec.with_rates)
+# ---------------------------------------------------------------------------
+
+def test_with_rates_scales_only_named_classes():
+    ft = FabricSpec.fat_tree(4, taper=1)
+    fast = ft.with_rates(up2=4.0, dn2=4.0)
+    t0, t1 = ft.build(), fast.build()
+    _, idx = make_fat_tree(4, taper=1)
+    up2 = idx.up_stage_ids(2)
+    np.testing.assert_array_equal(t1.link_capacity[up2],
+                                  4.0 * t0.link_capacity[up2])
+    others = np.setdiff1d(np.arange(t0.n_links),
+                          np.concatenate([up2, np.arange(
+                              idx.dn_base(2),
+                              idx.dn_base(2) + idx.n_level(2) * idx.m[1])]))
+    np.testing.assert_array_equal(t1.link_capacity[others],
+                                  t0.link_capacity[others])
+    # routing is pure structure: the scaled spec shares the route caches
+    assert fast.route_table() is ft.route_table()
+    # scales compose multiplicatively across with_rates calls
+    assert ft.with_rates(up2=2.0).with_rates(up2=2.0) == \
+        ft.with_rates(up2=4.0)
+    with pytest.raises(ValueError, match="unknown link class"):
+        FabricSpec.dragonfly(2, 2, 2).with_rates(up7=2.0).build()
+
+
+def test_uniform_fabrics_stay_bitwise_identical():
+    """rate_scales=() must not perturb a single bit of an existing
+    build or simulation (the satellite's compatibility contract)."""
+    ft = FabricSpec.fat_tree(4, taper=2)
+    assert ft.with_rates() == ft
+    spec = ScenarioSpec.incast(6, dst=16, fabric=ft, label="ft")
+    a = run(spec.build(CFG), CFG, n_steps=600)
+    b = run(ScenarioSpec.incast(6, dst=16, fabric=ft.with_rates(),
+                                label="ft").build(CFG), CFG, n_steps=600)
+    for field in ("delivered", "rate", "max_q", "marked", "cnp"):
+        np.testing.assert_array_equal(getattr(a, field),
+                                      getattr(b, field), err_msg=field)
+
+
+def test_tapered_uplinks_congest_where_capacity_shrank():
+    """The tapered-uplink example: halving leaf uplink rates on the
+    full fat tree must strictly slow an uplink-crossing permutation
+    (delivered bytes drop) while a same-leaf flow is untouched —
+    capacity heterogeneity reaches the fluid loop end to end."""
+    ft = FabricSpec.fat_tree(4, taper=1)
+    slow = ft.with_rates(up2=0.5)            # leaf uplinks at half rate
+    # 8 cross-leaf pairs, all forced through leaf uplinks
+    pairs = [(i, 32 + i) for i in range(8)]
+    spec = lambda fab: ScenarioSpec.flows(
+        pairs, fabric=fab, t_start=0.0, t_stop=1.0e-3, label="x")
+    uni = run(spec(ft).build(CFG), CFG, n_steps=1500)
+    tap = run(spec(slow).build(CFG), CFG, n_steps=1500)
+    d_uni = float(np.asarray(uni.final.delivered).sum())
+    d_tap = float(np.asarray(tap.final.delivered).sum())
+    assert d_tap < 0.75 * d_uni, (d_tap, d_uni)
+    # capacities thread into the scenario tensors themselves
+    scn = spec(slow).build(CFG)
+    assert set(np.unique(scn.capacity)) == \
+        {np.float32(0.5 * CFG.link.line_rate),
+         np.float32(CFG.link.line_rate)}

@@ -40,9 +40,12 @@ for name in ref.names:
               "marked", "cnp", "n_nonmin"):
         ga, gb = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
         assert np.array_equal(ga, gb), (name, f)
-    for f, ga, gb in zip(a.final._fields, a.final, b.final):
+    la = jax.tree_util.tree_flatten_with_path(a.final)[0]
+    lb = jax.tree_util.tree_flatten_with_path(b.final)[0]
+    assert len(la) == len(lb)
+    for (pa, ga), (_, gb) in zip(la, lb):
         assert np.array_equal(np.asarray(ga), np.asarray(gb)), \\
-            (name, "final." + f)
+            (name, "final" + jax.tree_util.keystr(pa))
 print("SHARDED_BITWISE_OK")
 """
 
