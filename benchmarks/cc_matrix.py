@@ -5,7 +5,7 @@ notification x reaction) combination, including variants registered
 after this file was written — and runs the whole matrix on the paper's
 incast scene as ONE ``Sweep`` launch.  The stage selectors are traced
 data, so the matrix shares a single compiled step; the harness asserts
-that (``_sweep_exec`` must report exactly one executable build) and
+that (``SWEEP_EXEC_CACHE`` must report exactly one executable build) and
 appends the per-combination headline rows to ``BENCH_fluid.json``
 under the ``cc_matrix`` key (the CI ``cc-matrix`` job uploads the
 refreshed file as an artifact).
@@ -23,7 +23,7 @@ def run_matrix(quick: bool = False) -> dict:
     """Execute the registry product; returns the BENCH record."""
     import jax
     from repro.core import CCSpec, ScenarioSpec, Sweep, cc
-    from repro.core.experiments import _sweep_exec
+    from repro.core.experiments import SWEEP_EXEC_CACHE
 
     from repro.core import DCQCNParams, SimParams
 
@@ -47,12 +47,12 @@ def run_matrix(quick: bool = False) -> dict:
     scn = ScenarioSpec.paper_incast(roll=0, t_start=0.1e-3,
                                     label="hol")
     n_steps = (N_STEPS_QUICK if quick else N_STEPS) * 4
-    misses0 = _sweep_exec.cache_info().misses
+    misses0 = SWEEP_EXEC_CACHE.stats().misses
     t0 = time.perf_counter()
     res = Sweep.grid(configs=configs, scenarios={"hol": scn}).run(
         n_steps=n_steps)
     wall = time.perf_counter() - t0
-    compiles = _sweep_exec.cache_info().misses - misses0
+    compiles = SWEEP_EXEC_CACHE.stats().misses - misses0
     points = []
     for name, row in res.summary().items():
         points.append({

@@ -18,6 +18,12 @@ reduction vs the legacy scatter path) and appends a record to
 ``BENCH_fluid.json``; with ``--check`` it exits non-zero when the
 fused/scat speedup falls below 80% of the committed baseline's (floor
 capped at 2.0x for cross-runner noise — the CI perf-smoke gate).
+``--serve`` replays the mixed what-if query stream through
+``CCQueryEngine`` and appends a record to ``BENCH_serve.json``; with
+``--check`` it exits non-zero on a p99 latency regression vs the
+committed baseline, a compiled-executable hit-rate collapse, or a
+token bucket that fails to throttle an over-rate burst (the CI
+serve-smoke gate).
 ``--cc-matrix`` enumerates the ``repro.core.cc`` stage registries
 (every marking x notification x reaction combination) as ONE Sweep
 launch, appends the rows to ``BENCH_fluid.json`` under ``cc_matrix``
@@ -124,6 +130,10 @@ def main() -> None:
                          "drops below 80%% of the committed "
                          "BENCH_fluid.json baseline (floor capped at "
                          "2.0x for cross-runner noise)")
+    ap.add_argument("--serve", action="store_true",
+                    help="what-if query engine replay -> BENCH_serve.json "
+                         "(--check gates on p99 regression, hit-rate "
+                         "collapse and throttling)")
     ap.add_argument("--cc-matrix", action="store_true", dest="cc_matrix",
                     help="stage-registry combination sweep (marking x "
                          "notification x reaction, one jit) -> "
@@ -137,11 +147,20 @@ def main() -> None:
     if __package__:
         from . import (ablation, cc_matrix, cc_scale, cosim,
                        fig2_throughput, fig3_perflow, net_scale,
-                       perf_fluid, roofline)
+                       perf_fluid, roofline, serve_bench)
     else:                    # `python benchmarks/run.py` (no package ctx)
         import ablation, cc_matrix, cc_scale, cosim        # noqa: E401
         import fig2_throughput, fig3_perflow, net_scale    # noqa: E401
-        import perf_fluid, roofline                        # noqa: E401
+        import perf_fluid, roofline, serve_bench           # noqa: E401
+
+    if args.serve:
+        rows = _section("serve",
+                        lambda: serve_bench.main(quick=args.quick,
+                                                 check=args.check))
+        _print_rows(rows)
+        if any(".ERROR" in r[0] or "REGRESSION" in r[0] for r in rows):
+            raise SystemExit(1)
+        return
 
     if args.cc_matrix:
         rows = _section("cc_matrix",

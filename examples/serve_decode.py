@@ -30,6 +30,8 @@ def main():
                              if a not in ("whisper-base", "internvl2-26b")])
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--eos", type=int, default=1,
+                    help="EOS token id (ragged completion -> slot refill)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -38,7 +40,7 @@ def main():
     params = init_params(transformer.param_defs(cfg), 0, jnp.float32)
     eng = ServingEngine(cfg, params,
                         ServeConfig(batch_slots=4, max_len=128,
-                                    temperature=0.8))
+                                    temperature=0.8, eos_token=args.eos))
 
     rng = np.random.RandomState(0)
     prompts = [list(rng.randint(2, cfg.vocab, size=rng.randint(3, 9)))
@@ -49,8 +51,14 @@ def main():
     n_tok = sum(len(o) for o in outs)
     for i, o in enumerate(outs[:4]):
         print(f"req{i}: prompt={prompts[i][:6]}... -> {o[:12]}...")
+    s = eng.stats
     print(f"\n{args.requests} requests, {n_tok} tokens in {dt:.1f}s "
           f"({n_tok/dt:.1f} tok/s on CPU)")
+    print(f"continuous batching: {s['prefills']} joint prefill(s), "
+          f"{s['refills']} mid-flight slot refill(s), "
+          f"{s['decode_steps']} decode steps "
+          f"(a finished slot hands its grid row to the next request "
+          f"without stopping the batch)")
 
 
 if __name__ == "__main__":

@@ -30,8 +30,10 @@ from .fluid import (FluidState, Scenario, ScenarioDev, StepParams,
                     init_state, make_step_fn, scenario_device,
                     step_params)
 from .simulator import SimResult, run, run_all_schemes
-from .experiments import (ScenarioSpec, Sweep, SweepResult, config_grid,
-                          pad_scenario, stack_scenarios)
+from .exec_cache import CacheStats, ExecutableCache
+from .experiments import (SWEEP_EXEC_CACHE, ScenarioSpec, Sweep,
+                          SweepResult, config_grid, pad_scenario,
+                          stack_scenarios, trim_final)
 from .scenarios import (PAPER_FLOW_NAMES, collective_flows, incast,
                         paper_incast, paper_incast_volume,
                         random_permutation)
@@ -48,9 +50,10 @@ __all__ = [
     "FluidState", "Scenario", "ScenarioDev", "StepParams", "delay_depth",
     "dense_reduce_rows", "fluid_step", "init_state", "make_step_fn",
     "scenario_device", "step_params", "SimResult", "run",
-    "run_all_schemes",
+    "run_all_schemes", "CacheStats", "ExecutableCache",
+    "SWEEP_EXEC_CACHE",
     "ScenarioSpec", "Sweep", "SweepResult", "config_grid",
-    "pad_scenario", "stack_scenarios", "PAPER_FLOW_NAMES",
+    "pad_scenario", "stack_scenarios", "trim_final", "PAPER_FLOW_NAMES",
     "collective_flows", "incast", "paper_incast", "paper_incast_volume",
     "random_permutation", "Workload", "workloads",
 ]

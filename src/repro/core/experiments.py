@@ -34,13 +34,13 @@ Quickstart::
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import TYPE_CHECKING, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .exec_cache import ExecutableCache
 from .fluid import (FluidState, Scenario, check_routing_paths,
                     clamp_dense_rows, delay_depth, dense_reduce_rows,
                     fluid_step, init_state, scenario_device, step_params)
@@ -415,14 +415,21 @@ def config_grid(cfg: CCConfig, **axes) -> dict[str, CCConfig]:
     return out
 
 
-@functools.lru_cache(maxsize=32)
-def _sweep_exec(n_samples: int, trace_every: int, dt: float,
-                n_switches: int, reduce: str, dense_rows: int,
-                use_kernels: bool, interpret: bool, mesh):
-    """Build + jit the sweep executable for one static configuration.
+#: The sweep-executable cache: every ``Sweep.run`` resolves its compiled
+#: program here, keyed by the full structural signature (static scan
+#: configuration + input pytree treedef + leaf shapes/dtypes).  It is a
+#: module-level singleton on purpose — the what-if serving engine
+#: (``repro.serve.whatif``) snapshots its :class:`CacheStats` to report
+#: hit rates and to *assert* "this query replay compiled exactly once".
+SWEEP_EXEC_CACHE = ExecutableCache(capacity=32, name="sweep")
 
-    The whole sweep is one vmap-of-(decimating)-scan; re-running a
-    same-shaped sweep reuses the jitted executable.  With ``mesh`` the
+
+def _sweep_scan_fn(n_samples: int, trace_every: int, dt: float,
+                   n_switches: int, reduce: str, dense_rows: int,
+                   use_kernels: bool, interpret: bool, mesh):
+    """Build the (unjitted) sweep scan for one static configuration.
+
+    The whole sweep is one vmap-of-(decimating)-scan.  With ``mesh`` the
     run axis is sharded over every mesh axis via ``shard_map`` — each
     device advances (and decimates the traces of) its own slice of the
     run batch, with zero cross-device communication, so a sharded sweep
@@ -441,17 +448,44 @@ def _sweep_exec(n_samples: int, trace_every: int, dt: float,
         return decimating_scan(step, st_b, n_samples, trace_every, dt)
 
     if mesh is None:
-        return jax.jit(scan_fn)
+        return scan_fn
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     run_spec = P(tuple(mesh.axis_names))     # leading run axis sharded
-    sharded = shard_map(
+    return shard_map(
         scan_fn, mesh=mesh,
         in_specs=(run_spec, run_spec, run_spec),
         # decimating_scan returns (final [R, ...], traces [T, R, ...])
         out_specs=(run_spec, P(None, *run_spec)),
         check_rep=False)
-    return jax.jit(sharded)
+
+
+def _sweep_executable(static: tuple, args: tuple):
+    """Resolve one sweep launch to a cached compiled executable.
+
+    The cache key is the *structural signature*: the static scan
+    configuration plus the input pytree's treedef and every leaf's
+    shape/dtype — exactly what determines the compiled program, so a
+    cache hit swaps traced data into an existing executable and a miss
+    is a real compile (counted once, in ``SWEEP_EXEC_CACHE`` stats).
+    Single-device launches are AOT-lowered (``jit(...).lower(args)
+    .compile()``) so compile time lands in the cache's ``build_s``
+    instead of smearing into the first run; the mesh-sharded path keeps
+    the jitted callable (shard_map AOT is not worth the API risk here —
+    serving never passes a mesh).
+    """
+    leaves, treedef = jax.tree.flatten(args)
+    shapes = tuple((tuple(x.shape), x.dtype.name,
+                    bool(getattr(x, "weak_type", False))) for x in leaves)
+    mesh = static[-1]
+
+    def build():
+        fn = jax.jit(_sweep_scan_fn(*static))
+        if mesh is not None:
+            return fn
+        return fn.lower(*args).compile()
+
+    return SWEEP_EXEC_CACHE.get_or_build(static + (treedef, shapes), build)
 
 
 class Sweep:
@@ -506,7 +540,9 @@ class Sweep:
     def run(self, n_steps: int | None = None,
             trace_every: int | None = None, *, mesh=None,
             reduce: str = "fused", use_kernels: bool = False,
-            interpret: bool = False) -> "SweepResult":
+            interpret: bool = False, pad_runs_to: int | None = None,
+            min_delay_slots: int | None = None,
+            dense_rows: int | None = None) -> "SweepResult":
         """Execute all points as one device launch.
 
         ``mesh``: a ``jax.sharding.Mesh`` (e.g. ``repro.dist.sweep_mesh()``)
@@ -518,12 +554,28 @@ class Sweep:
 
         ``reduce`` / ``use_kernels`` / ``interpret`` select the per-step
         reduction engine and Pallas per-flow block (see ``fluid_step``).
+
+        The remaining knobs exist for serving (``repro.serve.whatif``),
+        which must keep the executable-cache key stable across batches
+        of varying composition; results are bitwise unaffected:
+          * ``pad_runs_to`` grows the run axis to a fixed width by
+            replicating the last point (discarded on return) — the
+            micro-batcher's pad-to-bucket on the vmap axis;
+          * ``min_delay_slots`` floors the delay-line depth (normally
+            sized from the batch's worst RTT, which varies with batch
+            mix; extra slots are inert by construction);
+          * ``dense_rows`` overrides the dense-CSR row count (``None``
+            = derive from the batch; an explicit value that cannot
+            cover the batch's skew falls back to 0, the segment-sum
+            path, which is bit-identical).
         """
         cfg0 = self.points[0].cfg
         n_samples, k = _resolve_steps(cfg0, n_steps, trace_every)
         scns = [p.scenario for p in self.points]
         sd_b, padded, n_sw = stack_scenarios(scns)
         D = max(delay_depth(s) for s in padded)
+        if min_delay_slots is not None:
+            D = max(D, int(min_delay_slots))
         st_b = jax.tree.map(
             lambda *xs: jnp.stack(xs),
             *[init_state(s, p.cfg, delay_slots=D)
@@ -532,8 +584,11 @@ class Sweep:
             lambda *xs: jnp.stack(xs),
             *[step_params(p.cfg) for p in self.points])
         R = len(self.points)
-        if mesh is not None and R % mesh.size:
-            pad_r = mesh.size - R % mesh.size    # replicate the last run
+        R_target = R if pad_runs_to is None else max(R, int(pad_runs_to))
+        if mesh is not None and R_target % mesh.size:
+            R_target += mesh.size - R_target % mesh.size
+        if R_target > R:
+            pad_r = R_target - R                 # replicate the last run
             rep = lambda x: jnp.concatenate(
                 [x] + [x[-1:]] * pad_r, axis=0)
             st_b, sd_b, par_b = (jax.tree.map(rep, t)
@@ -542,8 +597,10 @@ class Sweep:
         # the batch; any over-skew scenario disables it for the batch,
         # and the batch-wide max is re-clamped so one skewed run can't
         # force the rest onto an oversized table
-        dense_rows = 0
-        if reduce == "fused":
+        if reduce != "fused":
+            dense_rows = 0
+        elif dense_rows is None:
+            dense_rows = 0
             mls = [dense_reduce_rows(s) for s in padded]
             if 0 not in mls:
                 s0 = padded[0]
@@ -552,9 +609,13 @@ class Sweep:
                 dense_rows = clamp_dense_rows(
                     max(mls), s0.capacity.shape[0],
                     s0.routes.shape[0] * K * s0.routes.shape[1])
-        exec_fn = _sweep_exec(n_samples, k, float(cfg0.sim.dt), n_sw,
-                              reduce, dense_rows, use_kernels, interpret,
-                              mesh)
+        elif dense_rows > 0 and any(
+                not 0 < dense_reduce_rows(s) <= dense_rows
+                for s in padded):
+            dense_rows = 0           # can't cover the batch: safe path
+        static = (n_samples, k, float(cfg0.sim.dt), n_sw, reduce,
+                  int(dense_rows), use_kernels, interpret, mesh)
+        exec_fn = _sweep_executable(static, (st_b, sd_b, par_b))
         final, tr = exec_fn(st_b, sd_b, par_b)
         times = (np.arange(n_samples) + 1) * k * cfg0.sim.dt
         # scan stacks samples on axis 0 -> [T, R, ...]; runs lead on host
@@ -567,21 +628,29 @@ class Sweep:
             trace_every=k)
 
 
-def _slice_final(fin: FluidState, r: int, F: int) -> FluidState:
-    """Run r's final state, trimmed back to its true flow count."""
-    flow = lambda x: x[r, :F]
+def trim_final(fin: FluidState, F: int) -> FluidState:
+    """An (unbatched) final state trimmed back to its true flow count —
+    the inverse of ``pad_scenario`` for result views (PAD flows are
+    inert, so trimming loses nothing).  Used by the sweep's per-point
+    views and by the what-if engine's bucket-padded query slicing."""
+    flow = lambda x: x[:F]
     return FluidState(
         qh=flow(fin.qh), nicq=flow(fin.nicq), delivered=flow(fin.delivered),
         offered=flow(fin.offered), dropped=flow(fin.dropped),
-        est=flow(fin.est), paused=fin.paused[r], rate=flow(fin.rate),
+        est=flow(fin.est), paused=fin.paused, rate=flow(fin.rate),
         rp_target=flow(fin.rp_target), alpha=flow(fin.alpha),
         byte_cnt=flow(fin.byte_cnt), tmr=flow(fin.tmr),
         alpha_tmr=flow(fin.alpha_tmr), bc_stage=flow(fin.bc_stage),
         t_stage=flow(fin.t_stage), hold=flow(fin.hold),
-        np_tmr=flow(fin.np_tmr), trig_buf=fin.trig_buf[r][:, :F],
-        tgt_buf=fin.tgt_buf[r][:, :F], path_idx=flow(fin.path_idx),
+        np_tmr=flow(fin.np_tmr), trig_buf=fin.trig_buf[:, :F],
+        tgt_buf=fin.tgt_buf[:, :F], path_idx=flow(fin.path_idx),
         cc={k: flow(v) for k, v in fin.cc.items()},
-        t=fin.t[r])
+        t=fin.t)
+
+
+def _slice_final(fin: FluidState, r: int, F: int) -> FluidState:
+    """Run r's final state, trimmed back to its true flow count."""
+    return trim_final(jax.tree.map(lambda x: x[r], fin), F)
 
 
 @dataclasses.dataclass
@@ -630,20 +699,19 @@ class SweepResult:
         for i, p in enumerate(self.points):
             yield p.name, self[i]
 
+    def to_dict(self, *, traces: bool = True) -> dict:
+        """JSON-ready dict (numpy-free scalars, tagged arrays); the
+        full form round-trips bit-exactly via :meth:`from_dict` — per
+        point views of the reconstruction match the original's (see
+        ``repro.core.serialize``)."""
+        from .serialize import sweepresult_to_dict
+        return sweepresult_to_dict(self, traces=traces)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SweepResult":
+        from .serialize import sweepresult_from_dict
+        return sweepresult_from_dict(d)
+
     def summary(self) -> dict[str, dict]:
         """Headline numbers per point (the Fig. 2/3 table in one dict)."""
-        out = {}
-        for name, res in self.items():
-            thr = res.mean_throughput_while_active()
-            out[name] = {
-                "aggregate_gbps": float(thr.sum() / 1e9),
-                "min_flow_gbps": float(thr.min() / 1e9),
-                "completion_ms": float(res.completion_time() * 1e3),
-                "peak_queue_kb": float(res.max_q.max() / 1e3),
-                "delivered_mb": float(
-                    np.asarray(res.final.delivered).sum() / 1e6),
-                "marks": int(res.marked.sum()),
-                "cnps": int(res.cnp.sum()),
-                "peak_nonmin_flows": int(res.n_nonmin.max()),
-            }
-        return out
+        return {name: res.summary() for name, res in self.items()}

@@ -1,0 +1,237 @@
+"""Wire-format (JSON) round-trips for configs, scenarios and results.
+
+The what-if query service returns simulation results over the wire, so
+``SimResult`` / ``SweepResult`` need a stable, numpy-free dict form:
+
+  * every scalar is a plain python ``int`` / ``float`` / ``bool`` /
+    ``str`` — ``json.dumps`` works without custom encoders (python's
+    ``json`` emits ``Infinity`` for the window-mode ``t_stop = inf``
+    sentinels and parses it back; the round-trip is exact);
+  * arrays are tagged dicts ``{"__ndarray__": dtype, "shape": [...],
+    "data": [flat scalars]}`` — float32 values pass through python
+    floats (float64) losslessly, so ``from_dict(to_dict(x))`` is
+    *bit-exact*, not approximate;
+  * configs carry a ``__class__`` tag (``CCConfig`` vs ``CCSpec``) and
+    spell enums by name, so a round-tripped config reconstructs the
+    identical frozen dataclass (hash-equal, jit-cache-equal).
+
+Traces dominate the payload; ``simresult_to_dict(..., traces=False)``
+drops them (final state + metadata only) and ``decimate=k`` thins them
+by a further factor k for dashboard-weight responses — both are lossy
+by construction and refuse to ``from_dict`` back into a full result.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .fluid import FluidState, Scenario
+from .params import (CCConfig, CCScheme, CCSpec, DCQCNParams, FNCCParams,
+                     LinkParams, RevParams, SimParams, SwiftParams)
+
+# ---------------------------------------------------------------------------
+# arrays and scalars
+# ---------------------------------------------------------------------------
+
+
+def encode_array(a: np.ndarray) -> dict:
+    a = np.asarray(a)
+    return {"__ndarray__": a.dtype.name, "shape": list(a.shape),
+            "data": a.ravel().tolist()}
+
+
+def decode_array(d: dict) -> np.ndarray:
+    return np.asarray(d["data"], dtype=d["__ndarray__"]).reshape(
+        d["shape"])
+
+
+def _enc(x):
+    """Array -> tagged dict; numpy scalar -> python scalar; rest as-is."""
+    if isinstance(x, np.ndarray) or hasattr(x, "__array__"):
+        a = np.asarray(x)
+        return a.item() if a.ndim == 0 else encode_array(a)
+    if isinstance(x, (np.generic,)):
+        return x.item()
+    return x
+
+
+def _dec(x):
+    if isinstance(x, dict) and "__ndarray__" in x:
+        return decode_array(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# configs (CCConfig / CCSpec and their frozen param dataclasses)
+# ---------------------------------------------------------------------------
+
+_PARAM_FIELDS = {"link": LinkParams, "dcqcn": DCQCNParams,
+                 "rev": RevParams, "fncc": FNCCParams,
+                 "swift": SwiftParams, "sim": SimParams}
+
+
+def config_to_dict(cfg: "CCConfig | CCSpec") -> dict:
+    out = {"__class__": type(cfg).__name__}
+    for f in dataclasses.fields(cfg):
+        v = getattr(cfg, f.name)
+        if f.name in _PARAM_FIELDS:
+            out[f.name] = dataclasses.asdict(v)
+        elif isinstance(v, CCScheme):
+            out[f.name] = v.name
+        else:
+            out[f.name] = v
+    return out
+
+
+def config_from_dict(d: dict) -> "CCConfig | CCSpec":
+    cls = {"CCConfig": CCConfig, "CCSpec": CCSpec}[d["__class__"]]
+    kw = {}
+    for f in dataclasses.fields(cls):
+        if f.name not in d:
+            continue
+        v = d[f.name]
+        if f.name in _PARAM_FIELDS:
+            v = _PARAM_FIELDS[f.name](**v)
+        elif f.name == "scheme":
+            v = CCScheme[v]
+        kw[f.name] = v
+    return cls(**kw)
+
+
+# ---------------------------------------------------------------------------
+# scenario + final state
+# ---------------------------------------------------------------------------
+
+
+def scenario_to_dict(scn: Scenario) -> dict:
+    out = {"__class__": "Scenario"}
+    for name, v in scn._asdict().items():
+        out[name] = None if v is None else _enc(v)
+    return out
+
+
+def scenario_from_dict(d: dict) -> Scenario:
+    kw = {}
+    for name in Scenario._fields:
+        v = d.get(name)
+        kw[name] = None if v is None else _dec(v)
+    kw["n_switches"] = int(kw["n_switches"])
+    # host-side scalar buffers stay scalars (shape [] arrays decode to
+    # python floats via _enc's .item() on the way out)
+    return Scenario(**kw)
+
+
+def state_to_dict(st: FluidState) -> dict:
+    # always the tagged-array form (even for the 0-d ``t`` counter), so
+    # dtypes survive the round trip exactly
+    out = {"__class__": "FluidState"}
+    for name, v in st._asdict().items():
+        if name == "cc":
+            out[name] = {k: encode_array(np.asarray(a))
+                         for k, a in v.items()}
+        else:
+            out[name] = encode_array(np.asarray(v))
+    return out
+
+
+def state_from_dict(d: dict) -> FluidState:
+    kw = {}
+    for name in FluidState._fields:
+        v = d[name]
+        if name == "cc":
+            kw[name] = {k: _dec(a) for k, a in v.items()}
+        else:
+            kw[name] = np.asarray(_dec(v))
+    return FluidState(**kw)
+
+
+# ---------------------------------------------------------------------------
+# results
+# ---------------------------------------------------------------------------
+
+_SIM_TRACE_FIELDS = ("delivered", "rate", "inst_thr", "max_q",
+                     "n_paused", "marked", "cnp", "n_nonmin")
+
+
+def simresult_to_dict(res, *, traces: bool = True,
+                      decimate: int = 1) -> dict:
+    """``SimResult`` -> JSON-ready dict (see module docstring).
+
+    ``traces=False`` omits the trace arrays (and ``times``);
+    ``decimate=k`` keeps every k-th sample.  Either makes the dict
+    lossy: ``simresult_from_dict`` only accepts the full form.
+    """
+    out = {"__class__": "SimResult",
+           "cfg": config_to_dict(res.cfg),
+           "scn": scenario_to_dict(res.scn),
+           "trace_every": int(res.trace_every),
+           "traces": bool(traces) and decimate == 1,
+           "final": state_to_dict(res.final)}
+    if traces:
+        k = max(1, int(decimate))
+        out["times"] = encode_array(np.asarray(res.times)[k - 1::k])
+        for f in _SIM_TRACE_FIELDS:
+            out[f] = encode_array(np.asarray(getattr(res, f))[k - 1::k])
+        if k > 1:
+            out["trace_every"] = int(res.trace_every) * k
+    return out
+
+
+def simresult_from_dict(d: dict):
+    from .simulator import SimResult
+    if not d.get("traces"):
+        raise ValueError(
+            "cannot reconstruct a SimResult from a trace-less (or "
+            "re-decimated) dict; serialise with traces=True, decimate=1")
+    return SimResult(
+        cfg=config_from_dict(d["cfg"]),
+        scn=scenario_from_dict(d["scn"]),
+        times=decode_array(d["times"]),
+        final=state_from_dict(d["final"]),
+        trace_every=int(d["trace_every"]),
+        **{f: decode_array(d[f]) for f in _SIM_TRACE_FIELDS})
+
+
+def sweepresult_to_dict(res, *, traces: bool = True) -> dict:
+    """``SweepResult`` -> JSON-ready dict.
+
+    Point order is the wire contract (names key the per-point views);
+    the batched trace pytree serialises field-wise with its [R, T, ...]
+    layout intact, so ``sweepresult_from_dict`` rebuilds a result whose
+    per-point ``SimResult`` views are bit-identical to the original's.
+    """
+    from .experiments import SweepPoint  # noqa: F401  (doc pointer)
+    out = {"__class__": "SweepResult",
+           "trace_every": int(res.trace_every),
+           "traces": bool(traces),
+           "times": encode_array(np.asarray(res.times)),
+           "points": [{"name": p.name, "cfg": config_to_dict(p.cfg),
+                       "scenario": scenario_to_dict(p.scenario)}
+                      for p in res.points],
+           "final": state_to_dict(res.final)}
+    if traces:
+        out["trace_fields"] = {
+            f: encode_array(np.asarray(getattr(res.traces, f)))
+            for f in _SIM_TRACE_FIELDS}
+    return out
+
+
+def sweepresult_from_dict(d: dict):
+    from .experiments import SweepPoint, SweepResult
+    from .simulator import TraceSample
+    if not d.get("traces"):
+        raise ValueError(
+            "cannot reconstruct a SweepResult from a trace-less dict; "
+            "serialise with traces=True")
+    points = [SweepPoint(name=p["name"], cfg=config_from_dict(p["cfg"]),
+                         scenario=scenario_from_dict(p["scenario"]))
+              for p in d["points"]]
+    tf = {f: decode_array(d["trace_fields"][f])
+          for f in _SIM_TRACE_FIELDS}
+    return SweepResult(points=points,
+                       times=decode_array(d["times"]),
+                       traces=TraceSample(**tf),
+                       final=state_from_dict(d["final"]),
+                       trace_every=int(d["trace_every"]))

@@ -110,6 +110,22 @@ class SimResult:
     final: Any                 # FluidState (host)
     trace_every: int = 1
 
+    # -- wire format --------------------------------------------------------
+    def to_dict(self, *, traces: bool = True, decimate: int = 1) -> dict:
+        """JSON-ready dict (numpy-free scalars, tagged arrays).
+
+        ``traces=False`` drops the trace arrays; ``decimate=k`` thins
+        them by a further factor k.  The full form round-trips through
+        ``json.dumps``/``loads`` + :meth:`from_dict` bit-exactly (see
+        ``repro.core.serialize``)."""
+        from .serialize import simresult_to_dict
+        return simresult_to_dict(self, traces=traces, decimate=decimate)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SimResult":
+        from .serialize import simresult_from_dict
+        return simresult_from_dict(d)
+
     # -- derived metrics ----------------------------------------------------
     def window_samples(self, seconds: float) -> int:
         """Trace samples spanning ``seconds`` (smoothing windows should
@@ -176,6 +192,22 @@ class SimResult:
         mean_v = np.where(np.isfinite(ct) & (span > 0),
                           self.delivered[-1] / np.maximum(span, 1e-300), 0.0)
         return np.where(windowed, mean_w, mean_v)
+
+    def summary(self) -> dict:
+        """Headline numbers for this run (one row of the Fig. 2/3
+        table; ``SweepResult.summary`` is this, per point)."""
+        thr = self.mean_throughput_while_active()
+        return {
+            "aggregate_gbps": float(thr.sum() / 1e9),
+            "min_flow_gbps": float(thr.min() / 1e9),
+            "completion_ms": float(self.completion_time() * 1e3),
+            "peak_queue_kb": float(self.max_q.max() / 1e3),
+            "delivered_mb": float(
+                np.asarray(self.final.delivered).sum() / 1e6),
+            "marks": int(self.marked.sum()),
+            "cnps": int(self.cnp.sum()),
+            "peak_nonmin_flows": int(self.n_nonmin.max()),
+        }
 
 
 def run(scn: Scenario, cfg: CCConfig, n_steps: int | None = None,

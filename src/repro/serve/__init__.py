@@ -1,5 +1,10 @@
-"""repro.serve — batched KV-cache serving."""
+"""repro.serve — serving layers.
+
+  * engine: batched KV-cache token serving (continuous batching)
+  * whatif: the CC simulator as a throttled, cache-warm query service
+"""
 
 from .engine import ServeConfig, ServingEngine, make_serve_step
+from . import whatif
 
-__all__ = ["ServeConfig", "ServingEngine", "make_serve_step"]
+__all__ = ["ServeConfig", "ServingEngine", "make_serve_step", "whatif"]

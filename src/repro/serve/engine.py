@@ -46,7 +46,13 @@ class ServingEngine:
 
     All slots share one decode position counter (padded prefixes), which
     keeps the jitted step shape-stable; per-slot alive masks handle
-    ragged completion.
+    ragged completion.  When a slot's sequence ends (EOS or budget) the
+    next queued request is *refilled* into that slot mid-flight — its
+    prompt is prefilled left-padded to the batch's current position and
+    the fresh KV rows are scattered into the live caches — so the batch
+    never stalls on its slowest member.  Rows are independent under the
+    causal position mask, so a refilled slot's output is identical to
+    serving it alone with the same left padding.
     """
 
     def __init__(self, cfg: ModelConfig, params, sv: ServeConfig):
@@ -54,10 +60,120 @@ class ServingEngine:
         self._step = jax.jit(make_serve_step(cfg))
         self._prefill = jax.jit(make_prefill(cfg, sv.max_len))
         self.rng = np.random.RandomState(0)
+        self.stats = {"prefills": 0, "refills": 0, "decode_steps": 0}
 
     def generate(self, prompts: list[list[int]],
                  max_new_tokens: int = 32) -> list[list[int]]:
-        """Serve a queue of prompts through the slot grid."""
+        """Serve a queue of prompts through the slot grid.
+
+        Continuous batching: a finished slot is refilled from the queue
+        head while the rest of the batch keeps decoding (strict FIFO; a
+        head prompt longer than the current position waits for the next
+        joint prefill).  Unlike the wave scheduler, a refilled request's
+        first (prefill-sampled) token is also EOS-checked.
+        """
+        sv = self.sv
+        queue = list(enumerate(prompts))
+        outputs: dict[int, list[int]] = {i: [] for i in range(len(prompts))}
+        B = sv.batch_slots
+        self.stats = {"prefills": 0, "refills": 0, "decode_steps": 0}
+        slot_id = np.full((B,), -1, np.int64)    # request id, -1 = free
+        remaining = np.zeros((B,), np.int64)     # decode budget per slot
+        caches = None
+        cur = np.zeros((B,), np.int32)           # token for position `pos`
+        pos = 0
+
+        while queue or (slot_id >= 0).any():
+            if not (slot_id >= 0).any():
+                # joint prefill: restart the grid with the next B requests
+                wave, queue = queue[:B], queue[B:]
+                plen = max(len(t) for _, t in wave)
+                grid = np.zeros((B, plen), np.int32)
+                for i, (_, t) in enumerate(wave):
+                    grid[i, plen - len(t):] = t           # left-pad
+                logits, caches = self._prefill(self.params,
+                                               jnp.asarray(grid))
+                last = self._sample(np.asarray(logits)[:, -1])
+                pos, cur = plen, last
+                self.stats["prefills"] += 1
+                for i, (rid, _) in enumerate(wave):
+                    slot_id[i] = rid
+                    remaining[i] = max_new_tokens - 1
+                    outputs[rid].append(int(last[i]))
+                    if last[i] == sv.eos_token or remaining[i] <= 0:
+                        slot_id[i] = -1
+                continue
+
+            # refill free slots from the queue head (prompts that fit
+            # in the current position; longer ones wait for a restart)
+            free = [i for i in range(B) if slot_id[i] < 0]
+            fill = []
+            while queue and free and len(queue[0][1]) <= pos:
+                fill.append((free.pop(0), queue.pop(0)))
+            if fill:
+                grid = np.zeros((B, pos), np.int32)
+                for slot, (_, t) in fill:
+                    grid[slot, pos - len(t):] = t
+                logits, fresh = self._prefill(self.params,
+                                              jnp.asarray(grid))
+                last = self._sample(np.asarray(logits)[:, -1])
+                caches = self._scatter_rows(
+                    caches, fresh, [s for s, _ in fill])
+                self.stats["refills"] += len(fill)
+                for slot, (rid, _) in fill:
+                    slot_id[slot] = rid
+                    remaining[slot] = max_new_tokens - 1
+                    cur[slot] = last[slot]
+                    outputs[rid].append(int(last[slot]))
+                    if last[slot] == sv.eos_token or remaining[slot] <= 0:
+                        slot_id[slot] = -1
+                if not (slot_id >= 0).any():
+                    continue
+
+            if pos >= sv.max_len - 1:            # out of cache room:
+                slot_id[:] = -1                  # retire the whole grid
+                continue
+            logits, caches = self._step(
+                self.params, jnp.asarray(cur[:, None], jnp.int32),
+                caches, jnp.asarray(pos, jnp.int32))
+            nxt = self._sample(np.asarray(logits)[:, 0])
+            pos += 1
+            self.stats["decode_steps"] += 1
+            for i in range(B):
+                if slot_id[i] >= 0:
+                    outputs[slot_id[i]].append(int(nxt[i]))
+                    remaining[i] -= 1
+                    if nxt[i] == sv.eos_token or remaining[i] <= 0:
+                        slot_id[i] = -1
+            cur = nxt
+        return [outputs[i] for i in range(len(prompts))]
+
+    def _scatter_rows(self, live, fresh, slots: list[int]):
+        """Copy ``slots``' rows of every per-sequence cache leaf from
+        ``fresh`` into ``live``.
+
+        The batch axis is found per leaf via ``cache_specs`` — grouped
+        layers are stacked behind a leading ``layers`` axis, so it is
+        NOT always axis 0.  Leaves without a ``cache_batch`` dim (the
+        shared position counter) stay live.
+        """
+        specs = transformer.cache_specs(self.cfg, self.sv.batch_slots,
+                                        self.sv.max_len)
+        rows = jnp.asarray(slots, jnp.int32)
+
+        def scatter(leaf_live, leaf_new, spec):
+            if "cache_batch" not in spec:
+                return leaf_live
+            idx = (slice(None),) * spec.index("cache_batch") + (rows,)
+            return leaf_live.at[idx].set(leaf_new[idx])
+
+        return jax.tree.map(scatter, live, fresh, specs)
+
+    def _generate_waves(self, prompts: list[list[int]],
+                        max_new_tokens: int = 32) -> list[list[int]]:
+        """Wave scheduler (the pre-refill baseline, kept as the
+        regression oracle): each wave of B prompts runs to completion
+        before the next starts; a finished slot idles till wave end."""
         sv = self.sv
         queue = list(enumerate(prompts))
         outputs: dict[int, list[int]] = {i: [] for i in range(len(prompts))}

@@ -1,0 +1,25 @@
+"""repro.serve.whatif — the simulator as a throttled, cache-warm
+what-if query service (DESIGN.md §8).
+
+  * engine:    CCQueryEngine / WhatIfQuery / QueryResult — micro-
+               batched queries over the one-jit Sweep, keyed to the
+               shared compiled-executable cache
+  * admission: token-bucket + bounded-queue front door with explicit
+               Admitted / Throttled / QueueFull outcomes
+  * metrics:   latency percentiles, batch occupancy, cache hit rate,
+               compile/run split (-> BENCH_serve.json)
+"""
+
+from .admission import (AdmissionConfig, AdmissionController, Admitted,
+                        QueueFull, Throttled, TokenBucket)
+from .engine import (CCQueryEngine, EngineConfig, QueryResult,
+                     StructuralSignature, WhatIfQuery, flow_bucket)
+from .metrics import EngineMetrics, LatencyRecorder
+
+__all__ = [
+    "AdmissionConfig", "AdmissionController", "Admitted", "QueueFull",
+    "Throttled", "TokenBucket",
+    "CCQueryEngine", "EngineConfig", "QueryResult",
+    "StructuralSignature", "WhatIfQuery", "flow_bucket",
+    "EngineMetrics", "LatencyRecorder",
+]

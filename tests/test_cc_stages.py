@@ -241,7 +241,7 @@ def test_mixed_stage_matrix_one_jit_no_recompile():
     slope, fncc and swift — in a single Sweep launch with exactly one
     executable build, and the stage axes must be live (outputs differ
     across combinations)."""
-    from repro.core.experiments import _sweep_exec
+    from repro.core.experiments import SWEEP_EXEC_CACHE
     ramp = DCQCNParams(kmin=15 * 1024.0, kmax=90 * 1024.0, pmax=0.3)
     combos = [(m, n, r)
               for m in ("cp", "ecp", "slope")
@@ -251,9 +251,9 @@ def test_mixed_stage_matrix_one_jit_no_recompile():
                                       reaction=r, dcqcn=ramp)
                for m, n, r in combos}
     sweep = Sweep.grid(configs=configs, scenarios={"hol": SCENE})
-    _sweep_exec.cache_clear()
+    before = SWEEP_EXEC_CACHE.stats()
     res = sweep.run(n_steps=1200)
-    assert _sweep_exec.cache_info().misses == 1, \
+    assert (SWEEP_EXEC_CACHE.stats() - before).misses <= 1, \
         "mixed stage matrix must share one compiled executable"
     assert len(res) == 18
     delivered = {name: round(float(np.asarray(r.final.delivered).sum()))

@@ -1,0 +1,132 @@
+"""SimResult / SweepResult wire format: JSON round-trips must be
+bit-exact (numpy-free scalars, tagged arrays, dtype-preserving),
+decimation/trace-dropping explicit and loud."""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (CCSpec, PAPER_CONFIG, ScenarioSpec, SimResult,
+                        Sweep, run)
+from repro.core.serialize import (config_from_dict, config_to_dict,
+                                  decode_array, encode_array,
+                                  scenario_from_dict, scenario_to_dict)
+from repro.core.experiments import SweepResult
+
+N_STEPS = 300
+
+
+@pytest.fixture(scope="module")
+def sim_result():
+    spec = ScenarioSpec.incast(3)
+    cfg = PAPER_CONFIG
+    return run(spec.build(cfg), cfg, n_steps=N_STEPS)
+
+
+@pytest.fixture(scope="module")
+def sweep_result():
+    return Sweep([("a", CCSpec(), ScenarioSpec.incast(3)),
+                  ("b", CCSpec(reaction="rp"),
+                   ScenarioSpec.incast(4))]).run(n_steps=N_STEPS)
+
+
+def _assert_simresults_equal(a, b):
+    for f in ("times", "delivered", "rate", "inst_thr", "max_q",
+              "n_paused", "marked", "cnp", "n_nonmin"):
+        x, y = getattr(a, f), getattr(b, f)
+        assert x.dtype == y.dtype, f
+        np.testing.assert_array_equal(x, y, err_msg=f)
+    assert a.trace_every == b.trace_every
+    fa = {k: np.asarray(v) for k, v in zip(a.final._fields, a.final)
+          if not isinstance(v, dict)}
+    fb = {k: np.asarray(v) for k, v in zip(b.final._fields, b.final)
+          if not isinstance(v, dict)}
+    for k in fa:
+        assert fa[k].dtype == fb[k].dtype, k
+        np.testing.assert_array_equal(fa[k], fb[k], err_msg=k)
+    for k in a.final.cc:
+        np.testing.assert_array_equal(np.asarray(a.final.cc[k]),
+                                      np.asarray(b.final.cc[k]),
+                                      err_msg=f"cc.{k}")
+
+
+def test_array_codec_preserves_dtype():
+    for a in (np.arange(6, dtype=np.int32).reshape(2, 3),
+              np.float32([[1.5, -0.0]]), np.int32(7).reshape(()),
+              np.float64([np.inf])):
+        d = json.loads(json.dumps(encode_array(a)))
+        b = decode_array(d)
+        assert b.dtype == a.dtype and b.shape == a.shape
+        np.testing.assert_array_equal(a, b)
+
+
+def test_simresult_json_roundtrip_bitexact(sim_result):
+    wire = json.loads(json.dumps(sim_result.to_dict()))
+    back = SimResult.from_dict(wire)
+    _assert_simresults_equal(sim_result, back)
+    # the final state's step counter keeps its int32 dtype
+    assert np.asarray(back.final.t).dtype == np.int32
+    # config and scenario survive too: a re-run reproduces the result
+    np.testing.assert_array_equal(back.scn.routes, sim_result.scn.routes)
+    rerun = run(back.scn, back.cfg, n_steps=N_STEPS)
+    np.testing.assert_array_equal(rerun.delivered, sim_result.delivered)
+
+
+def test_simresult_traceless_and_decimated(sim_result):
+    lean = sim_result.to_dict(traces=False)
+    assert "delivered" not in lean and "times" not in lean
+    with pytest.raises(ValueError, match="trace"):
+        SimResult.from_dict(json.loads(json.dumps(lean)))
+    # decimation thins every trace array consistently (window-end
+    # samples: every k-th, starting at the k-th) and is marked lossy
+    dec = json.loads(json.dumps(sim_result.to_dict(decimate=4)))
+    np.testing.assert_array_equal(decode_array(dec["times"]),
+                                  sim_result.times[3::4])
+    np.testing.assert_array_equal(decode_array(dec["delivered"]),
+                                  sim_result.delivered[3::4])
+    assert dec["trace_every"] == sim_result.trace_every * 4
+    with pytest.raises(ValueError, match="trace"):
+        SimResult.from_dict(dec)
+
+
+def test_sweepresult_json_roundtrip_bitexact(sweep_result):
+    wire = json.loads(json.dumps(sweep_result.to_dict()))
+    back = SweepResult.from_dict(wire)
+    assert [p.name for p in back.points] == \
+        [p.name for p in sweep_result.points]
+    for name, res in sweep_result.items():
+        _assert_simresults_equal(res, back[name])
+    for name, row in sweep_result.summary().items():
+        got = back.summary()[name]
+        for k, v in row.items():
+            np.testing.assert_equal(got[k], v,            # nan == nan
+                                    err_msg=f"{name}.{k}")
+
+
+def test_config_roundtrip_spec_and_legacy():
+    spec = CCSpec(reaction="swift").replace(
+        rev=dataclasses.replace(CCSpec().rev, erp_settle=0.93))
+    back = config_from_dict(json.loads(json.dumps(config_to_dict(spec))))
+    assert back == spec
+    legacy = PAPER_CONFIG
+    back2 = config_from_dict(
+        json.loads(json.dumps(config_to_dict(legacy))))
+    assert back2 == legacy
+
+
+def test_scenario_roundtrip_multipath():
+    scn = ScenarioSpec.incast(3, n_paths=2).build(CCSpec())
+    back = scenario_from_dict(
+        json.loads(json.dumps(scenario_to_dict(scn))))
+    for f, v in zip(scn._fields, scn):
+        w = getattr(back, f)
+        if v is None:
+            assert w is None, f
+        elif isinstance(v, (int, float)):
+            assert w == v, f
+        else:
+            assert np.asarray(w).dtype == np.asarray(v).dtype, f
+            np.testing.assert_array_equal(np.asarray(w),
+                                          np.asarray(v), err_msg=f)

@@ -110,6 +110,51 @@ def test_serving_engine_continuous_batching():
     assert outs2[0] == outs[0]
 
 
+def test_serving_engine_matches_wave_oracle():
+    """With EOS disabled the refill scheduler degenerates to waves:
+    outputs must equal the pre-refill wave implementation exactly."""
+    params = init_params(T.param_defs(CFG), 0, jnp.float32)
+    eng = ServingEngine(CFG, params, ServeConfig(batch_slots=3,
+                                                 max_len=64,
+                                                 eos_token=-1))
+    rng = np.random.RandomState(0)
+    prompts = [[int(x) for x in rng.randint(2, 255, 2 + i % 4)]
+               for i in range(7)]
+    got = eng.generate(prompts, max_new_tokens=6)
+    assert eng.stats["refills"] == 0          # EOS never fires
+    want = eng._generate_waves(prompts, max_new_tokens=6)
+    assert got == want
+
+
+def test_serving_engine_refills_on_eos():
+    """A finished slot is refilled mid-flight, and the refilled
+    request's output equals serving it alone with the same left
+    padding (rows are independent under the causal position mask)."""
+    params = init_params(T.param_defs(CFG), 0, jnp.float32)
+    probe = ServingEngine(CFG, params, ServeConfig(batch_slots=2,
+                                                   max_len=64,
+                                                   eos_token=-1))
+    p0, p1, p2 = [3, 4, 5], [7, 8, 9], [11, 12, 13]
+    free = probe.generate([p0, p1], max_new_tokens=8)
+    eos = free[0][2]                    # row 0's 3rd token becomes EOS
+    # precondition: slot 0 must free first, else p2 rides slot 1
+    assert eos not in free[1][:free[0].index(eos) + 1]
+
+    eng = ServingEngine(CFG, params, ServeConfig(batch_slots=2,
+                                                 max_len=64,
+                                                 eos_token=eos))
+    outs = eng.generate([p0, p1, p2], max_new_tokens=8)
+    assert eng.stats["refills"] >= 1
+    assert eng.stats["prefills"] == 1   # p2 rode slot 0, no new wave
+    assert outs[0][-1] == eos           # request 0 stopped at EOS
+    # p2 entered at the position where slot 0 freed; standalone serve
+    # of the same left-padded prompt must reproduce its output
+    pos = len(p0) + outs[0].index(eos)
+    padded = [0] * (pos - len(p2)) + p2
+    solo = eng.generate([padded], max_new_tokens=8)
+    assert outs[2] == solo[0][:len(outs[2])]
+
+
 def test_optimization_flags_preserve_semantics():
     cfg = dataclasses.replace(CFG, block_pattern=("local", "attn"),
                               window=16, softcap_attn=50.0)

@@ -1,0 +1,294 @@
+"""What-if query engine gates: compile-once per structural signature,
+bitwise parity with standalone Sweep.run, explicit throttling outcomes,
+executable-cache semantics, serving metrics."""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (CCSpec, ExecutableCache, SWEEP_EXEC_CACHE,
+                        ScenarioSpec, Sweep)
+from repro.serve.whatif import (AdmissionConfig, AdmissionController,
+                                Admitted, CCQueryEngine, EngineConfig,
+                                LatencyRecorder, QueueFull, Throttled,
+                                TokenBucket, WhatIfQuery, flow_bucket)
+
+N_STEPS = 240
+
+# one flow bucket (8): three workloads x three CC stacks x a param
+# variant — the fixed-pod replay mix of the acceptance criteria
+SPECS = {"in4": ScenarioSpec.incast(4), "in6": ScenarioSpec.incast(6),
+         "in7": ScenarioSpec.incast(7)}
+CFGS = {"rev": CCSpec(),
+        "dcqcn": CCSpec(marking="cp", notification="np", reaction="rp"),
+        "swift": CCSpec(reaction="swift"),
+        "rev-tuned": CCSpec().replace(
+            rev=dataclasses.replace(CCSpec().rev, erp_settle=0.9))}
+
+
+def _open_engine(**admission):
+    adm = AdmissionConfig(**{"rate": 1e9, "burst": 10_000,
+                             "max_queue": 256, **admission})
+    return CCQueryEngine(EngineConfig(max_batch=8, admission=adm))
+
+
+# ---------------------------------------------------------------------------
+# the 100-query replay (acceptance gate)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def replay():
+    """100 mixed queries over a fixed pod, drained in micro-batches."""
+    SWEEP_EXEC_CACHE.clear()
+    SWEEP_EXEC_CACHE.reset_stats()
+    eng = _open_engine()
+    mix = [(cn, sn) for cn in CFGS for sn in SPECS]     # 12 combos
+    tickets = {}
+    for i in range(100):
+        cn, sn = mix[i % len(mix)]
+        out = eng.submit(WhatIfQuery(cfg=CFGS[cn], scenario=SPECS[sn],
+                                     n_steps=N_STEPS, label=f"{cn}/{sn}"))
+        assert isinstance(out, Admitted), out
+        tickets[out.ticket] = (cn, sn)
+        if (i + 1) % 25 == 0:                # drain in four waves, like
+            eng.drain()                      # a service would
+    eng.drain()
+    return eng, tickets
+
+
+def test_replay_compiles_exactly_once(replay):
+    """All 100 queries share one structural signature (three workloads
+    in one flow bucket, params traced) => exactly one executable
+    build, everything else cache hits."""
+    eng, tickets = replay
+    m = eng.metrics()
+    assert m["queries"] == 100
+    assert m["exec_cache"]["misses"] == 1, m["exec_cache"]
+    assert m["exec_cache"]["hits"] == m["batches"] - 1
+    assert m["signatures"] == 1
+    assert m["compile_s"] > 0
+
+
+def test_replay_bitwise_matches_standalone_sweep(replay):
+    """Every micro-batched answer equals a standalone single-point
+    Sweep.run() bit for bit — padding to the batch width and the flow
+    bucket is inert."""
+    eng, tickets = replay
+    solo = {}
+    for ticket, (cn, sn) in tickets.items():
+        if (cn, sn) not in solo:
+            solo[(cn, sn)] = Sweep(
+                [("p", CFGS[cn], SPECS[sn])]).run(n_steps=N_STEPS)["p"]
+        want, got = solo[(cn, sn)], eng.result(ticket).result
+        for f in ("delivered", "rate", "inst_thr", "max_q", "n_paused",
+                  "marked", "cnp", "n_nonmin", "times"):
+            np.testing.assert_array_equal(
+                getattr(got, f), getattr(want, f), err_msg=f"{cn}/{sn}:{f}")
+        np.testing.assert_array_equal(np.asarray(got.final.qh),
+                                      np.asarray(want.final.qh))
+        np.testing.assert_array_equal(np.asarray(got.final.delivered),
+                                      np.asarray(want.final.delivered))
+
+
+def test_identical_queries_identical_results(replay):
+    """Replayed duplicates of one (cfg, scenario) point return
+    identical arrays (warm path is deterministic)."""
+    eng, tickets = replay
+    per_combo = {}
+    for ticket, key in tickets.items():
+        per_combo.setdefault(key, []).append(ticket)
+    dup = next(ts for ts in per_combo.values() if len(ts) > 1)
+    a, b = (eng.result(t).result for t in dup[:2])
+    np.testing.assert_array_equal(a.delivered, b.delivered)
+    np.testing.assert_array_equal(a.max_q, b.max_q)
+
+
+def test_replay_metrics_shape(replay):
+    eng, _ = replay
+    m = eng.metrics()
+    assert {"queries", "batches", "mean_occupancy", "run_s",
+            "latency_s", "queue_wait_s", "exec_cache", "compile_s",
+            "admission", "queue_depth", "signatures",
+            "batch_width"} <= set(m)
+    assert m["latency_s"]["count"] == 100
+    assert m["latency_s"]["p99"] >= m["latency_s"]["p50"] > 0
+    assert 0 < m["mean_occupancy"] <= 1
+    assert m["queue_depth"] == 0
+    assert m["admission"]["admitted"] == 100
+    json.dumps(m)                            # wire-ready
+
+
+def test_query_result_to_dict_json_ready(replay):
+    eng, tickets = replay
+    qr = eng.result(next(iter(tickets)))
+    d = qr.to_dict()
+    json.dumps(d)
+    assert d["batch_width"] == 8 and d["summary"]["delivered_mb"] >= 0
+    full = qr.to_dict(traces=True)
+    json.dumps(full)
+    assert "result" in full
+
+
+# ---------------------------------------------------------------------------
+# structural signatures
+# ---------------------------------------------------------------------------
+
+
+def test_flow_bucket():
+    assert [flow_bucket(n) for n in (1, 4, 5, 8, 9, 16)] == \
+        [4, 4, 8, 8, 16, 16]
+    assert flow_bucket(3, minimum=2) == 4
+
+
+def test_signature_sharing_and_separation():
+    eng = _open_engine()
+
+    def sig(**kw):
+        q = dict(cfg=CCSpec(), scenario=SPECS["in4"], n_steps=N_STEPS)
+        q.update(kw)
+        return eng._prepare(WhatIfQuery(**q)).sig
+
+    base = sig()
+    assert sig(cfg=CFGS["swift"]) == base             # CC stack: traced
+    assert sig(scenario=SPECS["in7"]) == base         # same flow bucket
+    assert sig(scenario=ScenarioSpec.permutation(16)) != base   # bucket
+    assert sig(trace_every=2) != base                 # trace cadence
+    k2 = sig(scenario=dataclasses.replace(SPECS["in4"], n_paths=2))
+    assert k2 != base and k2.paths == 2               # K candidate paths
+    wide = sig(scenario=dataclasses.replace(SPECS["in4"], arity=6))
+    assert wide != base                               # fabric structure
+    assert wide.links != base.links
+
+
+def test_rejected_scenario_type():
+    eng = _open_engine()
+    spec = SPECS["in4"]
+    with pytest.raises(TypeError, match="ScenarioSpec"):
+        WhatIfQuery(cfg=CCSpec(), scenario=spec.build(CCSpec()))
+
+
+# ---------------------------------------------------------------------------
+# admission: token bucket + bounded queue
+# ---------------------------------------------------------------------------
+
+
+def test_token_bucket_burst_then_refill():
+    b = TokenBucket(rate=2.0, burst=3, now=0.0)
+    assert [b.take(0.0) for _ in range(4)] == [True, True, True, False]
+    assert b.retry_after(0.0) == pytest.approx(0.5)
+    assert b.take(0.25) is False            # half a token refilled
+    assert b.take(0.5) is True              # one full token at +0.5s
+    assert b.retry_after(10.0) == 0.0       # capped at burst, available
+
+
+def test_token_bucket_rate_zero_never_refills():
+    b = TokenBucket(rate=0.0, burst=1, now=0.0)
+    assert b.take(0.0) is True
+    assert b.take(1e9) is False
+    assert b.retry_after(1e9) == float("inf")
+
+
+def test_admission_queue_full_preserves_token():
+    t = [0.0]
+    ctl = AdmissionController(AdmissionConfig(rate=0.0, burst=1,
+                                              max_queue=1), clock=lambda: t[0])
+    out = ctl.admit("a", queue_depth=1)     # queue at capacity
+    assert isinstance(out, QueueFull) and out.queue_depth == 1
+    assert ctl.admit("a", queue_depth=0) is None    # token still there
+    assert isinstance(ctl.admit("a", queue_depth=0), Throttled)
+    assert ctl.counters() == {"admitted": 1, "throttled": 1,
+                              "queue_full": 1, "tenants": 1}
+
+
+def test_admission_per_tenant_isolation():
+    t = [0.0]
+    ctl = AdmissionController(AdmissionConfig(rate=0.0, burst=2,
+                                              max_queue=99), clock=lambda: t[0])
+    assert ctl.admit("noisy", 0) is None and ctl.admit("noisy", 0) is None
+    assert isinstance(ctl.admit("noisy", 0), Throttled)
+    assert ctl.admit("quiet", 0) is None    # unaffected bucket
+
+
+def test_engine_throttles_over_rate_burst():
+    """The acceptance gate: an over-rate burst gets explicit Throttled
+    with a usable retry_after; queries admit again after refill."""
+    t = [0.0]
+    eng = CCQueryEngine(
+        EngineConfig(admission=AdmissionConfig(rate=10.0, burst=4,
+                                               max_queue=64)),
+        clock=lambda: t[0])
+    outs = [eng.submit(WhatIfQuery(cfg=CCSpec(), scenario=SPECS["in4"],
+                                   n_steps=N_STEPS)) for _ in range(6)]
+    assert [type(o) for o in outs] == [Admitted] * 4 + [Throttled] * 2
+    assert outs[4].retry_after == pytest.approx(0.1)
+    t[0] += outs[4].retry_after             # wait exactly as told
+    assert isinstance(eng.submit(WhatIfQuery(
+        cfg=CCSpec(), scenario=SPECS["in4"], n_steps=N_STEPS)), Admitted)
+    assert eng.metrics()["admission"]["throttled"] == 2
+    assert eng.metrics()["queue_depth"] == 5
+
+
+def test_engine_queue_never_unbounded():
+    t = [0.0]
+    eng = CCQueryEngine(
+        EngineConfig(admission=AdmissionConfig(rate=1e9, burst=10_000,
+                                               max_queue=8)),
+        clock=lambda: t[0])
+    outs = [eng.submit(WhatIfQuery(cfg=CCSpec(), scenario=SPECS["in4"],
+                                   n_steps=N_STEPS)) for _ in range(20)]
+    assert sum(isinstance(o, Admitted) for o in outs) == 8
+    assert all(isinstance(o, QueueFull) for o in outs[8:])
+    assert eng.metrics()["queue_depth"] == 8
+
+
+# ---------------------------------------------------------------------------
+# executable cache
+# ---------------------------------------------------------------------------
+
+
+def test_executable_cache_counts_and_lru():
+    c = ExecutableCache(capacity=2, name="t")
+    built = []
+
+    def mk(v):
+        return lambda: built.append(v) or v
+
+    assert c.get_or_build("a", mk(1)) == 1
+    assert c.get_or_build("a", mk(99)) == 1         # hit, no rebuild
+    assert c.get_or_build("b", mk(2)) == 2
+    assert c.get_or_build("c", mk(3)) == 3          # evicts LRU "a"
+    assert "a" not in c and "b" in c
+    assert c.get_or_build("a", mk(4)) == 4          # rebuilt
+    s = c.stats()
+    assert (s.hits, s.misses, s.evictions) == (1, 4, 2)
+    assert built == [1, 2, 3, 4]
+
+
+def test_executable_cache_resize_and_stats_delta():
+    c = ExecutableCache(capacity=4)
+    for k in "abcd":
+        c.get_or_build(k, lambda: k)
+    before = c.stats()
+    c.resize(2)                                     # drops LRU half
+    assert len(c) == 2 and "d" in c and "c" in c
+    c.get_or_build("d", lambda: "x")
+    delta = c.stats() - before
+    assert (delta.hits, delta.misses) == (1, 0)
+    assert delta.evictions == 2
+    with pytest.raises(ValueError):
+        ExecutableCache(capacity=0)
+
+
+def test_latency_recorder_percentiles():
+    r = LatencyRecorder()
+    assert np.isnan(r.percentile(50))
+    for v in [0.1, 0.2, 0.3, 0.4, 1.0]:
+        r.record(v)
+    assert r.percentile(0) == 0.1
+    assert r.percentile(50) == 0.3
+    assert r.percentile(100) == 1.0
+    s = r.summary()
+    assert s["count"] == 5 and s["p99"] == 1.0
