@@ -24,6 +24,12 @@ capped at 2.0x for cross-runner noise — the CI perf-smoke gate).
 committed baseline, a compiled-executable hit-rate collapse, or a
 token bucket that fails to throttle an over-rate burst (the CI
 serve-smoke gate).
+``--tune`` runs the autotuning harness (GradTuner + ESTuner + a
+Pareto scalarisation sweep on paper-default DCQCN, one CLOS incast)
+and appends a record to ``BENCH_tune.json``; with ``--check`` it exits
+non-zero when the tuned config no longer beats the paper defaults on
+the hard model, the improvement margin regresses past the committed
+baseline's, or the Pareto front is empty (the CI tune-smoke gate).
 ``--cc-matrix`` enumerates the ``repro.core.cc`` stage registries
 (every marking x notification x reaction combination) as ONE Sweep
 launch, appends the rows to ``BENCH_fluid.json`` under ``cc_matrix``
@@ -134,12 +140,17 @@ def main() -> None:
                     help="what-if query engine replay -> BENCH_serve.json "
                          "(--check gates on p99 regression, hit-rate "
                          "collapse and throttling)")
+    ap.add_argument("--tune", action="store_true",
+                    help="CC autotuning harness -> BENCH_tune.json "
+                         "(--check gates on the tuned-beats-default "
+                         "margin and a non-empty Pareto front)")
     ap.add_argument("--cc-matrix", action="store_true", dest="cc_matrix",
                     help="stage-registry combination sweep (marking x "
                          "notification x reaction, one jit) -> "
                          "BENCH_fluid.json")
     ap.add_argument("--quick", action="store_true",
-                    help="with --scale/--perf/--cc-matrix: CI-sized grid")
+                    help="with --scale/--perf/--cc-matrix/--serve/"
+                         "--tune: CI-sized run")
     args = ap.parse_args()
     if args.smoke:
         raise SystemExit(smoke())
@@ -147,11 +158,21 @@ def main() -> None:
     if __package__:
         from . import (ablation, cc_matrix, cc_scale, cosim,
                        fig2_throughput, fig3_perflow, net_scale,
-                       perf_fluid, roofline, serve_bench)
+                       perf_fluid, roofline, serve_bench, tune_bench)
     else:                    # `python benchmarks/run.py` (no package ctx)
         import ablation, cc_matrix, cc_scale, cosim        # noqa: E401
         import fig2_throughput, fig3_perflow, net_scale    # noqa: E401
         import perf_fluid, roofline, serve_bench           # noqa: E401
+        import tune_bench                                  # noqa: E401
+
+    if args.tune:
+        rows = _section("tune",
+                        lambda: tune_bench.main(quick=args.quick,
+                                                check=args.check))
+        _print_rows(rows)
+        if any(".ERROR" in r[0] or "REGRESSION" in r[0] for r in rows):
+            raise SystemExit(1)
+        return
 
     if args.serve:
         rows = _section("serve",

@@ -42,8 +42,14 @@ Adding a variant (three lines + the step function)::
     from repro.core import cc
 
     def _mark_mine(p, ctx, state):
-        base = (ctx.B1_w > p["mine_thresh"]) & ctx.present & ctx.holds_queue
+        base = ((ctx.B1_w > p["mine_thresh"]) & ctx.present
+                & ctx.holds_queue).astype(jnp.float32)
         return (base, ctx.grant_next), {}
+
+(mark intensities are floats — exact 0/1 for a hard stage; a stage may
+also smooth its gates behind ``ctx.tau``, see ``repro.tune.soft`` and
+the built-ins below, so ``jax.grad`` flows through the dt-scan at
+``temperature > 0``)
 
     cc.MARKING.register("mine",
         params={"mine_thresh": lambda s: s.dcqcn.kmin}, step=_mark_mine)
@@ -90,6 +96,8 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.tune import soft
 
 
 # ---------------------------------------------------------------------------
@@ -279,21 +287,23 @@ class MarkCtx(NamedTuple):
     holds_queue: jnp.ndarray  # [F, H] bool
     dem_next: jnp.ndarray     # [F, H] f32
     grant_next: jnp.ndarray   # [F, H] f32
-    over_next: jnp.ndarray    # [F, H] bool
+    over_next: jnp.ndarray    # [F, H] f32 (exact 0/1 hard, graded soft)
     port_buffer: jnp.ndarray  # [] f32
     line_rate: jnp.ndarray    # [] f32
+    tau: jnp.ndarray          # [] f32 soft-relaxation temperature
 
 
 class NotifCtx(NamedTuple):
     """Phase-5 context: who marked, and the delay-line geometry."""
 
-    marked: jnp.ndarray       # [F] bool — any hop marked this flow
-    mark_fh: jnp.ndarray      # [F, H] bool — which hop(s)
+    marked: jnp.ndarray       # [F] f32 mark level (exact 0/1 hard)
+    mark_fh: jnp.ndarray      # [F, H] f32 — which hop(s), graded soft
     np_tmr_t: jnp.ndarray     # [F] f32 — suppression timer (post-tick)
     hops: jnp.ndarray         # [F] int32 — current path's hop count
     rtt: jnp.ndarray          # [F] int32 — end-to-end delay in dt steps
     t: jnp.ndarray            # [] int32 — step counter
     D: int                    # static delay-line depth
+    tau: jnp.ndarray          # [] f32 soft-relaxation temperature
 
 
 class ReactCtx(NamedTuple):
@@ -308,13 +318,14 @@ class ReactCtx(NamedTuple):
     bc_stage: jnp.ndarray     # [F] int32
     t_stage: jnp.ndarray      # [F] int32
     hold: jnp.ndarray         # [F]
-    cnp: jnp.ndarray          # [F] bool — notification arrived
+    cnp: jnp.ndarray          # [F] f32 — notification level (0/1 hard)
     tgt_rx: jnp.ndarray       # [F] f32 — received severity payload
     qdelay: jnp.ndarray       # [F] f32 — queuing-delay estimate (s)
     jitter: jnp.ndarray       # [F] f32 — deterministic per-flow jitter
     gen_rate: jnp.ndarray     # [F] f32 — offered rate (pfc source)
     line_rate: jnp.ndarray    # [] f32
     dt: jnp.ndarray           # [] f32
+    tau: jnp.ndarray          # [] f32 soft-relaxation temperature
 
 
 class ReactOut(NamedTuple):
@@ -345,25 +356,59 @@ def _passthrough(ctx: ReactCtx) -> ReactOut:
 
 
 def _mark_common(thresh, ctx: MarkCtx):
-    """(base mark set, queue excess over thresh) shared by variants."""
-    q_over = ctx.B1_w > thresh
-    base = q_over & ctx.present & ctx.holds_queue
+    """(base mark intensity, queue excess over thresh) shared by variants.
+
+    The intensity is an exact 0/1 float in hard mode (``tau == 0``
+    selects the original boolean, cast); under the soft model the
+    threshold crossing becomes a sigmoid in the occupancy — this is the
+    site that gives kmin/detect-threshold a gradient.  The presence
+    gates stay hard multipliers (state-dependent, not tuned; keeping
+    them exact prevents ghost marks at empty queues).
+    """
+    gate_h = ((ctx.B1_w > thresh) & ctx.present
+              & ctx.holds_queue).astype(jnp.float32)
+    gate_s = (soft.unit_gate(ctx.B1_w - thresh, ctx.tau, ctx.port_buffer)
+              * ctx.present * ctx.holds_queue)
+    base = soft.select(ctx.tau, gate_s, gate_h)
     qexc = jnp.clip((ctx.B1_w - thresh) / ctx.port_buffer, 0.0, 1.0)
     return base, qexc
 
 
+def _severity(ctx: MarkCtx, drain_gain, qexc):
+    """``grant_next * (1 - drain_gain * qexc)``, inf-sentinel safe.
+
+    Hops without a finite fair grant keep the exact ``inf`` payload the
+    hard min-severity aggregation expects, but never on a product: a
+    literal ``inf * (1 - g*qexc)`` would hand ``jax.grad`` an infinite
+    partial, and even a zero cotangent times inf is nan.  Finite
+    entries are bitwise the plain product.
+    """
+    finite = jnp.isfinite(ctx.grant_next)
+    g_fin = jnp.where(finite, ctx.grant_next, 0.0)
+    return jnp.where(finite, g_fin * (1.0 - drain_gain * qexc), jnp.inf)
+
+
 def _mark_cp(p, ctx: MarkCtx, state):
     base, qexc = _mark_common(p["cp_kmin"], ctx)
-    sev = ctx.grant_next * (1.0 - p["drain_gain"] * qexc)
+    sev = _severity(ctx, p["drain_gain"], qexc)
     return (base, sev), {}
 
 
 def _mark_ecp(p, ctx: MarkCtx, state):
     base, qexc = _mark_common(p["ecp_thresh"], ctx)
-    congesting = ctx.over_next & \
-        (ctx.dem_next > p["ecp_slack"] * ctx.grant_next)
-    sev = ctx.grant_next * (1.0 - p["drain_gain"] * qexc)
-    return (base & congesting, sev), {}
+    # hard: oversubscribed output AND demand above the slack-scaled
+    # fair grant; soft: product of the graded oversubscription level
+    # and a sigmoid in the demand excess (grant_next's inf sentinels
+    # drive the sigmoid argument to -inf -> exactly 0, never nan).
+    cong_h = ((ctx.over_next > 0)
+              & (ctx.dem_next > p["ecp_slack"] * ctx.grant_next)
+              ).astype(jnp.float32)
+    cong_s = ctx.over_next * soft.unit_gate(
+        ctx.dem_next - p["ecp_slack"] * ctx.grant_next, ctx.tau,
+        ctx.line_rate)
+    congesting = soft.select(ctx.tau, cong_s, cong_h)
+    sev = _severity(ctx, p["drain_gain"], qexc)
+    return (base * congesting, sev), {}
 
 
 def _mark_slope(p, ctx: MarkCtx, state):
@@ -373,20 +418,27 @@ def _mark_slope(p, ctx: MarkCtx, state):
     kmax, 1 above) accumulates per flow; a mark fires when the
     accumulator crosses 1 and spends it — a deterministic thinning with
     exactly the right long-run marking rate, which keeps the fluid
-    model reproducible (no RNG in the hot loop).
+    model reproducible (no RNG in the hot loop).  The soft model fires
+    fractionally (sigmoid in the accumulator excess) and spends what it
+    fired, so the long-run rate is preserved while kmin/kmax/pmax all
+    get gradients through the ramp.
     """
     kmin, kmax = p["slope_kmin"], p["slope_kmax"]
     base, qexc = _mark_common(kmin, ctx)
     ramp = jnp.clip((ctx.B1_w - kmin) / jnp.maximum(kmax - kmin, 1.0),
                     0.0, 1.0)
     prob_fh = jnp.where(ctx.B1_w >= kmax, 1.0, p["slope_pmax"] * ramp)
-    prob_fh = jnp.where(base, prob_fh, 0.0)
+    prob_fh = prob_fh * base
     prob = jnp.max(prob_fh, axis=1)                    # [F]
     acc = state["slope_acc"] + prob
-    fire = acc >= 1.0
-    acc = jnp.where(fire, acc - 1.0, acc)
-    sev = ctx.grant_next * (1.0 - p["drain_gain"] * qexc)
-    return (base & fire[:, None], sev), {"slope_acc": acc}
+    fire_h = acc >= 1.0
+    fire = soft.select(ctx.tau,
+                       soft.unit_gate(acc - 1.0, ctx.tau, 1.0),
+                       fire_h.astype(jnp.float32))
+    acc = soft.select(ctx.tau, acc - fire,
+                      jnp.where(fire_h, acc - 1.0, acc))
+    sev = _severity(ctx, p["drain_gain"], qexc)
+    return (base * fire[:, None], sev), {"slope_acc": acc}
 
 
 # ---------------------------------------------------------------------------
@@ -395,8 +447,20 @@ def _mark_slope(p, ctx: MarkCtx, state):
 
 
 def _notify_window(window, ctx: NotifCtx):
-    emit = ctx.marked & (ctx.np_tmr_t >= window)
-    np_tmr = jnp.where(emit, 0.0, ctx.np_tmr_t)
+    """Suppression window shared by NP/ENP/FNCC.
+
+    Returns the [F] emission intensity (exact 0/1 hard; soft = mark
+    level x a sigmoid timer gate) and the partially-reset suppression
+    timer (a full emission resets it to 0, a fractional one
+    proportionally — annealing recovers the hard reset).
+    """
+    emit_h = ((ctx.marked > 0)
+              & (ctx.np_tmr_t >= window)).astype(jnp.float32)
+    np_h = jnp.where(emit_h > 0, 0.0, ctx.np_tmr_t)
+    emit_s = ctx.marked * soft.unit_gate(ctx.np_tmr_t - window, ctx.tau,
+                                         window)
+    emit = soft.select(ctx.tau, emit_s, emit_h)
+    np_tmr = soft.select(ctx.tau, (1.0 - emit_s) * ctx.np_tmr_t, np_h)
     return emit, np_tmr
 
 
@@ -443,19 +507,31 @@ def _react_pfc(p, ctx: ReactCtx, state):
 
 
 def _react_rp(p, ctx: ReactCtx, state):
-    """DCQCN RP: alpha EWMA + staged byte/timer recovery machine."""
+    """DCQCN RP: alpha EWMA + staged byte/timer recovery machine.
+
+    Soft path: every CNP-gated update blends by the fractional
+    notification level (``soft.pick``), so the rate cut, alpha EWMA and
+    counter resets carry gradients to rdf/g and — through the marking
+    intensity upstream — to the detection thresholds; the integer
+    stage machine and its byte/timer events stay hard (discrete
+    counters have no useful relaxation), but rai/rhai still get exact
+    gradients because they enter the fired updates linearly.
+    """
     g = p["rp_g"]
-    cnp, dt = ctx.cnp, ctx.dt
+    dt, tau = ctx.dt, ctx.tau
+    c = ctx.cnp                      # [F] level: exact 0/1 in hard mode
+    cnp = ctx.cnp > 0
+    pk = lambda a, b: soft.pick(tau, c, cnp, a, b)   # noqa: E731
     alpha_tmr = ctx.alpha_tmr + dt
     a_tick = alpha_tmr >= p["rp_timer"]
     alpha = jnp.where(a_tick, (1 - g) * ctx.alpha, ctx.alpha)
     alpha_tmr = jnp.where(a_tick, 0.0, alpha_tmr)
-    rp_target = jnp.where(cnp, ctx.rate, ctx.rp_target)
-    rate = jnp.where(cnp, ctx.rate * (1 - alpha * p["rp_rdf"]), ctx.rate)
-    alpha = jnp.where(cnp, (1 - g) * alpha + g, alpha)
-    byte_cnt = jnp.where(cnp, 0.0, ctx.byte_cnt + ctx.rate * dt)
-    tmr = jnp.where(cnp, 0.0, ctx.tmr + dt)
-    alpha_tmr = jnp.where(cnp, 0.0, alpha_tmr)
+    rp_target = pk(ctx.rate, ctx.rp_target)
+    rate = pk(ctx.rate * (1 - alpha * p["rp_rdf"]), ctx.rate)
+    alpha = pk((1 - g) * alpha + g, alpha)
+    byte_cnt = pk(0.0, ctx.byte_cnt + ctx.rate * dt)
+    tmr = pk(0.0, ctx.tmr + dt)
+    alpha_tmr = pk(0.0, alpha_tmr)
     bc_stage = jnp.where(cnp, 0, ctx.bc_stage)
     t_stage = jnp.where(cnp, 0, ctx.t_stage)
     b_ev = byte_cnt >= p["rp_byte"]
@@ -477,8 +553,10 @@ def _react_rp(p, ctx: ReactCtx, state):
         * (imin - p["rp_fr_stages"]).astype(jnp.float32),
         rp_target)
     rate = jnp.where(ev, 0.5 * (rate + rp_target), rate)
-    rate = jnp.clip(rate, p["rp_min_rate"], ctx.line_rate)
-    rp_target = jnp.clip(rp_target, p["rp_min_rate"], ctx.line_rate)
+    rate = soft.clip(rate, p["rp_min_rate"], ctx.line_rate, tau,
+                     ctx.line_rate)
+    rp_target = soft.clip(rp_target, p["rp_min_rate"], ctx.line_rate,
+                          tau, ctx.line_rate)
     out = _passthrough(ctx)._replace(
         rate=rate, rp_target=rp_target, alpha=alpha, byte_cnt=byte_cnt,
         tmr=tmr, alpha_tmr=alpha_tmr, bc_stage=bc_stage, t_stage=t_stage)
@@ -515,16 +593,25 @@ def _erp_slope(p, ctx: ReactCtx):
 
 
 def _react_erp(p, ctx: ReactCtx, state):
-    """ERP: settle to signalled fair share, hold, additive recovery."""
-    cnp, dt = ctx.cnp, ctx.dt
-    rate = jnp.where(
-        cnp,
-        jnp.maximum(p["erp_settle"] * ctx.tgt_rx, p["erp_min_rate"]),
-        ctx.rate)
-    hold = jnp.where(cnp, p["erp_hold"], jnp.maximum(ctx.hold - dt, 0.0))
-    rate = jnp.where(~cnp & (hold <= 0),
-                     rate + _erp_slope(p, ctx) * dt, rate)
-    rate = jnp.clip(rate, p["erp_min_rate"], ctx.line_rate)
+    """ERP: settle to signalled fair share, hold, additive recovery.
+
+    Soft path: settle/hold blend by the notification level, and the
+    hold-down expiry becomes a sigmoid recovery gate — erp_settle,
+    erp_hold and erp_rai all differentiable through the scan.
+    """
+    dt, tau = ctx.dt, ctx.tau
+    c = ctx.cnp
+    cnp = ctx.cnp > 0
+    pk = lambda a, b: soft.pick(tau, c, cnp, a, b)   # noqa: E731
+    settle = jnp.maximum(p["erp_settle"] * ctx.tgt_rx, p["erp_min_rate"])
+    rate = pk(settle, ctx.rate)
+    hold = pk(p["erp_hold"], jnp.maximum(ctx.hold - dt, 0.0))
+    slope = _erp_slope(p, ctx) * dt
+    rec_s = (1.0 - c) * soft.unit_gate(-hold, tau, p["erp_hold"] + 1e-9)
+    rate = soft.select(tau, rate + rec_s * slope,
+                       jnp.where(~cnp & (hold <= 0), rate + slope, rate))
+    rate = soft.clip(rate, p["erp_min_rate"], ctx.line_rate, tau,
+                     ctx.line_rate)
     return _passthrough(ctx)._replace(rate=rate, hold=hold), {}
 
 
@@ -541,13 +628,37 @@ def _react_erp_kernel(p, ctx: ReactCtx, state, *, interpret):
 
 
 def _react_swift(p, ctx: ReactCtx, state):
-    """Delay-target throttling on the path queuing-delay estimate."""
+    """Delay-target throttling on the path queuing-delay estimate.
+
+    Hard path = ``swift_update_ref`` verbatim (the single definition
+    the Pallas kernel reproduces).  Soft path: the over-target and
+    cool-down gates become sigmoids, blending the multiplicative
+    decrease against the additive recovery — target_delay/beta/ai get
+    gradients (the qdelay signal itself is already differentiable).
+    """
     from repro.kernels.ref import swift_update_ref
-    rate, cool = swift_update_ref(
+    rate_h, cool_h = swift_update_ref(
         ctx.rate, state["swift_cool"], ctx.qdelay,
         target=p["swift_target"], beta=p["swift_beta"], ai=p["swift_ai"],
         guard=p["swift_guard"], min_rate=p["swift_min_rate"],
         line_rate=ctx.line_rate, dt=ctx.dt)
+    tau = ctx.tau
+    target, beta = p["swift_target"], p["swift_beta"]
+    cool = jnp.maximum(state["swift_cool"] - ctx.dt, 0.0)
+    g_over = soft.unit_gate(ctx.qdelay - target, tau, target + 1e-12)
+    g_can = soft.unit_gate(-cool, tau, p["swift_guard"] + 1e-12)
+    factor = 1.0 - beta * (ctx.qdelay - target) \
+        / jnp.maximum(ctx.qdelay, 1e-12)
+    dec = jnp.maximum(ctx.rate * jnp.maximum(factor, 1.0 - beta),
+                      p["swift_min_rate"])
+    cut = g_over * g_can
+    rate_s = cut * dec + (1.0 - cut) * \
+        (ctx.rate + (1.0 - g_over) * p["swift_ai"] * ctx.dt)
+    rate_s = soft.clip(rate_s, p["swift_min_rate"], ctx.line_rate, tau,
+                       ctx.line_rate)
+    cool_s = cut * p["swift_guard"] + (1.0 - cut) * cool
+    rate = soft.select(tau, rate_s, rate_h)
+    cool = soft.select(tau, cool_s, cool_h)
     return _passthrough(ctx)._replace(rate=rate), {"swift_cool": cool}
 
 

@@ -542,7 +542,8 @@ class Sweep:
             reduce: str = "fused", use_kernels: bool = False,
             interpret: bool = False, pad_runs_to: int | None = None,
             min_delay_slots: int | None = None,
-            dense_rows: int | None = None) -> "SweepResult":
+            dense_rows: int | None = None,
+            temperature: float = 0.0) -> "SweepResult":
         """Execute all points as one device launch.
 
         ``mesh``: a ``jax.sharding.Mesh`` (e.g. ``repro.dist.sweep_mesh()``)
@@ -568,7 +569,19 @@ class Sweep:
             = derive from the batch; an explicit value that cannot
             cover the batch's skew falls back to 0, the segment-sum
             path, which is bit-identical).
+
+        ``temperature`` > 0 runs the soft-relaxed dynamics
+        (``repro.tune.soft``) — smoothed marking/PFC/notification
+        gates for differentiable tuning.  The default 0 is the exact
+        hard model (bitwise; temperature is traced data, so both share
+        one compiled executable).  Soft runs require
+        ``use_kernels=False`` (the Pallas per-flow kernels implement
+        the hard path only).
         """
+        if temperature and use_kernels:
+            raise ValueError(
+                "temperature > 0 needs use_kernels=False: the Pallas "
+                "per-flow kernels implement the hard dynamics only")
         cfg0 = self.points[0].cfg
         n_samples, k = _resolve_steps(cfg0, n_steps, trace_every)
         scns = [p.scenario for p in self.points]
@@ -582,7 +595,8 @@ class Sweep:
               for s, p in zip(padded, self.points)])
         par_b = jax.tree.map(
             lambda *xs: jnp.stack(xs),
-            *[step_params(p.cfg) for p in self.points])
+            *[step_params(p.cfg, temperature=temperature)
+              for p in self.points])
         R = len(self.points)
         R_target = R if pad_runs_to is None else max(R, int(pad_runs_to))
         if mesh is not None and R_target % mesh.size:
@@ -693,6 +707,7 @@ class SweepResult:
             marked=tr.marked[r][:, :F], cnp=tr.cnp[r][:, :F],
             n_nonmin=tr.n_nonmin[r],
             final=_slice_final(self.final, r, F),
+            ctrl=tr.ctrl[r][:, :F],
             trace_every=self.trace_every)
 
     def items(self):

@@ -83,6 +83,7 @@ import numpy as np
 from . import cc
 from .params import CCConfig, CCSpec, ROUTING_MODES
 from .routing import PAD, link_incidence
+from repro.tune import soft
 
 
 class Scenario(NamedTuple):
@@ -172,6 +173,14 @@ class StepParams(NamedTuple):
     mark: dict                # marking-family param union ([] scalars)
     notif: dict               # notification-family param union
     react: dict               # reaction-family param union
+    # Soft-relaxation temperature (``repro.tune.soft``): 0 runs the
+    # exact hard dynamics (bitwise — every softened site selects its
+    # original expression); > 0 smooths the hard gates (PFC
+    # hysteresis, marking thresholds, CNP windows, rate clamps) so
+    # ``jax.grad`` flows through the dt-scan.  Traced data like every
+    # other constant: hard sweeps and soft tuner rollouts share ONE
+    # compiled step.
+    temperature: jnp.ndarray  # [] f32
 
 
 class FluidState(NamedTuple):
@@ -181,7 +190,10 @@ class FluidState(NamedTuple):
     offered: jnp.ndarray      # [F] bytes the generator admitted into nicq
     dropped: jnp.ndarray      # [F] generator overflow (app backpressure)
     est: jnp.ndarray          # [F, H] EWMA crossing rate per wire (B/s)
-    paused: jnp.ndarray       # [L] bool
+    # Pause level per wire: exact 0/1 in hard mode (temperature == 0),
+    # fractional under the soft PFC hysteresis — float32 so the pause
+    # gate is a differentiable multiplier instead of a boolean select.
+    paused: jnp.ndarray       # [L] f32
     # reaction-point state (DCQCN RP and ERP share slots where sensible)
     rate: jnp.ndarray         # [F] current injection rate
     rp_target: jnp.ndarray    # [F]
@@ -213,6 +225,12 @@ class StepTrace(NamedTuple):
     marked: jnp.ndarray       # [F] marked this step?
     cnp: jnp.ndarray          # [F] CNP received this step?
     n_nonmin: jnp.ndarray     # [] flows currently on a non-minimal path
+    # control-traffic counter: notification messages (CNP/ENP/FNCC)
+    # emitted this step — exact 0/1 per flow in hard mode, fractional
+    # emission intensity under the soft model.  Accumulated (not
+    # sampled) by the decimating scan, it feeds the control-overhead
+    # objective in repro.tune and SimResult.summary().
+    ctrl: jnp.ndarray         # [F] f32 notifications emitted this step
 
 
 DELAY_SLOTS = 32              # legacy fixed delay-line depth (see below)
@@ -392,13 +410,15 @@ def scenario_device(scn: Scenario) -> ScenarioDev:
     )
 
 
-def step_params(cfg: "CCConfig | CCSpec") -> StepParams:
+def step_params(cfg: "CCConfig | CCSpec", *,
+                temperature: float = 0.0) -> StepParams:
     """Flatten a config into the traced scalars ``fluid_step`` reads.
 
     Accepts the legacy ``CCConfig`` (mapped through ``to_spec()``, the
     bit-exact shim) or a ``CCSpec`` directly.  Stage names resolve to
     registry codes; each family's param union comes from the registered
-    stages' extractors.
+    stages' extractors.  ``temperature`` selects the soft-relaxed
+    dynamics (``repro.tune``); the default 0 is the exact hard model.
     """
     spec: CCSpec = cfg.to_spec()
     lk = spec.link
@@ -419,6 +439,7 @@ def step_params(cfg: "CCConfig | CCSpec") -> StepParams:
         mark=cc.MARKING.device_params(spec),
         notif=cc.NOTIFICATION.device_params(spec),
         react=cc.REACTION.device_params(spec),
+        temperature=f32(temperature),
     )
 
 
@@ -450,7 +471,7 @@ def init_state(scn: Scenario, cfg: "CCConfig | CCSpec",
         qh=jnp.zeros((F, H), jnp.float32),
         nicq=z_f, delivered=z_f, offered=z_f, dropped=z_f,
         est=jnp.zeros((F, H), jnp.float32),
-        paused=jnp.zeros((L,), bool),
+        paused=jnp.zeros((L,), jnp.float32),
         rate=line,
         rp_target=line,
         alpha=jnp.full((F,), cfg.dcqcn.alpha_init, jnp.float32),
@@ -510,6 +531,10 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     L = sd.cap_ext.shape[0] - 1
     D = st.trig_buf.shape[0]
     dt = jnp.float32(dt)
+    # soft-relaxation temperature: every hard gate below is written
+    # ``soft.select(tau, soft_expr, hard_expr)`` with the hard branch
+    # verbatim, so tau == 0 is bitwise the hard model (repro.tune).
+    tau = par.temperature
 
     _ah, _fi = _index_consts(F, H)
     arange_h = jnp.asarray(_ah)
@@ -660,15 +685,17 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     src_q = jnp.concatenate([src_inj[:, None], st.qh[:, :-1]], axis=1)
     src_q = jnp.where(valid, src_q, 0.0)
 
-    pause_l = jnp.concatenate([st.paused, jnp.zeros((1,), bool)])
-    wire_open = ~pause_l[widx]                         # [F,H]
+    pause_l = jnp.concatenate([st.paused, jnp.zeros((1,), jnp.float32)])
+    wire_open = 1.0 - pause_l[widx]                    # [F,H] 1 = drainable
 
     # strict-FIFO HoL factor per link queue: share of the queue whose
-    # *next* wire is currently drainable.
+    # *next* wire is currently drainable.  ``wire_open`` is an exact
+    # 0/1 float in hard mode; a fractional pause level scales service
+    # proportionally (the fluid relaxation of the on/off gate).
     next_open = jnp.concatenate(
-        [wire_open[:, 1:], jnp.ones((F, 1), bool)], axis=1)
+        [wire_open[:, 1:], jnp.ones((F, 1), jnp.float32)], axis=1)
     q_here = jnp.where(holds_queue, st.qh, 0.0)        # queue at sink(h)
-    weight = jnp.where(wire_open, src_q, 0.0)
+    weight = src_q * wire_open
     caps_w = sd.cap_ext[widx]                          # [F,H]
     if fused:
         num, den, sum_w = link_sums(
@@ -714,8 +741,15 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
         B = scat(jnp.where(holds_queue, qh, 0.0))[:L]
         n_act = scat(act.astype(jnp.float32), init=0.0)
         sum_dem = scat(jnp.where(act, dem, 0.0))
-    paused = jnp.where(B > par.xoff, True,
-                       jnp.where(B < par.xon, False, st.paused))
+    # xoff/xon hysteresis: hard = set above xoff, clear below xon, hold
+    # in between; soft = the pause level relaxes toward 1 (0) through a
+    # sigmoid band O(tau * port_buffer) wide around each threshold.
+    paused_h = jnp.where(B > par.xoff, 1.0,
+                         jnp.where(B < par.xon, 0.0, st.paused))
+    g_on = soft.unit_gate(B - par.xoff, tau, par.port_buffer)
+    g_off = soft.unit_gate(par.xon - B, tau, par.port_buffer)
+    paused_s = st.paused + (1.0 - st.paused) * g_on - st.paused * g_off
+    paused = soft.select(tau, paused_s, paused_h)
     sink_l = sd.sink_ext[:L]
     if fused:
         pool = jax.ops.segment_sum(
@@ -725,9 +759,14 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     else:
         pool = jnp.zeros((n_switches,), jnp.float32).at[
             jnp.maximum(sink_l, 0)].add(jnp.where(sink_l >= 0, B, 0.0))
-    pool_hot = pool > par.pool_xoff
-    paused = paused | jnp.where(sink_l >= 0,
-                                pool_hot[jnp.maximum(sink_l, 0)], False)
+    pool_hot = soft.select(
+        tau,
+        soft.unit_gate(pool - par.pool_xoff, tau, par.port_buffer),
+        (pool > par.pool_xoff).astype(jnp.float32))
+    # max of pause levels == boolean OR on the exact 0/1 hard values
+    paused = jnp.maximum(
+        paused, jnp.where(sink_l >= 0,
+                          pool_hot[jnp.maximum(sink_l, 0)], 0.0))
 
     # ---- 4. marking (cc.MARKING dispatch) ---------------------------------
     B1 = jnp.concatenate([B, jnp.zeros((1,), jnp.float32)])
@@ -747,14 +786,20 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
         under, dem,
         share0 + surplus[widx] / jnp.maximum(n_heavy[widx], 1.0))
     grant = jnp.where(act, grant, caps_w)
-    oversub = sum_dem[widx] > caps_w          # wire h oversubscribed?
+    # wire h oversubscribed?  (soft: sigmoid in the demand excess; the
+    # PAD slot's cap is inf, so the soft gate is exactly 0 there too)
+    oversub = soft.select(
+        tau,
+        soft.unit_gate(sum_dem[widx] - caps_w, tau, par.line_rate),
+        (sum_dem[widx] > caps_w).astype(jnp.float32))
     # ... all shifted to the *next* wire (the flow's requested output)
     inf_col = jnp.full((F, 1), jnp.inf, jnp.float32)
     grant_next = jnp.concatenate([grant[:, 1:], inf_col], axis=1)
     grant_next = jnp.where(holds_queue, grant_next, jnp.inf)
-    dem_next = jnp.concatenate([dem[:, 1:], inf_col * 0], axis=1)
+    dem_next = jnp.concatenate(
+        [dem[:, 1:], jnp.zeros((F, 1), jnp.float32)], axis=1)
     over_next = jnp.concatenate(
-        [oversub[:, 1:], jnp.zeros((F, 1), bool)], axis=1)
+        [oversub[:, 1:], jnp.zeros((F, 1), jnp.float32)], axis=1)
 
     # Every registered marking stage (CP occupancy / ECP fair-grant /
     # slope ramp / ...) computes its mark set + severity from this
@@ -765,14 +810,31 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
         cc.MarkCtx(B1_w=B1_w, present=present, holds_queue=holds_queue,
                    dem_next=dem_next, grant_next=grant_next,
                    over_next=over_next, port_buffer=par.port_buffer,
-                   line_rate=par.line_rate),
+                   line_rate=par.line_rate, tau=tau),
         st.cc)
-    marked = jnp.any(mark_fh, axis=1)
+    # mark_fh is a [F, H] float mark intensity: exact 0/1 in hard mode,
+    # sigmoid-graded under the soft model.
+    mark_pos = mark_fh > 0.0
+    marked = jnp.any(mark_pos, axis=1)
     # severity payload: fair grant at the marking queue, scaled down by
     # the queue's excess over V so standing backlog drains (ENP carries
     # "timely congestion severity", ERP converges to fair as B -> V).
-    tgt = jnp.min(jnp.where(mark_fh, sev, jnp.inf), axis=1)
-    tgt = jnp.where(jnp.isfinite(tgt), tgt, par.line_rate)
+    # Hard: min over marking hops.  Soft: intensity-weighted mean —
+    # inf sentinels (non-queue hops) carry zero intensity and are
+    # where-masked out, never multiplied (0 * inf = nan).
+    tgt_h = jnp.min(jnp.where(mark_pos, sev, jnp.inf), axis=1)
+    tgt_h = jnp.where(jnp.isfinite(tgt_h), tgt_h, par.line_rate)
+    # inf severities (a marking hop whose next wire has no finite
+    # grant) take the same line-rate fallback as the hard min above —
+    # inside the mask, so the weighted mean never touches inf
+    sev_fin = jnp.where(jnp.isfinite(sev), sev, par.line_rate)
+    m_sev = jnp.sum(jnp.where(mark_pos, mark_fh * sev_fin, 0.0), axis=1)
+    m_sum = jnp.sum(mark_fh, axis=1)
+    tgt = soft.select(
+        tau, (m_sev + 1e-6 * par.line_rate) / (m_sum + 1e-6), tgt_h)
+    # notification sees a [F] mark level: any-hop in hard mode, the
+    # peak intensity (capped at one message) under the soft model
+    mark_lvl = jnp.minimum(jnp.max(mark_fh, axis=1), 1.0)
 
     # ---- 5. notification (cc.NOTIFICATION dispatch) -----------------------
     # Each stage decides who emits (suppression/coalescing window) and
@@ -780,10 +842,13 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     # from the marking hop's position on the return path.  The delay
     # line is sized >= max(rtt)+1 (see delay_depth), so the modulo is a
     # ring-buffer index, never an aliased (shortened) feedback delay.
+    # ``emit`` is a [F] float emission intensity (exact 0/1 hard,
+    # fractional soft) — it is also the per-step control-traffic
+    # counter surfaced in the trace below.
     (emit, np_tmr, wslot), cc_notif = cc.dispatch(
         cc.NOTIFICATION, par.notif_code, par.notif,
-        cc.NotifCtx(marked=marked, mark_fh=mark_fh, np_tmr_t=np_tmr_t,
-                    hops=hops, rtt=sd.rtt, t=st.t, D=D),
+        cc.NotifCtx(marked=mark_lvl, mark_fh=mark_fh, np_tmr_t=np_tmr_t,
+                    hops=hops, rtt=sd.rtt, t=st.t, D=D, tau=tau),
         st.cc)
     rslot = st.t % D
     if fused:
@@ -793,19 +858,28 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
         # disjoint from all write slots (0 < rtt < D).
         d_iota = jnp.arange(D, dtype=jnp.int32)[:, None]       # [D, 1]
         w_hot = d_iota == wslot[None, :]                       # [D, F]
-        trig_buf = st.trig_buf + \
-            jnp.where(w_hot, emit.astype(jnp.float32), 0.0)
-        tgt_buf = jnp.where(w_hot & emit[None, :], tgt[None, :],
-                            st.tgt_buf)
-        cnp = trig_buf[rslot] > 0
+        trig_buf = st.trig_buf + jnp.where(w_hot, emit[None, :], 0.0)
+        tgt_buf = soft.select(
+            tau,
+            jnp.where(w_hot,
+                      emit[None, :] * tgt[None, :]
+                      + (1.0 - emit[None, :]) * st.tgt_buf,
+                      st.tgt_buf),
+            jnp.where(w_hot & (emit[None, :] > 0), tgt[None, :],
+                      st.tgt_buf))
+        cnp = soft.select(tau, jnp.minimum(trig_buf[rslot], 1.0),
+                          (trig_buf[rslot] > 0).astype(jnp.float32))
         tgt_rx = tgt_buf[rslot]
         trig_buf = jnp.where(d_iota == rslot, 0.0, trig_buf)
     else:
-        trig_buf = st.trig_buf.at[wslot, fidx].add(
-            emit.astype(jnp.float32))
+        trig_buf = st.trig_buf.at[wslot, fidx].add(emit)
+        prev_tgt = st.tgt_buf[wslot, fidx]
         tgt_buf = st.tgt_buf.at[wslot, fidx].set(
-            jnp.where(emit, tgt, st.tgt_buf[wslot, fidx]))
-        cnp = trig_buf[rslot] > 0
+            soft.select(tau,
+                        emit * tgt + (1.0 - emit) * prev_tgt,
+                        jnp.where(emit > 0, tgt, prev_tgt)))
+        cnp = soft.select(tau, jnp.minimum(trig_buf[rslot], 1.0),
+                          (trig_buf[rslot] > 0).astype(jnp.float32))
         tgt_rx = tgt_buf[rslot]
         trig_buf = trig_buf.at[rslot].set(0.0)
 
@@ -825,7 +899,8 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
                     alpha_tmr=st.alpha_tmr, bc_stage=st.bc_stage,
                     t_stage=st.t_stage, hold=st.hold, cnp=cnp,
                     tgt_rx=tgt_rx, qdelay=qdelay, jitter=sd.jitter,
-                    gen_rate=sd.gen_rate, line_rate=par.line_rate, dt=dt),
+                    gen_rate=sd.gen_rate, line_rate=par.line_rate, dt=dt,
+                    tau=tau),
         st.cc, use_kernels=use_kernels, interpret=interpret)
 
     new = FluidState(
@@ -840,9 +915,11 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     rate = react_out.rate
     trace = StepTrace(
         delivered=delivered, rate=rate, inst_thr=deliv_step / dt,
-        max_q=jnp.max(B), n_paused=jnp.sum(paused.astype(jnp.int32)),
-        marked=marked, cnp=cnp,
-        n_nonmin=jnp.sum((path_idx > 0).astype(jnp.int32)))
+        max_q=jnp.max(B),
+        n_paused=jnp.sum((paused > 0.5).astype(jnp.int32)),
+        marked=marked, cnp=cnp > 0,
+        n_nonmin=jnp.sum((path_idx > 0).astype(jnp.int32)),
+        ctrl=emit)
     return new, trace
 
 

@@ -78,6 +78,31 @@ class DCQCNParams:
                 f"kmin={self.kmin} > kmax={self.kmax}: the marking ramp "
                 f"must be non-decreasing (kmin == kmax gives step "
                 f"marking; kmin < kmax the slope ramp up to pmax)")
+        # The tuner explores these boxes programmatically (bounded
+        # reparameterisations in repro.tune); construction-time checks
+        # keep a mis-specified box from silently simulating nonsense.
+        if not 0.0 < self.pmax <= 1.0:
+            raise ValueError(
+                f"pmax={self.pmax} must lie in (0, 1]: it is the marking "
+                f"probability at kmax (0 would never mark, >1 is not a "
+                f"probability)")
+        if not 0.0 < self.g <= 1.0:
+            raise ValueError(
+                f"g={self.g} must lie in (0, 1]: it is the alpha EWMA "
+                f"gain of the RP state machine")
+        for name in ("rai", "rhai", "timer_T", "byte_counter_B",
+                     "min_rate", "cnp_window"):
+            v = getattr(self, name)
+            if v < 0:
+                raise ValueError(
+                    f"{name}={v} must be non-negative (rate-increase "
+                    f"gains, periods and floors have no meaningful "
+                    f"negative form)")
+        if not 0.0 <= self.rate_decrease_factor <= 1.0:
+            raise ValueError(
+                f"rate_decrease_factor={self.rate_decrease_factor} must "
+                f"lie in [0, 1]: R <- R * (1 - alpha * f) would raise "
+                f"the rate on congestion otherwise")
 
 
 @dataclasses.dataclass(frozen=True)

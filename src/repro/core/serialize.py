@@ -152,7 +152,7 @@ def state_from_dict(d: dict) -> FluidState:
 # ---------------------------------------------------------------------------
 
 _SIM_TRACE_FIELDS = ("delivered", "rate", "inst_thr", "max_q",
-                     "n_paused", "marked", "cnp", "n_nonmin")
+                     "n_paused", "marked", "cnp", "n_nonmin", "ctrl")
 
 
 def simresult_to_dict(res, *, traces: bool = True,

@@ -28,7 +28,10 @@ class TraceSample(StepTrace):
     step, i.e. a strided sample of the full trace; ``inst_thr`` is the
     window-mean delivery rate; ``max_q`` / ``n_paused`` / ``n_nonmin``
     are window maxima; ``marked`` / ``cnp`` are window event *counts*
-    (so sums over the decimated trace equal sums over the full one).
+    (so sums over the decimated trace equal sums over the full one);
+    ``ctrl`` is the window *sum* of notification emissions — a float,
+    because the soft model (``StepParams.temperature > 0``) emits
+    fractional control traffic.
     """
 
 
@@ -39,7 +42,8 @@ def _zero_accum(st: FluidState):
             jnp.zeros_like(st.t, jnp.int32),      # n_paused
             jnp.zeros_like(st.nicq, jnp.int32),   # marked
             jnp.zeros_like(st.nicq, jnp.int32),   # cnp
-            jnp.zeros_like(st.t, jnp.int32))      # n_nonmin
+            jnp.zeros_like(st.t, jnp.int32),      # n_nonmin
+            jnp.zeros_like(st.nicq, jnp.float32))  # ctrl
 
 
 def decimating_scan(step, st: FluidState, n_samples: int,
@@ -52,21 +56,23 @@ def decimating_scan(step, st: FluidState, n_samples: int,
         d0 = st.delivered
 
         def inner(carry, _):
-            stt, mq, npz, mk, cn, nm = carry
+            stt, mq, npz, mk, cn, nm, ct = carry
             st2, tr = step(stt)
             return (st2,
                     jnp.maximum(mq, tr.max_q),
                     jnp.maximum(npz, tr.n_paused),
                     mk + tr.marked.astype(jnp.int32),
                     cn + tr.cnp.astype(jnp.int32),
-                    jnp.maximum(nm, tr.n_nonmin)), None
+                    jnp.maximum(nm, tr.n_nonmin),
+                    ct + tr.ctrl), None
 
-        (st, mq, npz, mk, cn, nm), _ = jax.lax.scan(
+        (st, mq, npz, mk, cn, nm, ct), _ = jax.lax.scan(
             inner, (st,) + _zero_accum(st), None, length=trace_every)
         sample = TraceSample(
             delivered=st.delivered, rate=st.rate,
             inst_thr=(st.delivered - d0) / jnp.float32(trace_every * dt),
-            max_q=mq, n_paused=npz, marked=mk, cnp=cn, n_nonmin=nm)
+            max_q=mq, n_paused=npz, marked=mk, cnp=cn, n_nonmin=nm,
+            ctrl=ct)
         return st, sample
 
     return jax.lax.scan(outer, st, None, length=n_samples)
@@ -108,6 +114,7 @@ class SimResult:
     cnp: np.ndarray            # [T, F] CNPs received in window
     n_nonmin: np.ndarray       # [T] window-max flows on non-minimal paths
     final: Any                 # FluidState (host)
+    ctrl: np.ndarray = None    # [T, F] notification emissions in window
     trace_every: int = 1
 
     # -- wire format --------------------------------------------------------
@@ -193,6 +200,54 @@ class SimResult:
                           self.delivered[-1] / np.maximum(span, 1e-300), 0.0)
         return np.where(windowed, mean_w, mean_v)
 
+    def _real_flows(self) -> np.ndarray:
+        """[F] bool — flows with actual offered work (padding rows in
+        stacked sweeps carry zero rate and are excluded from
+        fairness/tail statistics)."""
+        return np.asarray(self.scn.gen_rate) > 0
+
+    def jain_index(self) -> float:
+        """Jain fairness over per-flow goodput while active, in [0, 1].
+
+        1 = all real flows saw the same rate; 1/n = one flow took
+        everything.  A first-class tuner objective (repro.tune).
+        """
+        thr = self.mean_throughput_while_active()[self._real_flows()]
+        n = thr.size
+        if n == 0:
+            return float("nan")
+        denom = n * float((thr ** 2).sum())
+        return float(thr.sum()) ** 2 / denom if denom > 0 else 1.0
+
+    def flow_slowdowns(self) -> np.ndarray:
+        """[F_real] demand-normalised slowdown per real flow (>= ~1).
+
+        Ideal rate = min(offered rate, line rate); slowdown = ideal /
+        achieved mean rate while active — the fluid-model analogue of
+        FCT slowdown (a flow throttled to half its unconstrained rate
+        scores 2).
+        """
+        real = self._real_flows()
+        thr = self.mean_throughput_while_active()[real]
+        ideal = np.minimum(np.asarray(self.scn.gen_rate),
+                           self.cfg.link.line_rate)[real]
+        return ideal / np.maximum(thr, 1e-6 * self.cfg.link.line_rate)
+
+    def p99_slowdown(self) -> float:
+        """p99 of ``flow_slowdowns`` — the tail-latency tuner objective."""
+        s = self.flow_slowdowns()
+        return float(np.percentile(s, 99)) if s.size else float("nan")
+
+    def ctrl_per_mb(self) -> float:
+        """Notification messages per delivered MB (control overhead).
+
+        NaN when the trace predates the ``ctrl`` counter (old blobs).
+        """
+        if self.ctrl is None:
+            return float("nan")
+        mb = float(np.asarray(self.final.delivered).sum()) / 1e6
+        return float(self.ctrl.sum()) / max(mb, 1e-9)
+
     def summary(self) -> dict:
         """Headline numbers for this run (one row of the Fig. 2/3
         table; ``SweepResult.summary`` is this, per point)."""
@@ -207,6 +262,9 @@ class SimResult:
             "marks": int(self.marked.sum()),
             "cnps": int(self.cnp.sum()),
             "peak_nonmin_flows": int(self.n_nonmin.max()),
+            "jain_index": self.jain_index(),
+            "p99_slowdown": self.p99_slowdown(),
+            "ctrl_per_mb": self.ctrl_per_mb(),
         }
 
 
@@ -240,6 +298,7 @@ def run(scn: Scenario, cfg: CCConfig, n_steps: int | None = None,
         cnp=np.asarray(tr.cnp),
         n_nonmin=np.asarray(tr.n_nonmin),
         final=jax.device_get(final),
+        ctrl=np.asarray(tr.ctrl),
         trace_every=k,
     )
 

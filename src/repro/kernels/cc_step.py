@@ -26,6 +26,13 @@ python floats, so the *same compiled kernel* serves traced parameter
 grids (the Sweep engine stacks ``StepParams`` and vmaps) — the
 RPParams/ERPParams fields may be python floats or traced f32 scalars
 interchangeably.
+
+Soft-path note (``repro.tune``): the kernels implement the HARD
+dynamics only — the incoming notification level is thresholded
+(``cnp > 0``), so at ``StepParams.temperature == 0`` they are bitwise
+equal to the jnp stages (the tier-1 parity suites), while a soft
+(``temperature > 0``) tuner rollout must run ``use_kernels=False``;
+``repro.tune.optimizers`` pins that.
 """
 
 from __future__ import annotations

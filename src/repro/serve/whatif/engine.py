@@ -370,7 +370,8 @@ class CCQueryEngine:
             sim, scn=p.scenario,
             delivered=sim.delivered[:, :F], rate=sim.rate[:, :F],
             inst_thr=sim.inst_thr[:, :F], marked=sim.marked[:, :F],
-            cnp=sim.cnp[:, :F], final=trim_final(sim.final, F))
+            cnp=sim.cnp[:, :F], ctrl=sim.ctrl[:, :F],
+            final=trim_final(sim.final, F))
 
     # -- observability ------------------------------------------------------
 

@@ -1,0 +1,54 @@
+"""repro.tune — differentiable + Bayesian CC autotuning.
+
+The fluid model is pure JAX; this package exploits it.  ``soft``
+provides temperature-smoothed relaxations of the hard gates in
+``core.fluid`` / ``core.cc`` (behind the traced
+``StepParams.temperature``), ``objectives`` the scalar/multi-objective
+functions (goodput, p99 flow slowdown, Jain fairness, control-traffic
+overhead), ``optimizers`` the tuner loops (``GradTuner`` — jax.grad
+through the dt-scan on the smoothed model; ``ESTuner`` — antithetic
+evolution strategies; ``BOTuner`` — GP/Thompson sampling), and
+``pareto`` the ``autotune()`` front-door plus scalarisation sweeps
+producing Pareto fronts.
+
+Lazy exports (PEP 562): ``core.fluid`` imports ``repro.tune.soft`` at
+module top, so this ``__init__`` must not import ``repro.core``-heavy
+submodules eagerly — attribute access resolves them on demand.
+"""
+
+from __future__ import annotations
+
+_EXPORTS = {
+    "soft": ("repro.tune.soft", None),
+    "objectives": ("repro.tune.objectives", None),
+    "optimizers": ("repro.tune.optimizers", None),
+    "pareto": ("repro.tune.pareto", None),
+    "TunableParam": ("repro.tune.optimizers", "TunableParam"),
+    "ParamBox": ("repro.tune.optimizers", "ParamBox"),
+    "dcqcn_box": ("repro.tune.optimizers", "dcqcn_box"),
+    "rev_box": ("repro.tune.optimizers", "rev_box"),
+    "TuneProblem": ("repro.tune.optimizers", "TuneProblem"),
+    "Evaluator": ("repro.tune.optimizers", "Evaluator"),
+    "box_for": ("repro.tune.optimizers", "box_for"),
+    "GradTuner": ("repro.tune.optimizers", "GradTuner"),
+    "ESTuner": ("repro.tune.optimizers", "ESTuner"),
+    "BOTuner": ("repro.tune.optimizers", "BOTuner"),
+    "autotune": ("repro.tune.pareto", "autotune"),
+    "pareto_autotune": ("repro.tune.pareto", "pareto_autotune"),
+    "pareto_front": ("repro.tune.pareto", "pareto_front"),
+    "TuneResult": ("repro.tune.pareto", "TuneResult"),
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module 'repro.tune' has no attribute {name!r}") from None
+    import importlib
+
+    mod = importlib.import_module(mod_name)
+    return mod if attr is None else getattr(mod, attr)

@@ -1,0 +1,198 @@
+"""Tuner objectives — device-side scalar figures of merit.
+
+Every objective is a pure-JAX function ``fn(final, trace, ctx) ->
+scalar`` over one finished rollout: ``final`` is the ``FluidState`` a
+``decimating_scan`` returns, ``trace`` the stacked ``TraceSample``
+pytree ([T, ...] leaves) and ``ctx`` an :class:`ObjCtx` of scenario
+constants.  Nothing here touches the host, so a population tuner vmaps
+(rollout + objective) over its parameter batch and the whole evaluation
+stays one device launch — the same one-jit discipline as
+``repro.core.experiments.Sweep``.
+
+The four primitive metrics mirror the host-side ``SimResult`` methods
+(``jain_index`` / ``p99_slowdown`` / ``ctrl_per_mb``) on the decimated
+trace, with one deliberate simplification: per-flow mean rate is
+``delivered / active-span`` instead of the host's completion-time
+bookkeeping — identical for window-mode flows, and a monotone proxy for
+volume-mode ones.  Gradient-based tuners differentiate these through
+the soft rollout (``repro.tune.soft``); the *decisions* (which
+parameter point wins) are always re-taken on the hard model via
+``Sweep.run`` + host metrics, so the proxy never gets the final word.
+
+Scales: tail and overhead metrics enter combinations in log space so a
+weighted scalarisation mixes O(1) terms —
+
+  ==============  ======================================  =========
+  name            objective value                         sense
+  ==============  ======================================  =========
+  goodput         delivered / offered capacity  [0, 1]    higher
+  jain            Jain fairness index           [0, 1]    higher
+  p99_slowdown    log(p99 flow slowdown)        [0, ~9]   lower
+  ctrl_overhead   log1p(notifications per MB)   [0, ~7]   lower
+  ==============  ======================================  =========
+
+``resolve`` turns a name, a ``{name: weight}`` dict or a callable into
+one higher-is-better scalar function (senses applied internally).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax.numpy as jnp
+
+_TINY = 1e-12
+
+
+class ObjCtx(NamedTuple):
+    """Scenario constants an objective needs beside the rollout."""
+
+    gen_rate: jnp.ndarray     # [F] f32 B/s offered
+    t_start: jnp.ndarray      # [F] f32 s
+    t_stop: jnp.ndarray       # [F] f32 s (inf = volume mode)
+    line_rate: jnp.ndarray    # [] f32 B/s
+    horizon: jnp.ndarray      # [] f32 s simulated
+    dt: jnp.ndarray           # [] f32 s
+
+
+def make_ctx(scn, line_rate: float, horizon: float, dt: float) -> ObjCtx:
+    """Build an :class:`ObjCtx` from a (host or device) scenario."""
+    f32 = lambda x: jnp.asarray(x, jnp.float32)
+    return ObjCtx(gen_rate=f32(scn.gen_rate), t_start=f32(scn.t_start),
+                  t_stop=f32(scn.t_stop), line_rate=f32(line_rate),
+                  horizon=f32(horizon), dt=f32(dt))
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _real(ctx: ObjCtx) -> jnp.ndarray:
+    """[F] f32 mask of flows with actual offered work (sweep padding
+    rows carry zero rate)."""
+    return (ctx.gen_rate > 0).astype(jnp.float32)
+
+
+def _flow_rate(final, ctx: ObjCtx) -> jnp.ndarray:
+    """[F] mean delivery rate over each flow's active span (B/s)."""
+    t1 = jnp.minimum(ctx.t_stop, ctx.horizon)
+    span = jnp.maximum(t1 - ctx.t_start, ctx.dt)
+    return final.delivered / span
+
+
+# ---------------------------------------------------------------------------
+# primitive metrics (natural sense; see SENSE below)
+# ---------------------------------------------------------------------------
+
+
+def goodput(final, trace, ctx: ObjCtx) -> jnp.ndarray:
+    """Delivered fraction of the offered (line-rate-capped) capacity."""
+    m = _real(ctx)
+    thr = _flow_rate(final, ctx)
+    cap = jnp.sum(m * jnp.minimum(ctx.gen_rate, ctx.line_rate))
+    return jnp.sum(m * thr) / jnp.maximum(cap, _TINY)
+
+
+def jain(final, trace, ctx: ObjCtx) -> jnp.ndarray:
+    """Jain fairness over per-flow mean rates, in [1/n, 1]."""
+    m = _real(ctx)
+    x = m * _flow_rate(final, ctx)
+    n = jnp.sum(m)
+    return jnp.sum(x) ** 2 / jnp.maximum(n * jnp.sum(x * x), _TINY)
+
+
+def p99_slowdown(final, trace, ctx: ObjCtx) -> jnp.ndarray:
+    """log of the ~p99 demand-normalised flow slowdown (lower better).
+
+    Slowdown = min(offered, line) / achieved.  The p99 is the order
+    statistic at rank ``ceil(0.01 * n_real)`` from the top of the real
+    flows (non-real rows sort to the bottom at slowdown 1); the sort
+    permutation is differentiable almost everywhere, and the log keeps
+    the value O(1) next to goodput/jain in scalarisations.
+    """
+    m = _real(ctx)
+    thr = _flow_rate(final, ctx)
+    ideal = jnp.minimum(ctx.gen_rate, ctx.line_rate)
+    s = ideal / jnp.maximum(thr, 1e-6 * ctx.line_rate)
+    s = jnp.where(m > 0, s, 1.0)
+    top = jnp.sort(s)[::-1]                       # descending
+    n = jnp.sum(m)
+    k = jnp.clip(jnp.ceil(0.01 * n).astype(jnp.int32) - 1, 0,
+                 s.shape[0] - 1)
+    return jnp.log(jnp.maximum(top[k], 1.0))
+
+
+def ctrl_overhead(final, trace, ctx: ObjCtx) -> jnp.ndarray:
+    """log1p of notification messages per delivered MB (lower better).
+
+    ``trace.ctrl`` accumulates (possibly fractional, under the soft
+    model) notification emissions per decimation window; the sum over
+    the trace is the run total.
+    """
+    msgs = jnp.sum(trace.ctrl)
+    mb = jnp.sum(final.delivered) / 1e6
+    return jnp.log1p(msgs / jnp.maximum(mb, 1e-3))
+
+
+OBJECTIVES: dict[str, Callable] = {
+    "goodput": goodput,
+    "jain": jain,
+    "p99_slowdown": p99_slowdown,
+    "ctrl_overhead": ctrl_overhead,
+}
+
+#: +1 = the metric is already higher-is-better; -1 = it is a cost.
+SENSE = {"goodput": 1.0, "jain": 1.0,
+         "p99_slowdown": -1.0, "ctrl_overhead": -1.0}
+
+#: The default scalarisation ``autotune`` optimises: mostly goodput,
+#: with fairness, tail and control-traffic regularisers.
+DEFAULT_WEIGHTS = {"goodput": 1.0, "jain": 0.25,
+                   "p99_slowdown": 0.15, "ctrl_overhead": 0.02}
+
+
+def weighted(weights: dict[str, float]) -> Callable:
+    """Higher-is-better scalarisation ``sum_k w_k * sense_k * metric_k``.
+
+    Weights are positive importances; senses are applied here, so
+    ``{"goodput": 1, "p99_slowdown": 0.1}`` rewards goodput and
+    penalises tail slowdown without sign gymnastics at the call site.
+    """
+    unknown = set(weights) - set(OBJECTIVES)
+    if unknown:
+        raise KeyError(f"unknown objective(s) {sorted(unknown)}; "
+                       f"have {sorted(OBJECTIVES)}")
+
+    def fn(final, trace, ctx):
+        tot = jnp.asarray(0.0, jnp.float32)
+        for name, w in sorted(weights.items()):
+            tot = tot + jnp.float32(w * SENSE[name]) \
+                * OBJECTIVES[name](final, trace, ctx)
+        return tot
+
+    return fn
+
+
+def resolve(objective) -> tuple[Callable, str]:
+    """(higher-is-better scalar fn, cache signature) from a name, a
+    ``{name: weight}`` dict, ``"default"`` or a raw callable."""
+    if callable(objective):
+        sig = getattr(objective, "__name__", None) or repr(objective)
+        return objective, f"callable:{sig}"
+    if objective == "default":
+        objective = DEFAULT_WEIGHTS
+    if isinstance(objective, str):
+        if objective not in OBJECTIVES:
+            raise KeyError(f"unknown objective {objective!r}; "
+                           f"have {sorted(OBJECTIVES)} or a weight dict")
+        name = objective
+        fn = lambda final, trace, ctx: \
+            jnp.float32(SENSE[name]) * OBJECTIVES[name](final, trace, ctx)
+        return fn, f"name:{name}"
+    if isinstance(objective, dict):
+        sig = ",".join(f"{k}={float(v):g}"
+                       for k, v in sorted(objective.items()))
+        return weighted(objective), f"weighted:{sig}"
+    raise TypeError(f"objective must be a name, weight dict or callable; "
+                    f"got {type(objective).__name__}")

@@ -1,0 +1,98 @@
+"""Temperature-smoothed relaxations of the fluid model's hard gates.
+
+The closed loop in ``core.fluid`` / ``core.cc`` is full of hard
+nonlinearities — PFC xoff/xon hysteresis, kmin/kmax marking thresholds,
+CNP suppression windows, rate clamps.  Each one is a ``jnp.where`` on a
+boolean, so ``jax.grad`` through the dt-scan sees zero gradient w.r.t.
+every CC constant that only acts through a threshold crossing.
+
+This module provides the smoothing primitives those sites use.  The
+contract, enforced by the golden/bitwise suites and the annealing test
+in ``tests/test_tune.py``:
+
+  * every softened site is written ``select(tau, soft_expr, hard_expr)``
+    where ``hard_expr`` is *literally the pre-existing hard code* — at
+    ``tau == 0`` the step is bitwise identical to the hard model;
+  * ``tau`` is ``StepParams.temperature``: traced data, so hard sweeps
+    and soft tuner rollouts share ONE compiled step (the soft branch is
+    a handful of extra elementwise ops, negligible next to the link
+    reductions);
+  * as ``tau -> 0`` the soft expressions converge pointwise to the hard
+    ones (sigmoid gates sharpen to step functions, softplus clamps to
+    min/max), so annealed optimisation lands on the hard dynamics.
+
+Gradient hygiene: ``jnp.where`` is a select, not arithmetic — the
+untaken branch's value is discarded, and its cotangent is multiplied by
+the (0/1) predicate, so the hard branch never pollutes ``jax.grad`` at
+``tau > 0``.  Blends (``gate*a + (1-gate)*b``) are only used where both
+operands are finite; sites with ``inf`` sentinels (waterfilling grants,
+severity mins) select instead of blending, because ``0 * inf = nan``.
+
+Pure ``jnp`` on purpose — ``core.fluid`` imports this module at the
+top level, so it must not import anything from ``repro.core``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: Additive floor on sigmoid/softplus widths (guards ``scale == 0``
+#: sites; the tau = 0 case is handled by :func:`safe_tau`).
+TINY = 1e-30
+
+
+def safe_tau(tau):
+    """``tau`` where positive, 1.0 at ``tau == 0``.
+
+    At temperature zero ``select`` discards the soft branch, but
+    ``jax.grad`` still differentiates it: a width of ``0 * scale``
+    would put ``x / width`` at +-inf and the backward pass would turn
+    the (correctly zero) cotangent into ``0 * inf = nan``.  Evaluating
+    the dead branch at tau = 1 keeps every intermediate and every VJP
+    finite without changing any tau > 0 value.
+    """
+    return jnp.where(tau > 0.0, tau, 1.0)
+
+
+def unit_gate(x, tau, scale):
+    """Soft step: ``sigmoid(x / (tau * scale))`` -> ``1[x > 0]`` as tau->0.
+
+    ``scale`` sets the natural units of ``x`` (port-buffer bytes, line
+    rate, a CNP window) so one dimensionless ``tau`` smooths every site
+    comparably: the transition band is ``O(tau * scale)`` wide.
+    """
+    return jax.nn.sigmoid(x / (safe_tau(tau) * scale + TINY))
+
+
+def select(tau, soft_expr, hard_expr):
+    """The soft expression at ``tau > 0``, the hard one (bitwise) at 0."""
+    return jnp.where(tau > 0.0, soft_expr, hard_expr)
+
+
+def pick(tau, gate, cond, a, b):
+    """Gated choice: hard ``where(cond, a, b)``, soft ``gate*a+(1-gate)*b``.
+
+    ``gate`` is the soft relaxation of the boolean ``cond`` (hard mode
+    carries it as an exact 0/1 float).  Operands must be finite — this
+    is a blend, not a select.
+    """
+    return select(tau, gate * a + (1.0 - gate) * b, jnp.where(cond, a, b))
+
+
+def softplus(x, width):
+    """``width * log(1 + exp(x / width))`` -> ``max(x, 0)`` as width->0."""
+    return width * jax.nn.softplus(x / (width + TINY))
+
+
+def clip(x, lo, hi, tau, scale):
+    """Two-sided soft clamp -> ``jnp.clip(x, lo, hi)`` bitwise at tau=0.
+
+    Soft form: a softplus hinge at each edge, transition band
+    ``O(tau * scale)`` wide.  Monotone in ``x`` and differentiable in
+    ``x``, ``lo`` and ``hi``.
+    """
+    w = safe_tau(tau) * scale + TINY
+    soft_lo = lo + softplus(x - lo, w)
+    soft_both = hi - softplus(hi - soft_lo, w)
+    return select(tau, soft_both, jnp.clip(x, lo, hi))
