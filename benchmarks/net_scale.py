@@ -11,6 +11,14 @@ cell sweeps {min, valiant, ugal} x all schemes in ONE launch and
 records delivered bytes per (scheme, routing) — the record asserts the
 paper-level ordering ``ugal >= min`` on that pattern.
 
+So does the PFC-pathology leg: the HoL-victim scenario runs the three
+paper schemes and records ``victim_slowdown`` / ``pause_s`` per scheme.
+The run fails unless Rev spares the victim better than DCQCN, which
+beats PFC-only (the paper's ordering), and — when the committed
+``BENCH_net.json`` already carries a ``pfc_pathology`` record — unless
+the Rev-vs-DCQCN margin stays within half of that baseline (the CI
+``pfc-pathology`` job's gate).
+
     PYTHONPATH=src python benchmarks/run.py --scale            # full
     PYTHONPATH=src python benchmarks/run.py --scale --quick    # CI-sized
 """
@@ -142,6 +150,62 @@ def run_routing_matrix(quick: bool = False, n_steps: int = 1200) -> dict:
     }
 
 
+def run_pathology_matrix(quick: bool = False, n_steps: int = 5000) -> dict:
+    """Victim-flow leg: the HoL-victim scenario x the three paper
+    schemes as one launch.  Records ``victim_slowdown`` / ``pause_s``
+    per scheme plus the ordering verdict the paper stakes its HoL
+    claim on (Rev spares the victim, DCQCN collaterally marks it,
+    PFC-only head-of-line blocks it)."""
+    from repro.core import CCSpec, Sweep
+    from repro.core.workloads import hol_victim_incast
+    from repro.net import FabricSpec
+
+    specs = {
+        "PFC_ONLY": CCSpec(marking="cp", notification="np",
+                           reaction="pfc"),
+        "DCQCN": CCSpec(marking="cp", notification="np", reaction="rp"),
+        "DCQCN_REV": CCSpec(marking="ecp", notification="enp",
+                            reaction="erp"),
+    }
+    spec = hol_victim_incast(4, 64).spec(fabric=FabricSpec.clos3(4))
+    t0 = time.perf_counter()
+    res = Sweep.grid(configs=specs, scenarios={"hol": spec}).run(
+        n_steps=n_steps)
+    sweep_s = time.perf_counter() - t0
+    vic = {s: round(float(res[f"{s}/hol"].victim_slowdown()), 4)
+           for s in specs}
+    pause = {s: round(float(res[f"{s}/hol"].pause_duration()), 6)
+             for s in specs}
+    return {
+        "name": "pfc_pathology",
+        "fabric": "clos64",
+        "workload": spec.label,
+        "n_steps": int(n_steps),
+        "n_points": len(res),
+        "sweep_s": round(sweep_s, 3),
+        "victim_slowdown": vic,
+        "pause_s": pause,
+        "rev_beats_dcqcn": bool(
+            vic["DCQCN_REV"] < vic["DCQCN"] < vic["PFC_ONLY"]),
+    }
+
+
+def pathology_baseline(path: str = BENCH_PATH) -> "dict | None":
+    """Most recent committed ``pfc_pathology`` record, if any."""
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (json.JSONDecodeError, OSError):
+        return None
+    for run_ in reversed(doc.get("runs", [])):
+        for r in reversed(run_.get("records", [])):
+            if r.get("name") == "pfc_pathology":
+                return r
+    return None
+
+
 def append_bench_record(records: list[dict], path: str = BENCH_PATH) -> None:
     doc = {"runs": []}
     if os.path.exists(path):
@@ -162,9 +226,13 @@ def main(quick: bool = False) -> list[tuple]:
     records = run_matrix(quick=quick)
     routing = run_routing_matrix(quick=quick)
     records.append(routing)
+    baseline = pathology_baseline()        # before this run appends
+    pathology = run_pathology_matrix(quick=quick)
+    records.append(pathology)
     append_bench_record(records)
     rows = []
-    for r in records[:-1]:
+    for r in records[:-2]:      # the fabric cells; routing + pathology
+        # records carry their own row formats below
         rows.append((
             f"net_scale.{r['name']}", r["sweep_s"] * 1e6,
             f"N={r['n_nodes']} L={r['n_links']} F={r['n_flows']} "
@@ -182,6 +250,24 @@ def main(quick: bool = False) -> list[tuple]:
         raise AssertionError(
             f"UGAL under-delivered vs minimal routing on the adversarial "
             f"pattern: {routing['delivered_mb']}")
+    vic = pathology["victim_slowdown"]
+    rows.append((
+        f"net_scale.{pathology['name']}", pathology["sweep_s"] * 1e6,
+        f"{pathology['n_points']}pt {pathology['workload']} "
+        f"vic REV={vic['DCQCN_REV']:.3f} DCQCN={vic['DCQCN']:.3f} "
+        f"PFC={vic['PFC_ONLY']:.3f} ordered={pathology['rev_beats_dcqcn']}"))
+    if not pathology["rev_beats_dcqcn"]:
+        raise AssertionError(
+            f"victim ordering violated (want REV < DCQCN < PFC_ONLY): "
+            f"{vic}")
+    if baseline is not None:
+        want = (baseline["victim_slowdown"]["DCQCN"]
+                - baseline["victim_slowdown"]["DCQCN_REV"])
+        got = vic["DCQCN"] - vic["DCQCN_REV"]
+        if got < 0.5 * want:
+            raise AssertionError(
+                f"Rev's victim-protection margin regressed vs the "
+                f"committed baseline: {got:.4f} < 0.5 * {want:.4f}")
     rows.append(("net_scale.bench_json", 0.0, BENCH_PATH))
     return rows
 

@@ -275,11 +275,15 @@ def dispatch(registry: StageRegistry, code, params: dict, ctx,
 class MarkCtx(NamedTuple):
     """Phase-4 context: per-(flow, hop) congestion signals.
 
-    ``B1_w``: occupancy of each hop's sink queue; ``present``: the flow
-    has bytes there; ``holds_queue``: hop owns a queue (not the
-    delivery hop); ``dem_next``/``grant_next``/``over_next``: the
-    flow's demand, waterfilled fair grant and oversubscription flag at
-    its *requested output* wire.
+    ``B1_w``: occupancy of each hop's sink queue — under multiple
+    virtual channels (``LinkParams.n_vcs > 1``) this is the flow's own
+    (wire, VC) lane, so marking never charges a flow for a sibling
+    VC's backlog; ``present``: the flow has bytes there;
+    ``holds_queue``: hop owns a queue (not the delivery hop);
+    ``dem_next``/``grant_next``/``over_next``: the flow's demand,
+    waterfilled fair grant and oversubscription flag at its *requested
+    output* wire (per-wire notions: grants share the wire's capacity
+    across all its VCs).
     """
 
     B1_w: jnp.ndarray         # [F, H] f32

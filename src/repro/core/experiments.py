@@ -108,6 +108,11 @@ class ScenarioSpec:
     # scenario serves a whole routing-mode sweep axis.
     n_paths: int = 1
     route_seed: int = 0           # VLB intermediate sampling seed
+    # virtual channels: how flows map onto the config's
+    # ``LinkParams.n_vcs`` queues ("slot" = detours on VC 1, "hop" =
+    # dateline escalation — see ``repro.core.routing.assign_vc``).
+    # Ignored (all VC 0) when the config runs a single VC.
+    vc_mode: str = "slot"
     # per-flow tuples (kind == "flowspec"); empty = broadcast the scalar
     flow_src: tuple[int, ...] = ()
     flow_dst: tuple[int, ...] = ()
@@ -116,6 +121,11 @@ class ScenarioSpec:
     flow_volume: tuple[float, ...] = ()
     flow_rate: tuple[float, ...] = ()          # B/s; empty = gen_rate
     flow_nic_buffer: tuple[float, ...] = ()    # B; empty = nic_buffer
+    # per-flow VC pin (overrides vc_mode on every hop; clipped to the
+    # config's n_vcs) and victim-flow designation for the PFC-pathology
+    # metrics (``SimResult.victim_slowdown``); empty = none
+    flow_vc: tuple[int, ...] = ()
+    flow_victim: tuple[bool, ...] = ()
 
     # -- canned specs -------------------------------------------------------
 
@@ -127,6 +137,8 @@ class ScenarioSpec:
         return cls(kind="pairs",
                    pairs=((0, 16), (1, 16), (4, 16), (8, 16), (3, 12)),
                    roll=roll, label=kw.pop("label", f"paper-roll{roll}"),
+                   flow_victim=kw.pop("flow_victim",
+                                      (False,) * 4 + (True,)),
                    **kw)
 
     @classmethod
@@ -139,7 +151,10 @@ class ScenarioSpec:
                    pairs=((0, 16), (1, 16), (4, 16), (8, 16), (3, 12)),
                    roll=roll, t_stop=float("inf"), volume=volume_bytes,
                    nic_buffer=kw.pop("nic_buffer", 2 * volume_bytes),
-                   label=kw.pop("label", f"paper-vol-roll{roll}"), **kw)
+                   label=kw.pop("label", f"paper-vol-roll{roll}"),
+                   flow_victim=kw.pop("flow_victim",
+                                      (False,) * 4 + (True,)),
+                   **kw)
 
     @classmethod
     def incast(cls, n_senders: int, dst: int = 16, *, victim: bool = True,
@@ -179,6 +194,10 @@ class ScenarioSpec:
                    flow_volume=wl.volume,
                    flow_rate=wl.rate or (),
                    flow_nic_buffer=nic or (),
+                   flow_victim=kw.pop(
+                       "flow_victim", getattr(wl, "victim", ()) or ()),
+                   flow_vc=kw.pop(
+                       "flow_vc", getattr(wl, "vc", ()) or ()),
                    label=kw.pop("label", wl.label), **kw)
 
     # -- compilation to tensors --------------------------------------------
@@ -269,6 +288,26 @@ class ScenarioSpec:
         # scalar stays scalar (host-side API compat); per-flow goes [F]
         nic = (self._per_flow(self.flow_nic_buffer, 0.0, F)
                if self.flow_nic_buffer else self.nic_buffer)
+        # virtual channels: only materialised when the config runs more
+        # than one, so single-VC scenarios stay byte-identical to the
+        # pre-VC builds (vc=None, victim still carried for metrics)
+        vc = None
+        n_vcs = int(getattr(cfg.link, "n_vcs", 1))
+        if n_vcs > 1:
+            from .routing import assign_vc
+            alt = alt_routes if alt_routes is not None \
+                else routes[:, None, :]
+            fv = np.asarray(self.flow_vc, np.int32) \
+                if self.flow_vc else None
+            vc = assign_vc(alt, n_vcs, mode=self.vc_mode, flow_vc=fv)
+        victim = None
+        if self.flow_victim:
+            victim = self._per_flow(
+                tuple(bool(v) for v in self.flow_victim), False, F,
+                dtype=bool)
+        elif self.kind == "incast" and self.victim is not None:
+            victim = np.zeros((F,), bool)
+            victim[-1] = True          # the appended victim pair
         return Scenario(
             routes=routes,
             hops=hops,
@@ -287,6 +326,8 @@ class ScenarioSpec:
             nic_buffer=nic,
             alt_routes=alt_routes,
             alt_hops=alt_hops,
+            vc=vc,
+            victim=victim,
         )
 
 
@@ -334,6 +375,16 @@ def pad_scenario(scn: Scenario, n_flows: int, n_hops: int,
         else:
             alt_routes[:F, :K, :H] = scn.alt_routes
             alt_hops[:F, :K] = scn.alt_hops
+    # VC padding: PAD flows/slots ride VC 0 (forced, so the incidence
+    # scratch mapping stays exact); victim padding is non-victim.
+    vc = None
+    if scn.vc is not None:
+        Kv = scn.vc.shape[1]
+        Kp = n_paths if alt_routes is not None else Kv
+        vc = np.zeros((n_flows, Kp, n_hops), np.int32)
+        vc[:F, :Kv, :H] = scn.vc
+    victim = None if scn.victim is None \
+        else pad_f(np.asarray(scn.victim, bool), False)
     return Scenario(
         routes=routes,
         hops=pad_f(scn.hops, 0),
@@ -353,14 +404,18 @@ def pad_scenario(scn: Scenario, n_flows: int, n_hops: int,
         if np.ndim(scn.nic_buffer) else scn.nic_buffer,
         alt_routes=alt_routes,
         alt_hops=alt_hops,
+        vc=vc,
+        victim=victim,
     )
 
 
-def stack_scenarios(scns: Sequence[Scenario]):
+def stack_scenarios(scns: Sequence[Scenario], n_vcs: int = 1):
     """Pad to common shape and stack into one batched ScenarioDev.
 
     Returns (batched ScenarioDev with leading run axis, padded host
-    scenarios, n_switches_max).
+    scenarios, n_switches_max).  ``n_vcs`` must match the sweep's
+    shared ``LinkParams.n_vcs`` (the batch shares one incidence
+    layout, so one static VC count).
     """
     F = max(s.routes.shape[0] for s in scns)
     H = max(s.routes.shape[1] for s in scns)
@@ -369,7 +424,7 @@ def stack_scenarios(scns: Sequence[Scenario]):
             for s in scns)
     n_sw = max(s.n_switches for s in scns)
     padded = [pad_scenario(s, F, H, L, n_paths=K) for s in scns]
-    devs = [scenario_device(s) for s in padded]
+    devs = [scenario_device(s, n_vcs=n_vcs) for s in padded]
     batched = jax.tree.map(lambda *xs: jnp.stack(xs), *devs)
     return batched, padded, n_sw
 
@@ -426,7 +481,7 @@ SWEEP_EXEC_CACHE = ExecutableCache(capacity=32, name="sweep")
 
 def _sweep_scan_fn(n_samples: int, trace_every: int, dt: float,
                    n_switches: int, reduce: str, dense_rows: int,
-                   use_kernels: bool, interpret: bool, mesh):
+                   use_kernels: bool, interpret: bool, n_vcs: int, mesh):
     """Build the (unjitted) sweep scan for one static configuration.
 
     The whole sweep is one vmap-of-(decimating)-scan.  With ``mesh`` the
@@ -442,10 +497,12 @@ def _sweep_scan_fn(n_samples: int, trace_every: int, dt: float,
                 lambda s, sd, par: fluid_step(
                     s, sd, par, dt=dt, n_switches=n_switches,
                     reduce=reduce, dense_rows=dense_rows,
-                    use_kernels=use_kernels, interpret=interpret)
+                    use_kernels=use_kernels, interpret=interpret,
+                    n_vcs=n_vcs)
             )(st, sd_b, par_b)
 
-        return decimating_scan(step, st_b, n_samples, trace_every, dt)
+        return decimating_scan(step, st_b, n_samples, trace_every, dt,
+                               n_vcs)
 
     if mesh is None:
         return scan_fn
@@ -517,6 +574,13 @@ class Sweep:
             raise ValueError(
                 f"sweep points disagree on sim.dt ({dts}) or "
                 f"trace_every ({kps}); they share one scan")
+        vcs = {int(getattr(p.cfg.link, "n_vcs", 1)) for p in self.points}
+        if len(vcs) > 1:
+            raise ValueError(
+                f"sweep points disagree on link.n_vcs ({sorted(vcs)}); "
+                f"the VC count is a static shape parameter shared by "
+                f"the whole batch — run them as separate sweeps")
+        self.n_vcs = vcs.pop()
 
     @classmethod
     def grid(cls, configs, scenarios) -> "Sweep":
@@ -585,7 +649,7 @@ class Sweep:
         cfg0 = self.points[0].cfg
         n_samples, k = _resolve_steps(cfg0, n_steps, trace_every)
         scns = [p.scenario for p in self.points]
-        sd_b, padded, n_sw = stack_scenarios(scns)
+        sd_b, padded, n_sw = stack_scenarios(scns, n_vcs=self.n_vcs)
         D = max(delay_depth(s) for s in padded)
         if min_delay_slots is not None:
             D = max(D, int(min_delay_slots))
@@ -615,20 +679,21 @@ class Sweep:
             dense_rows = 0
         elif dense_rows is None:
             dense_rows = 0
-            mls = [dense_reduce_rows(s) for s in padded]
+            mls = [dense_reduce_rows(s, self.n_vcs) for s in padded]
             if 0 not in mls:
                 s0 = padded[0]
                 K = (1 if s0.alt_routes is None
                      else s0.alt_routes.shape[1])
                 dense_rows = clamp_dense_rows(
-                    max(mls), s0.capacity.shape[0],
+                    max(mls), s0.capacity.shape[0] * self.n_vcs,
                     s0.routes.shape[0] * K * s0.routes.shape[1])
         elif dense_rows > 0 and any(
-                not 0 < dense_reduce_rows(s) <= dense_rows
+                not 0 < dense_reduce_rows(s, self.n_vcs) <= dense_rows
                 for s in padded):
             dense_rows = 0           # can't cover the batch: safe path
         static = (n_samples, k, float(cfg0.sim.dt), n_sw, reduce,
-                  int(dense_rows), use_kernels, interpret, mesh)
+                  int(dense_rows), use_kernels, interpret, self.n_vcs,
+                  mesh)
         exec_fn = _sweep_executable(static, (st_b, sd_b, par_b))
         final, tr = exec_fn(st_b, sd_b, par_b)
         times = (np.arange(n_samples) + 1) * k * cfg0.sim.dt
@@ -708,7 +773,10 @@ class SweepResult:
             n_nonmin=tr.n_nonmin[r],
             final=_slice_final(self.final, r, F),
             ctrl=tr.ctrl[r][:, :F],
-            trace_every=self.trace_every)
+            trace_every=self.trace_every,
+            pause_time=None if tr.pause_time is None
+            else tr.pause_time[r],
+            vc_stall=None if tr.vc_stall is None else tr.vc_stall[r])
 
     def items(self):
         for i, p in enumerate(self.points):

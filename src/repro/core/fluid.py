@@ -108,6 +108,16 @@ class Scenario(NamedTuple):
     # None = single-path scenario (selection is a no-op).
     alt_routes: "np.ndarray | None" = None    # [F, K, H] int32, PAD-padded
     alt_hops: "np.ndarray | None" = None      # [F, K] int32 (0 = no path)
+    # static virtual-channel assignment per candidate hop (values in
+    # [0, n_vcs); see ``repro.core.routing.assign_vc``).  None = all
+    # VC 0.  Only read when the config's ``LinkParams.n_vcs > 1``;
+    # under n_vcs = 1 every VC collapses onto the single wire queue.
+    vc: "np.ndarray | None" = None            # [F, K, H] int32
+    # victim-flow mask for the PFC-pathology metrics: flows that do NOT
+    # contribute to the congestion under test but share fabric with it
+    # (``SimResult.victim_slowdown`` aggregates over these).  None = no
+    # designated victims.
+    victim: "np.ndarray | None" = None        # [F] bool
 
 
 class ScenarioDev(NamedTuple):
@@ -130,6 +140,10 @@ class ScenarioDev(NamedTuple):
     nic_buffer: jnp.ndarray   # [F] f32 (host scalars broadcast per flow)
     alt_routes: jnp.ndarray   # [F, K, H] int32 (K = 1 mirrors ``routes``)
     alt_hops: jnp.ndarray     # [F, K] int32
+    # static VC per candidate hop (all-zero when the scenario has none);
+    # only consulted by ``fluid_step(..., n_vcs > 1)`` — under one VC
+    # the queue index is the wire index and this tensor is dead data.
+    vc: jnp.ndarray           # [F, K, H] int32 in [0, n_vcs)
     # per-flow ERP recovery jitter (Weyl sequence), hoisted here so the
     # step never rebuilds host constants inside a trace
     jitter: jnp.ndarray       # [F] f32
@@ -190,10 +204,13 @@ class FluidState(NamedTuple):
     offered: jnp.ndarray      # [F] bytes the generator admitted into nicq
     dropped: jnp.ndarray      # [F] generator overflow (app backpressure)
     est: jnp.ndarray          # [F, H] EWMA crossing rate per wire (B/s)
-    # Pause level per wire: exact 0/1 in hard mode (temperature == 0),
-    # fractional under the soft PFC hysteresis — float32 so the pause
-    # gate is a differentiable multiplier instead of a boolean select.
-    paused: jnp.ndarray       # [L] f32
+    # Pause level per (wire, VC) queue: exact 0/1 in hard mode
+    # (temperature == 0), fractional under the soft PFC hysteresis —
+    # float32 so the pause gate is a differentiable multiplier instead
+    # of a boolean select.  Flat [L * n_vcs] layout (queue q of wire w
+    # at w * n_vcs + q), so the single-VC model keeps its legacy [L]
+    # shape bit-for-bit.
+    paused: jnp.ndarray       # [L * n_vcs] f32
     # reaction-point state (DCQCN RP and ERP share slots where sensible)
     rate: jnp.ndarray         # [F] current injection rate
     rp_target: jnp.ndarray    # [F]
@@ -231,6 +248,13 @@ class StepTrace(NamedTuple):
     # sampled) by the decimating scan, it feeds the control-overhead
     # objective in repro.tune and SimResult.summary().
     ctrl: jnp.ndarray         # [F] f32 notifications emitted this step
+    # PFC pathology instrumentation (accumulated, like ``ctrl``):
+    # ``pause_time`` is wire-seconds of pause asserted this step
+    # (sum over queues of pause level x dt); ``vc_stall`` splits the
+    # same quantity per VC ([n_vcs], so [1] in the single-VC model) —
+    # the per-lane stall budget a pause storm burns.
+    pause_time: jnp.ndarray   # [] f32 wire-seconds paused this step
+    vc_stall: jnp.ndarray     # [V] f32 per-VC wire-seconds paused
 
 
 DELAY_SLOTS = 32              # legacy fixed delay-line depth (see below)
@@ -308,12 +332,18 @@ def _cached_put(x: np.ndarray, dtype) -> jnp.ndarray:
                      lambda: jnp.asarray(x))
 
 
-def _incidence(alt_routes: np.ndarray, n_links: int):
+def _incidence(alt_routes: np.ndarray, n_links: int,
+               vc: np.ndarray | None = None, n_vcs: int = 1):
     """``link_incidence`` memoised on route-stack content (the sort is
-    O(FKH log FKH) on host; grid points sharing a fabric pay it once)."""
-    return _memo_lru(_INC_CACHE, _INC_CACHE_SIZE,
-                     _digest(alt_routes) + (n_links,),
-                     lambda: link_incidence(alt_routes, n_links))
+    O(FKH log FKH) on host; grid points sharing a fabric pay it once).
+    The key carries the VC layout too: the same routes under a
+    different VC assignment sort into different (wire, VC) queues."""
+    key = _digest(alt_routes) + (n_links, n_vcs)
+    if n_vcs > 1 and vc is not None:
+        key = key + _digest(vc)
+    return _memo_lru(_INC_CACHE, _INC_CACHE_SIZE, key,
+                     lambda: link_incidence(alt_routes, n_links,
+                                            vc=vc, n_vcs=n_vcs))
 
 
 def _pool_incidence(sink_switch: np.ndarray, n_switches: int):
@@ -344,16 +374,42 @@ def clamp_dense_rows(ml: int, n_links: int, n_entries: int) -> int:
     return ml
 
 
-def dense_reduce_rows(scn: Scenario) -> int:
+def _scenario_vc(scn: Scenario, alt_routes: np.ndarray,
+                 n_vcs: int) -> np.ndarray:
+    """Validated [F, K, H] VC tensor for a scenario (all-zero default).
+
+    ``n_vcs = 1`` always collapses to VC 0 — running a VC-annotated
+    scenario under a single-VC config degenerates to the shared-queue
+    model, by design.  With more VCs the assignment must fit, and PAD
+    hops are forced to VC 0 so they land on the incidence scratch
+    segment exactly.
+    """
+    if n_vcs == 1 or scn.vc is None:
+        return np.zeros(alt_routes.shape, np.int32)
+    vc = np.asarray(scn.vc, np.int32)
+    if vc.shape != alt_routes.shape:
+        raise ValueError(
+            f"Scenario.vc shape {vc.shape} != candidate stack shape "
+            f"{alt_routes.shape}")
+    if vc.min(initial=0) < 0 or vc.max(initial=0) >= n_vcs:
+        raise ValueError(
+            f"Scenario.vc entries must lie in [0, {n_vcs}) "
+            f"(got [{vc.min()}, {vc.max()}]); rebuild the assignment "
+            f"for this n_vcs (routing.assign_vc clips for you)")
+    return np.where(alt_routes == PAD, 0, vc).astype(np.int32)
+
+
+def dense_reduce_rows(scn: Scenario, n_vcs: int = 1) -> int:
     """Static row count for the dense-CSR fused reduction (0 = disable).
 
-    The fused reduction can run scatter-free: lay each link's (sorted)
-    contributors out as a dense [L, rows] table derived from the CSR
-    offsets and accumulate positions left-to-right — bit-identical to
-    the sequential scatter, but pure gathers + vector adds.  The table
-    blows up with load skew (rows = max contributors on one link), so
-    scenarios past ``DENSE_ROWS_CAP`` — or whose table would dwarf the
-    incidence itself — report 0 and use the segment-sum engine.
+    The fused reduction can run scatter-free: lay each (wire, VC)
+    queue's (sorted) contributors out as a dense [L * n_vcs, rows]
+    table derived from the CSR offsets and accumulate positions
+    left-to-right — bit-identical to the sequential scatter, but pure
+    gathers + vector adds.  The table blows up with load skew (rows =
+    max contributors on one queue), so scenarios past
+    ``DENSE_ROWS_CAP`` — or whose table would dwarf the incidence
+    itself — report 0 and use the segment-sum engine.
     """
     alt = scn.routes[:, None, :] if scn.alt_routes is None \
         else scn.alt_routes
@@ -361,17 +417,21 @@ def dense_reduce_rows(scn: Scenario) -> int:
     L = scn.capacity.shape[0]
     if L == 0:
         return 0
-    _, _, off = _incidence(alt, L)
-    ml = int(np.max(off[1:L + 1] - off[:L]))
-    return clamp_dense_rows(ml, L, alt.size)
+    vc = _scenario_vc(scn, alt, n_vcs)
+    S = L * n_vcs
+    _, _, off = _incidence(alt, L, vc, n_vcs)
+    ml = int(np.max(off[1:S + 1] - off[:S]))
+    return clamp_dense_rows(ml, S, alt.size)
 
 
-def scenario_device(scn: Scenario) -> ScenarioDev:
+def scenario_device(scn: Scenario, n_vcs: int = 1) -> ScenarioDev:
     """Move one scenario's tensors to device-ready arrays.
 
     Fabric-shaped tensors (routes, capacities, incidence) go through a
     content-keyed placement cache: grid points sharing a ``FabricSpec``
-    upload them once instead of once per point.
+    upload them once instead of once per point.  ``n_vcs`` (static,
+    from ``LinkParams.n_vcs``) keys the incidence by (wire, VC) queue;
+    the default 1 is byte-identical to the legacy single-queue layout.
     """
     if scn.alt_routes is None:          # single-path: K = 1 mirror
         alt_routes = scn.routes[:, None, :]
@@ -381,12 +441,14 @@ def scenario_device(scn: Scenario) -> ScenarioDev:
     alt_routes = np.asarray(alt_routes, np.int32)
     F = scn.routes.shape[0]
     L = scn.capacity.shape[0]
-    perm, seg, off = _incidence(alt_routes, L)
+    vc = _scenario_vc(scn, alt_routes, n_vcs)
+    perm, seg, off = _incidence(alt_routes, L, vc, n_vcs)
     pool_perm, pool_seg = _pool_incidence(
         np.asarray(scn.sink_switch, np.int32), int(scn.n_switches))
     return ScenarioDev(
         alt_routes=_cached_put(alt_routes, np.int32),
         alt_hops=_cached_put(alt_hops, np.int32),
+        vc=_cached_put(vc, np.int32),
         gen_rate=jnp.asarray(scn.gen_rate, jnp.float32),
         t_start=jnp.asarray(scn.t_start, jnp.float32),
         t_stop=jnp.asarray(scn.t_stop, jnp.float32),
@@ -462,6 +524,7 @@ def init_state(scn: Scenario, cfg: "CCConfig | CCSpec",
                delay_slots: int | None = None) -> FluidState:
     F, H = scn.routes.shape
     L = scn.capacity.shape[0]
+    V = int(getattr(cfg.link, "n_vcs", 1))
     D = delay_depth(scn) if delay_slots is None \
         else _check_delay(scn, delay_slots)
     line = jnp.asarray(np.minimum(scn.gen_rate, cfg.link.line_rate),
@@ -471,7 +534,7 @@ def init_state(scn: Scenario, cfg: "CCConfig | CCSpec",
         qh=jnp.zeros((F, H), jnp.float32),
         nicq=z_f, delivered=z_f, offered=z_f, dropped=z_f,
         est=jnp.zeros((F, H), jnp.float32),
-        paused=jnp.zeros((L,), jnp.float32),
+        paused=jnp.zeros((L * V,), jnp.float32),
         rate=line,
         rp_target=line,
         alpha=jnp.full((F,), cfg.dcqcn.alpha_init, jnp.float32),
@@ -490,7 +553,7 @@ def init_state(scn: Scenario, cfg: "CCConfig | CCSpec",
 def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
                dt: float, n_switches: int, reduce: str = "fused",
                dense_rows: int = 0, use_kernels: bool = False,
-               interpret: bool = False):
+               interpret: bool = False, n_vcs: int = 1):
     """One ``dt`` update: (state, scenario, params) -> (state, trace).
 
     Pure in all array arguments; ``dt`` / ``n_switches`` and the
@@ -522,6 +585,16 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     ``repro.kernels.cc_step`` — one HBM round trip per state vector
     instead of one per intermediate.  ``interpret=True`` runs every
     Pallas kernel in interpreter mode (CPU tests).
+
+    ``n_vcs`` (static, ``LinkParams.n_vcs``) splits every wire's input
+    buffer into that many virtual-channel queues with independent
+    backlog, FIFO order and PFC pause state (per-VC thresholds =
+    port thresholds / n_vcs); wire *capacity* stays shared, served
+    across VCs in proportion to drainable backlog.  Per-wire
+    quantities (fair grants, oversubscription, the shared pool, UGAL
+    path cost) are per-VC sums folded back per wire.  ``n_vcs = 1``
+    takes statically identical code paths to the legacy single-queue
+    model — bitwise, not just numerically.
     """
     if reduce not in ("fused", "pallas", "scat"):
         raise ValueError(
@@ -529,8 +602,18 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     fused = reduce != "scat"
     F, K, H = sd.alt_routes.shape
     L = sd.cap_ext.shape[0] - 1
+    V = int(n_vcs)
+    S = L * V                 # (wire, VC) queue count; S == L when V == 1
     D = st.trig_buf.shape[0]
     dt = jnp.float32(dt)
+
+    def to_wire(x_ext):
+        """Fold a per-queue [S + 1] sum to per-wire [L + 1] (keep
+        scratch).  Static identity at V == 1 — zero graph change."""
+        if V == 1:
+            return x_ext
+        return jnp.concatenate(
+            [x_ext[:S].reshape(L, V).sum(axis=1), x_ext[S:]])
     # soft-relaxation temperature: every hard gate below is written
     # ``soft.select(tau, soft_expr, hard_expr)`` with the hard branch
     # verbatim, so tau == 0 is bitwise the hard model (repro.tune).
@@ -550,23 +633,24 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
 
     if fused and dense_rows:
         # dense-CSR row table, shared by every reduction pass this
-        # step: position p of link l reads sorted row off[l] + p (the
+        # step: position p of queue q reads sorted row off[q] + p (the
         # sentinel F*K*H reads an all-zero row).
-        _lens = sd.red_off[1:L + 1] - sd.red_off[:L]        # [L]
+        _lens = sd.red_off[1:S + 1] - sd.red_off[:S]        # [S]
         _pos = jnp.arange(dense_rows, dtype=jnp.int32)[None, :]
         dense_idx = jnp.where(_pos < _lens[:, None],
-                              sd.red_off[:L, None] + _pos,
+                              sd.red_off[:S, None] + _pos,
                               F * K * H).reshape(-1)
 
     def link_sums(channels, k_sel):
-        """All per-link sums of the [F, H] ``channels`` in ONE sweep.
+        """All per-queue sums of the [F, H] ``channels`` in ONE sweep.
 
         Channels are laid out on candidate slot ``k_sel`` per flow
-        (zeros elsewhere) and gathered into the link-sorted incidence
-        order; one [F*K*H, C] pass produces every [L+1] per-link
-        vector at once instead of C scatters.  The pass is summed by
+        (zeros elsewhere) and gathered into the queue-sorted incidence
+        order; one [F*K*H, C] pass produces every [S+1] per-(wire, VC)
+        vector at once instead of C scatters (S == L when V == 1, in
+        which case "queue" is just "wire").  The pass is summed by
         the dense-CSR tiles, the Pallas kernel, or a sorted segment
-        sum — all three accumulate each link's contributors in the
+        sum — all three accumulate each queue's contributors in the
         same order, so the result is bit-identical across engines.
         """
         data = jnp.stack(channels, axis=-1)                 # [F, H, C]
@@ -579,25 +663,25 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
         data = jnp.take(data.reshape(F * K * H, C), sd.red_perm, axis=0)
         if reduce == "pallas":
             from repro.kernels.fluid_reduce import segment_reduce
-            sums = segment_reduce(data, sd.red_seg, L + 1,
+            sums = segment_reduce(data, sd.red_seg, S + 1,
                                   interpret=interpret)
         elif dense_rows:
             data_ext = jnp.concatenate(
                 [data, jnp.zeros((1, C), jnp.float32)])
             dense = jnp.take(data_ext, dense_idx,
-                             axis=0).reshape(L, dense_rows, C)
+                             axis=0).reshape(S, dense_rows, C)
 
             def body(p, acc):
                 return acc + jax.lax.dynamic_slice_in_dim(
                     dense, p, 1, 1)[:, 0]
 
             acc = jax.lax.fori_loop(0, dense_rows, body,
-                                    jnp.zeros((L, C), jnp.float32))
+                                    jnp.zeros((S, C), jnp.float32))
             sums = jnp.concatenate(
                 [acc, jnp.zeros((1, C), jnp.float32)])
         else:
             sums = jax.ops.segment_sum(data, sd.red_seg,
-                                       num_segments=L + 1,
+                                       num_segments=S + 1,
                                        indices_are_sorted=True)
         return [sums[:, c] for c in range(C)]
 
@@ -616,10 +700,17 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
         if fused:
             (B_prev,) = link_sums([jnp.where(hq_old, st.qh, 0.0)],
                                   st.path_idx)
-        else:
+            B_prev = to_wire(B_prev)
+        elif V == 1:
             B_prev = jnp.zeros((L + 1,), jnp.float32).at[
                 jnp.where(v_old, routes_old, L)].add(
                     jnp.where(hq_old, st.qh, 0.0))
+        else:
+            vc_old = jnp.take_along_axis(
+                sd.vc, st.path_idx[:, None, None], axis=1)[:, 0]
+            B_prev = to_wire(jnp.zeros((S + 1,), jnp.float32).at[
+                jnp.where(v_old, routes_old * V + vc_old, S)].add(
+                    jnp.where(hq_old, st.qh, 0.0)))
 
         def path_cost(k_idx):
             """UGAL cost: hop count x backlog along the candidate."""
@@ -653,14 +744,22 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
 
     valid = routes != PAD
     widx = jnp.where(valid, routes, L)         # PAD -> scratch slot L
+    if V == 1:
+        qidx = widx                            # queue == wire, verbatim
+    else:
+        # VC of the selected candidate per hop; PAD hops carry VC 0
+        # (enforced host-side), so qidx == S exactly at the scratch.
+        vc_sel = sd.vc[:, 0, :] if K == 1 else jnp.take_along_axis(
+            sd.vc, path_idx[:, None, None], axis=1)[:, 0]
+        qidx = jnp.where(valid, widx * V + vc_sel, S)
     is_last = valid & (arange_h == (hops[:, None] - 1))
     holds_queue = valid & (arange_h < (hops[:, None] - 1))
     eps_rate = jnp.float32(1e6)                # B/s: "active" demand
 
     def scat(values_fh, init=0.0):
-        """Scatter-add a [F,H] quantity onto per-link slots [L+1]."""
-        out = jnp.full((L + 1,), init, jnp.float32)
-        return out.at[widx].add(values_fh)
+        """Scatter-add a [F,H] quantity onto per-queue slots [S+1]."""
+        out = jnp.full((S + 1,), init, jnp.float32)
+        return out.at[qidx].add(values_fh)
 
     # ---- 1. generation ----------------------------------------------------
     if use_kernels:
@@ -685,8 +784,8 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     src_q = jnp.concatenate([src_inj[:, None], st.qh[:, :-1]], axis=1)
     src_q = jnp.where(valid, src_q, 0.0)
 
-    pause_l = jnp.concatenate([st.paused, jnp.zeros((1,), jnp.float32)])
-    wire_open = 1.0 - pause_l[widx]                    # [F,H] 1 = drainable
+    pause_q = jnp.concatenate([st.paused, jnp.zeros((1,), jnp.float32)])
+    wire_open = 1.0 - pause_q[qidx]                    # [F,H] 1 = drainable
 
     # strict-FIFO HoL factor per link queue: share of the queue whose
     # *next* wire is currently drainable.  ``wire_open`` is an exact
@@ -704,11 +803,17 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
         num = scat(q_here * next_open)
         den = scat(q_here)
         sum_w = scat(weight)
+    # FIFO factor is per (wire, VC) queue — a paused-head VC no longer
+    # stalls its siblings, only its own lane (the HoL fix VCs buy).
     fifo_ok = jnp.where(den > 0, num / jnp.maximum(den, 1e-9), 1.0)
+    # ... but the byte budget is per *wire*: capacity is shared across
+    # VCs in proportion to drainable backlog.  fifo_ok <= 1, so the
+    # summed per-VC grants never exceed the wire's C*dt.
+    sum_w_w = to_wire(sum_w)
 
-    budget = caps_w * dt * fifo_ok[widx]
-    share = jnp.where(sum_w[widx] > 0,
-                      budget * weight / jnp.maximum(sum_w[widx], 1e-9),
+    budget = caps_w * dt * fifo_ok[qidx]
+    share = jnp.where(sum_w_w[widx] > 0,
+                      budget * weight / jnp.maximum(sum_w_w[widx], 1e-9),
                       0.0)
     T = jnp.minimum(weight, share)                     # bytes crossing h
 
@@ -736,44 +841,61 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
             [jnp.where(holds_queue, qh, 0.0),
              act.astype(jnp.float32),
              jnp.where(act, dem, 0.0)], path_idx)
-        B = B_ext[:L]                                  # [L] sink queues
+        B = B_ext[:S]                           # [S] per-(wire, VC) queues
     else:
-        B = scat(jnp.where(holds_queue, qh, 0.0))[:L]
+        B = scat(jnp.where(holds_queue, qh, 0.0))[:S]
         n_act = scat(act.astype(jnp.float32), init=0.0)
         sum_dem = scat(jnp.where(act, dem, 0.0))
-    # xoff/xon hysteresis: hard = set above xoff, clear below xon, hold
-    # in between; soft = the pause level relaxes toward 1 (0) through a
-    # sigmoid band O(tau * port_buffer) wide around each threshold.
-    paused_h = jnp.where(B > par.xoff, 1.0,
-                         jnp.where(B < par.xon, 0.0, st.paused))
-    g_on = soft.unit_gate(B - par.xoff, tau, par.port_buffer)
-    g_off = soft.unit_gate(par.xon - B, tau, par.port_buffer)
+    # fair grants / oversubscription below are per-wire notions
+    n_act_w = to_wire(n_act)
+    sum_dem_w = to_wire(sum_dem)
+    # xoff/xon hysteresis per queue: hard = set above xoff, clear below
+    # xon, hold in between; soft = the pause level relaxes toward 1 (0)
+    # through a sigmoid band O(tau * port_buffer) wide around each
+    # threshold.  With V > 1 the port thresholds split evenly across
+    # the VC queues (static branch — V == 1 keeps the exact scalars).
+    if V == 1:
+        xoff_q, xon_q = par.xoff, par.xon
+    else:
+        xoff_q, xon_q = par.xoff / V, par.xon / V
+    paused_h = jnp.where(B > xoff_q, 1.0,
+                         jnp.where(B < xon_q, 0.0, st.paused))
+    g_on = soft.unit_gate(B - xoff_q, tau, par.port_buffer)
+    g_off = soft.unit_gate(xon_q - B, tau, par.port_buffer)
     paused_s = st.paused + (1.0 - st.paused) * g_on - st.paused * g_off
     paused = soft.select(tau, paused_s, paused_h)
     sink_l = sd.sink_ext[:L]
+    # shared pool counts the wire's whole input buffer across its VCs
+    B_wire = B if V == 1 else B.reshape(L, V).sum(axis=1)
     if fused:
         pool = jax.ops.segment_sum(
-            jnp.take(jnp.where(sink_l >= 0, B, 0.0), sd.pool_perm),
+            jnp.take(jnp.where(sink_l >= 0, B_wire, 0.0), sd.pool_perm),
             sd.pool_seg, num_segments=n_switches + 1,
             indices_are_sorted=True)[:n_switches]
     else:
         pool = jnp.zeros((n_switches,), jnp.float32).at[
-            jnp.maximum(sink_l, 0)].add(jnp.where(sink_l >= 0, B, 0.0))
+            jnp.maximum(sink_l, 0)].add(
+                jnp.where(sink_l >= 0, B_wire, 0.0))
     pool_hot = soft.select(
         tau,
         soft.unit_gate(pool - par.pool_xoff, tau, par.port_buffer),
         (pool > par.pool_xoff).astype(jnp.float32))
-    # max of pause levels == boolean OR on the exact 0/1 hard values
-    paused = jnp.maximum(
-        paused, jnp.where(sink_l >= 0,
-                          pool_hot[jnp.maximum(sink_l, 0)], 0.0))
+    # max of pause levels == boolean OR on the exact 0/1 hard values;
+    # a hot pool pauses every VC of the wire (pause is per-queue state)
+    pool_pause = jnp.where(sink_l >= 0,
+                           pool_hot[jnp.maximum(sink_l, 0)], 0.0)
+    if V > 1:
+        pool_pause = jnp.repeat(pool_pause, V)
+    paused = jnp.maximum(paused, pool_pause)
 
     # ---- 4. marking (cc.MARKING dispatch) ---------------------------------
+    # B1_w: occupancy of the flow's own (wire, VC) queue — marking sees
+    # the lane the flow actually sits in, not its siblings' backlog
     B1 = jnp.concatenate([B, jnp.zeros((1,), jnp.float32)])
-    B1_w = B1[widx]
+    B1_w = B1[qidx]
     present = (qh > 0) | (T > 0)
 
-    share0 = caps_w / jnp.maximum(n_act[widx], 1.0)
+    share0 = caps_w / jnp.maximum(n_act_w[widx], 1.0)
     under = dem < share0
     if fused:
         surplus, n_heavy = link_sums(
@@ -782,16 +904,18 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     else:
         surplus = scat(jnp.where(act & under, share0 - dem, 0.0))
         n_heavy = scat((act & ~under).astype(jnp.float32))
+    surplus_w = to_wire(surplus)
+    n_heavy_w = to_wire(n_heavy)
     grant = jnp.where(
         under, dem,
-        share0 + surplus[widx] / jnp.maximum(n_heavy[widx], 1.0))
+        share0 + surplus_w[widx] / jnp.maximum(n_heavy_w[widx], 1.0))
     grant = jnp.where(act, grant, caps_w)
     # wire h oversubscribed?  (soft: sigmoid in the demand excess; the
     # PAD slot's cap is inf, so the soft gate is exactly 0 there too)
     oversub = soft.select(
         tau,
-        soft.unit_gate(sum_dem[widx] - caps_w, tau, par.line_rate),
-        (sum_dem[widx] > caps_w).astype(jnp.float32))
+        soft.unit_gate(sum_dem_w[widx] - caps_w, tau, par.line_rate),
+        (sum_dem_w[widx] > caps_w).astype(jnp.float32))
     # ... all shifted to the *next* wire (the flow's requested output)
     inf_col = jnp.full((F, 1), jnp.inf, jnp.float32)
     grant_next = jnp.concatenate([grant[:, 1:], inf_col], axis=1)
@@ -919,7 +1043,9 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
         n_paused=jnp.sum((paused > 0.5).astype(jnp.int32)),
         marked=marked, cnp=cnp > 0,
         n_nonmin=jnp.sum((path_idx > 0).astype(jnp.int32)),
-        ctrl=emit)
+        ctrl=emit,
+        pause_time=jnp.sum(paused) * dt,
+        vc_stall=paused.reshape(L, V).sum(axis=0) * dt)
     return new, trace
 
 
@@ -940,16 +1066,19 @@ def make_step_fn(scn: Scenario, cfg: "CCConfig | CCSpec",
     if delay_slots is not None:
         _check_delay(scn, delay_slots)
     check_routing_paths(cfg, scn)
-    sd = scenario_device(scn)
+    n_vcs = int(getattr(cfg.link, "n_vcs", 1))
+    sd = scenario_device(scn, n_vcs=n_vcs)
     par = step_params(cfg)
     n_sw = int(scn.n_switches)
     dt = float(cfg.sim.dt)
     if dense_rows is None:
-        dense_rows = dense_reduce_rows(scn) if reduce == "fused" else 0
+        dense_rows = dense_reduce_rows(scn, n_vcs) \
+            if reduce == "fused" else 0
 
     def step(st: FluidState):
         return fluid_step(st, sd, par, dt=dt, n_switches=n_sw,
                           reduce=reduce, dense_rows=dense_rows,
-                          use_kernels=use_kernels, interpret=interpret)
+                          use_kernels=use_kernels, interpret=interpret,
+                          n_vcs=n_vcs)
 
     return step

@@ -41,6 +41,14 @@ class LinkParams:
     # config error; hysteresis keeps pause from chattering at the boundary.
     pfc_xoff_frac: float = 0.75
     pfc_xon_frac: float = 0.50
+    # Virtual channels per wire.  Each wire's input buffer splits into
+    # ``n_vcs`` independent queues with their own PFC pause state and
+    # FIFO order (per-VC thresholds are the port thresholds / n_vcs);
+    # capacity stays shared per wire.  VC assignment is scenario data
+    # (``Scenario.vc``, default: Valiant detours ride VC 1 so they stop
+    # HoL-blocking minimal traffic).  ``n_vcs = 1`` is bit-identical to
+    # the single-queue model (golden-grid held).
+    n_vcs: int = 1
 
     def __post_init__(self):
         if self.pfc_xoff_frac <= self.pfc_xon_frac:
@@ -49,6 +57,11 @@ class LinkParams:
                 f"hysteresis to work: pfc_xoff_frac={self.pfc_xoff_frac} "
                 f"<= pfc_xon_frac={self.pfc_xon_frac} would pause and "
                 f"unpause in the same region (or never unpause)")
+        if not (isinstance(self.n_vcs, int) and self.n_vcs >= 1):
+            raise ValueError(
+                f"n_vcs={self.n_vcs!r} must be a positive int: it is a "
+                f"static shape parameter (per-VC queue/pause state is "
+                f"[n_links * n_vcs])")
 
 
 @dataclasses.dataclass(frozen=True)

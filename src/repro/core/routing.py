@@ -96,7 +96,8 @@ def validate_routes(topo: Topology, routes: np.ndarray) -> None:
                     f"{topo.link_src[hops[i+1]]}")
 
 
-def link_incidence(alt_routes: np.ndarray, n_links: int
+def link_incidence(alt_routes: np.ndarray, n_links: int,
+                   vc: np.ndarray | None = None, n_vcs: int = 1
                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Sorted (flow, path, hop) -> link incidence for fused reductions.
 
@@ -108,20 +109,82 @@ def link_incidence(alt_routes: np.ndarray, n_links: int
     h) order, so sequential segment accumulation is bit-identical to
     the legacy ``.at[widx].add`` path.
 
-    Returns ``(perm, seg, offsets)``:
+    With ``n_vcs > 1`` the segment key becomes the *(link, VC) queue*
+    ``link * n_vcs + vc[f, k, h]`` (``vc`` same shape as
+    ``alt_routes``, values in [0, n_vcs)), so every per-queue sum of
+    the per-VC fluid model rides the same single pass; PAD entries map
+    to the scratch segment ``n_links * n_vcs`` regardless of their VC.
+    At ``n_vcs = 1`` the key degenerates to the link id — the identical
+    stable sort, hence the identical permutation and accumulation
+    order, which is what keeps the single-VC model bitwise unchanged.
+
+    Returns ``(perm, seg, offsets)`` with ``S = n_links * n_vcs``:
       * ``perm``    [F*K*H] int32 — gather order into the sorted layout
-      * ``seg``     [F*K*H] int32 — sorted segment (link) id per entry
-      * ``offsets`` [n_links + 2] int32 — CSR row pointers: entries of
-        link l live at ``perm[offsets[l]:offsets[l + 1]]`` (segment
-        ``n_links`` is the PAD scratch)
+      * ``seg``     [F*K*H] int32 — sorted segment (queue) id per entry
+      * ``offsets`` [S + 2] int32 — CSR row pointers: entries of queue
+        q live at ``perm[offsets[q]:offsets[q + 1]]`` (segment ``S`` is
+        the PAD scratch)
     """
     flat = alt_routes.reshape(-1).astype(np.int64)
-    seg = np.where(flat == PAD, n_links, flat)
+    n_seg = n_links * n_vcs
+    if n_vcs == 1 or vc is None:
+        seg = np.where(flat == PAD, n_seg, flat * n_vcs)
+    else:
+        vflat = vc.reshape(-1).astype(np.int64)
+        if vc.shape != alt_routes.shape:
+            raise ValueError(f"vc shape {vc.shape} != routes shape "
+                             f"{alt_routes.shape}")
+        if ((vflat < 0) | (vflat >= n_vcs)).any():
+            raise ValueError(f"vc entries must lie in [0, {n_vcs})")
+        seg = np.where(flat == PAD, n_seg, flat * n_vcs + vflat)
     perm = np.argsort(seg, kind="stable").astype(np.int32)
     seg_sorted = seg[perm].astype(np.int32)
-    offsets = np.zeros((n_links + 2,), np.int64)
+    offsets = np.zeros((n_seg + 2,), np.int64)
     np.add.at(offsets, seg_sorted + 1, 1)
     return perm, seg_sorted, np.cumsum(offsets).astype(np.int32)
+
+
+def assign_vc(alt_routes: np.ndarray, n_vcs: int,
+              mode: str = "slot",
+              flow_vc: np.ndarray | None = None) -> np.ndarray:
+    """Static VC assignment for a [F, K, H] candidate stack.
+
+    ``mode`` picks the rule (both clip to the available ``n_vcs``):
+      * ``"slot"`` — candidate slot 0 (the minimal path) rides VC 0,
+        detour slots ride VC 1: Valiant/UGAL traffic stops sharing hop
+        queues (and PFC pause state) with minimal traffic — the
+        twice-deferred per-VC separation from the ROADMAP.
+      * ``"hop"``  — VC escalates with hop index (``min(h, n_vcs-1)``),
+        the classic dateline/credit-loop deadlock-avoidance discipline
+        for torus/dragonfly cycles: a flow re-entering a previously
+        used wire does so on a higher VC, breaking the cyclic buffer
+        dependency that a pause storm needs to wedge.
+
+    ``flow_vc`` ([F] ints, optional) overrides the rule per flow on
+    every hop/slot — how a scenario pins e.g. a victim flow to its own
+    lane.  PAD hops are forced to VC 0 so the incidence scratch mapping
+    stays exact.  ``n_vcs = 1`` returns all-zeros (the single-queue
+    model).
+    """
+    if mode not in ("slot", "hop"):
+        raise ValueError(f"vc mode must be 'slot' or 'hop', got {mode!r}")
+    F, K, H = alt_routes.shape
+    if mode == "slot":
+        vc = np.where(np.arange(K, dtype=np.int32)[None, :, None] > 0,
+                      min(1, n_vcs - 1), 0)
+        vc = np.broadcast_to(vc, (F, K, H))
+    else:
+        vc = np.broadcast_to(
+            np.minimum(np.arange(H, dtype=np.int32), n_vcs - 1)
+            [None, None, :], (F, K, H))
+    if flow_vc is not None:
+        fv = np.minimum(np.asarray(flow_vc, np.int32), n_vcs - 1)
+        if fv.shape != (F,):
+            raise ValueError(f"flow_vc must be [{F}], got {fv.shape}")
+        if (fv < 0).any():
+            raise ValueError("flow_vc entries must be >= 0")
+        vc = np.broadcast_to(fv[:, None, None], (F, K, H))
+    return np.where(alt_routes == PAD, 0, vc).astype(np.int32)
 
 
 def stage_load(routes: np.ndarray, n_links: int) -> np.ndarray:

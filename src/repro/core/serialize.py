@@ -152,7 +152,13 @@ def state_from_dict(d: dict) -> FluidState:
 # ---------------------------------------------------------------------------
 
 _SIM_TRACE_FIELDS = ("delivered", "rate", "inst_thr", "max_q",
-                     "n_paused", "marked", "cnp", "n_nonmin", "ctrl")
+                     "n_paused", "marked", "cnp", "n_nonmin", "ctrl",
+                     "pause_time", "vc_stall")
+
+#: Trace fields added after the wire format shipped: absent from old
+#: blobs, decoded as None (SimResult treats None as "predates the
+#: counter") instead of failing the whole reconstruction.
+_OPTIONAL_TRACE_FIELDS = ("pause_time", "vc_stall")
 
 
 def simresult_to_dict(res, *, traces: bool = True,
@@ -173,7 +179,10 @@ def simresult_to_dict(res, *, traces: bool = True,
         k = max(1, int(decimate))
         out["times"] = encode_array(np.asarray(res.times)[k - 1::k])
         for f in _SIM_TRACE_FIELDS:
-            out[f] = encode_array(np.asarray(getattr(res, f))[k - 1::k])
+            v = getattr(res, f)
+            if v is None:                 # result predates the counter
+                continue
+            out[f] = encode_array(np.asarray(v)[k - 1::k])
         if k > 1:
             out["trace_every"] = int(res.trace_every) * k
     return out
@@ -191,7 +200,8 @@ def simresult_from_dict(d: dict):
         times=decode_array(d["times"]),
         final=state_from_dict(d["final"]),
         trace_every=int(d["trace_every"]),
-        **{f: decode_array(d[f]) for f in _SIM_TRACE_FIELDS})
+        **{f: decode_array(d[f]) if f in d else None
+           for f in _SIM_TRACE_FIELDS})
 
 
 def sweepresult_to_dict(res, *, traces: bool = True) -> dict:
@@ -214,7 +224,8 @@ def sweepresult_to_dict(res, *, traces: bool = True) -> dict:
     if traces:
         out["trace_fields"] = {
             f: encode_array(np.asarray(getattr(res.traces, f)))
-            for f in _SIM_TRACE_FIELDS}
+            for f in _SIM_TRACE_FIELDS
+            if getattr(res.traces, f, None) is not None}
     return out
 
 
@@ -229,7 +240,12 @@ def sweepresult_from_dict(d: dict):
                          scenario=scenario_from_dict(p["scenario"]))
               for p in d["points"]]
     tf = {f: decode_array(d["trace_fields"][f])
+          if f in d["trace_fields"] else None
           for f in _SIM_TRACE_FIELDS}
+    missing = [f for f, v in tf.items() if v is None
+               and f not in _OPTIONAL_TRACE_FIELDS]
+    if missing:
+        raise KeyError(f"trace_fields missing {missing}")
     return SweepResult(points=points,
                        times=decode_array(d["times"]),
                        traces=TraceSample(**tf),

@@ -31,23 +31,29 @@ class TraceSample(StepTrace):
     (so sums over the decimated trace equal sums over the full one);
     ``ctrl`` is the window *sum* of notification emissions — a float,
     because the soft model (``StepParams.temperature > 0``) emits
-    fractional control traffic.
+    fractional control traffic.  ``pause_time`` / ``vc_stall`` are
+    window *sums* of pause wire-seconds (total / per VC), so run totals
+    are decimation-invariant too.
     """
 
 
-def _zero_accum(st: FluidState):
+def _zero_accum(st: FluidState, n_vcs: int = 1):
     # shapes follow the state so the same scan body serves single runs
-    # ([] / [F]) and batched sweeps ([R] / [R, F])
+    # ([] / [F]) and batched sweeps ([R] / [R, F]).  ``n_vcs`` is passed
+    # explicitly: the [V] per-VC stall accumulator cannot be told apart
+    # from the flat [L * V] pause vector by shape alone.
     return (jnp.zeros_like(st.t, jnp.float32),    # max_q
             jnp.zeros_like(st.t, jnp.int32),      # n_paused
             jnp.zeros_like(st.nicq, jnp.int32),   # marked
             jnp.zeros_like(st.nicq, jnp.int32),   # cnp
             jnp.zeros_like(st.t, jnp.int32),      # n_nonmin
-            jnp.zeros_like(st.nicq, jnp.float32))  # ctrl
+            jnp.zeros_like(st.nicq, jnp.float32),  # ctrl
+            jnp.zeros_like(st.t, jnp.float32),    # pause_time
+            jnp.zeros(st.t.shape + (n_vcs,), jnp.float32))  # vc_stall
 
 
 def decimating_scan(step, st: FluidState, n_samples: int,
-                    trace_every: int, dt: float):
+                    trace_every: int, dt: float, n_vcs: int = 1):
     """Run ``n_samples * trace_every`` steps, emitting one TraceSample
     per ``trace_every`` steps.  Accumulation happens inside the scan, so
     the full-resolution trace never materialises."""
@@ -56,7 +62,7 @@ def decimating_scan(step, st: FluidState, n_samples: int,
         d0 = st.delivered
 
         def inner(carry, _):
-            stt, mq, npz, mk, cn, nm, ct = carry
+            stt, mq, npz, mk, cn, nm, ct, pt, vs = carry
             st2, tr = step(stt)
             return (st2,
                     jnp.maximum(mq, tr.max_q),
@@ -64,24 +70,28 @@ def decimating_scan(step, st: FluidState, n_samples: int,
                     mk + tr.marked.astype(jnp.int32),
                     cn + tr.cnp.astype(jnp.int32),
                     jnp.maximum(nm, tr.n_nonmin),
-                    ct + tr.ctrl), None
+                    ct + tr.ctrl,
+                    pt + tr.pause_time,
+                    vs + tr.vc_stall), None
 
-        (st, mq, npz, mk, cn, nm, ct), _ = jax.lax.scan(
-            inner, (st,) + _zero_accum(st), None, length=trace_every)
+        (st, mq, npz, mk, cn, nm, ct, pt, vs), _ = jax.lax.scan(
+            inner, (st,) + _zero_accum(st, n_vcs), None,
+            length=trace_every)
         sample = TraceSample(
             delivered=st.delivered, rate=st.rate,
             inst_thr=(st.delivered - d0) / jnp.float32(trace_every * dt),
             max_q=mq, n_paused=npz, marked=mk, cnp=cn, n_nonmin=nm,
-            ctrl=ct)
+            ctrl=ct, pause_time=pt, vc_stall=vs)
         return st, sample
 
     return jax.lax.scan(outer, st, None, length=n_samples)
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 5))
 def _run_scan(state: FluidState, step_fn, n_samples: int,
-              trace_every: int, dt: float):
-    return decimating_scan(step_fn, state, n_samples, trace_every, dt)
+              trace_every: int, dt: float, n_vcs: int = 1):
+    return decimating_scan(step_fn, state, n_samples, trace_every, dt,
+                           n_vcs)
 
 
 def _resolve_steps(cfg: CCConfig, n_steps: int | None,
@@ -116,6 +126,9 @@ class SimResult:
     final: Any                 # FluidState (host)
     ctrl: np.ndarray = None    # [T, F] notification emissions in window
     trace_every: int = 1
+    # PFC-pathology instrumentation (None on traces that predate it):
+    pause_time: np.ndarray = None  # [T] pause wire-seconds in window
+    vc_stall: np.ndarray = None    # [T, V] per-VC pause wire-seconds
 
     # -- wire format --------------------------------------------------------
     def to_dict(self, *, traces: bool = True, decimate: int = 1) -> dict:
@@ -238,6 +251,35 @@ class SimResult:
         s = self.flow_slowdowns()
         return float(np.percentile(s, 99)) if s.size else float("nan")
 
+    def victim_slowdown(self) -> float:
+        """Mean slowdown over the scenario's designated victim flows.
+
+        Victims (``Scenario.victim``) are flows that do not contribute
+        to the congestion under test but share fabric with it — the
+        HoL/pause-storm collateral the PFC-pathology scenarios measure.
+        NaN when the scenario designates none (or none are real flows).
+        """
+        if self.scn.victim is None:
+            return float("nan")
+        vic = np.asarray(self.scn.victim, bool)[self._real_flows()]
+        if not vic.any():
+            return float("nan")
+        return float(self.flow_slowdowns()[vic].mean())
+
+    def pause_duration(self) -> float:
+        """Total PFC pause wire-seconds over the run (sum over queues
+        of pause level x dt).  NaN on traces predating the counter."""
+        if self.pause_time is None:
+            return float("nan")
+        return float(np.asarray(self.pause_time).sum())
+
+    def vc_stall_time(self) -> np.ndarray:
+        """[V] pause wire-seconds per virtual channel ([1] when the
+        config runs a single VC).  None on traces predating it."""
+        if self.vc_stall is None:
+            return None
+        return np.asarray(self.vc_stall).sum(axis=0)
+
     def ctrl_per_mb(self) -> float:
         """Notification messages per delivered MB (control overhead).
 
@@ -265,6 +307,10 @@ class SimResult:
             "jain_index": self.jain_index(),
             "p99_slowdown": self.p99_slowdown(),
             "ctrl_per_mb": self.ctrl_per_mb(),
+            "victim_slowdown": self.victim_slowdown(),
+            "pause_s": self.pause_duration(),
+            "vc_stall_s": None if self.vc_stall is None else
+                [float(x) for x in self.vc_stall_time()],
         }
 
 
@@ -283,7 +329,9 @@ def run(scn: Scenario, cfg: CCConfig, n_steps: int | None = None,
     step = make_step_fn(scn, cfg, reduce=reduce, use_kernels=use_kernels,
                         interpret=interpret)
     st0 = init_state(scn, cfg)
-    final, tr = _run_scan(st0, step, n_samples, k, float(cfg.sim.dt))
+    n_vcs = int(getattr(cfg.link, "n_vcs", 1))
+    final, tr = _run_scan(st0, step, n_samples, k, float(cfg.sim.dt),
+                          n_vcs)
     # (i+1)*k first (exact int), then *dt — so decimated times are the
     # same floats as the strided full-resolution times
     times = (np.arange(n_samples) + 1) * k * cfg.sim.dt
@@ -300,6 +348,8 @@ def run(scn: Scenario, cfg: CCConfig, n_steps: int | None = None,
         final=jax.device_get(final),
         ctrl=np.asarray(tr.ctrl),
         trace_every=k,
+        pause_time=np.asarray(tr.pause_time),
+        vc_stall=np.asarray(tr.vc_stall),
     )
 
 

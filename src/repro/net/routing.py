@@ -33,7 +33,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.routing import PAD, clos_route, link_incidence
+from repro.core.routing import PAD, assign_vc, clos_route, link_incidence
 from repro.core.topology import ClosIndex, Topology
 
 from .topologies import DragonflyIndex, XGFTIndex
@@ -186,6 +186,22 @@ class RouteSet:
             return np.empty((0, self.k_paths), np.int32)
         idx = _pair_index(pairs, self.n_nodes)
         return self.hops[idx[:, 0], idx[:, 1]].copy()
+
+    def vc_for_pairs(self, pairs, n_vcs: int,
+                     mode: str = "slot") -> np.ndarray:
+        """[F, K, H_MAX] int32 static VC per candidate hop.
+
+        The per-VC fluid model (``LinkParams.n_vcs > 1``) splits every
+        wire's input buffer into independent queues; this is where the
+        route set decides which queue each candidate path rides.
+        ``mode="slot"`` (default) keeps minimal traffic on VC 0 and
+        puts Valiant/UGAL detours on VC 1 — detoured flows stop
+        sharing hop queues (and pause state) with minimal flows;
+        ``mode="hop"`` escalates the VC along the path (dateline-style
+        credit-loop avoidance for dragonfly cycles).  See
+        ``repro.core.routing.assign_vc`` for the exact rule.
+        """
+        return assign_vc(self.routes_for_pairs(pairs), n_vcs, mode=mode)
 
     def link_load(self, n_links: int, pairs=None,
                   k: int | None = None) -> np.ndarray:

@@ -1,29 +1,50 @@
-"""Fluid-model conservation + closed-loop behaviour tests (paper claims)."""
+"""Fluid-model conservation + closed-loop behaviour tests (paper claims).
+
+Configs are canonical ``CCSpec`` stage triples; the legacy ``CCConfig``
+shim's mapping onto them is asserted once (``test_legacy_shim_maps_to_
+canonical_specs``) rather than re-exercised per test — its bitwise form
+lives in test_fluid_fused.
+"""
 
 import numpy as np
 import pytest
 
-from repro.core import (CCConfig, CCScheme, PAPER_CONFIG, incast,
+from repro.core import (CCScheme, CCSpec, PAPER_CONFIG, incast,
                         paper_incast, paper_incast_volume, run)
 
-CFG = PAPER_CONFIG
+CFG = CCSpec()
+
+#: the paper's three schemes as explicit stage triples
+SPECS = {
+    "PFC_ONLY": CCSpec(marking="cp", notification="np", reaction="pfc"),
+    "DCQCN": CCSpec(marking="cp", notification="np", reaction="rp"),
+    "DCQCN_REV": CCSpec(marking="ecp", notification="enp", reaction="erp"),
+}
+
+
+def test_legacy_shim_maps_to_canonical_specs():
+    """The one place the CCConfig shim is exercised here: each legacy
+    scheme must decompose into exactly the stage triple this module
+    runs, so every claim below also covers the shim path."""
+    for s in CCScheme:
+        assert PAPER_CONFIG.replace(scheme=s).to_spec() == SPECS[s.name], s
 
 
 @pytest.fixture(scope="module")
 def results_roll0():
     scn = paper_incast_volume(CFG, roll=0)
-    return {s.name: run(scn, CFG.replace(scheme=s), n_steps=16000)
-            for s in CCScheme}
+    return {name: run(scn, spec, n_steps=16000)
+            for name, spec in SPECS.items()}
 
 
 # ---------------------------------------------------------------------------
 # conservation / sanity
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("scheme", list(CCScheme))
+@pytest.mark.parametrize("scheme", sorted(SPECS))
 def test_byte_conservation(scheme):
     scn = paper_incast(CFG, roll=0)
-    res = run(scn, CFG.replace(scheme=scheme), n_steps=6000)
+    res = run(scn, SPECS[scheme], n_steps=6000)
     f = res.final
     offered = np.asarray(f.offered)
     acct = (np.asarray(f.delivered) + np.asarray(f.nicq)
@@ -31,10 +52,10 @@ def test_byte_conservation(scheme):
     np.testing.assert_allclose(acct, offered, rtol=1e-4, atol=1e3)
 
 
-@pytest.mark.parametrize("scheme", list(CCScheme))
+@pytest.mark.parametrize("scheme", sorted(SPECS))
 def test_no_negative_state(scheme):
     scn = paper_incast(CFG, roll=0)
-    res = run(scn, CFG.replace(scheme=scheme), n_steps=4000)
+    res = run(scn, SPECS[scheme], n_steps=4000)
     f = res.final
     assert np.asarray(f.qh).min() >= -1e-3
     assert np.asarray(f.nicq).min() >= -1e-3
@@ -45,7 +66,7 @@ def test_no_negative_state(scheme):
 def test_link_capacity_respected():
     """No flow can beat line rate; no wire can carry above capacity."""
     scn = paper_incast(CFG, roll=1)
-    res = run(scn, CFG.replace(scheme=CCScheme.DCQCN_REV), n_steps=6000)
+    res = run(scn, SPECS["DCQCN_REV"], n_steps=6000)
     assert res.inst_thr.max() <= CFG.link.line_rate * 1.01
     agg_into_dst = res.inst_thr[:, :4].sum(1)  # four flows, one dst port
     assert agg_into_dst.max() <= CFG.link.line_rate * 1.01
@@ -88,11 +109,11 @@ def test_rev_keeps_queues_short():
     """CC drains the congestion tree: standing queues shrink vs PFC."""
     scn = paper_incast(CFG, roll=1)
     q = {}
-    for s in (CCScheme.PFC_ONLY, CCScheme.DCQCN_REV):
-        res = run(scn, CFG.replace(scheme=s), n_steps=10000)
+    for name in ("PFC_ONLY", "DCQCN_REV"):
+        res = run(scn, SPECS[name], n_steps=10000)
         # steady-state window: 1.5 - 2.5 ms
         w = (res.times > 1.5e-3) & (res.times < 2.5e-3)
-        q[s.name] = res.max_q[w].mean()
+        q[name] = res.max_q[w].mean()
     assert q["DCQCN_REV"] < 0.5 * q["PFC_ONLY"]
 
 
@@ -101,9 +122,9 @@ def test_fig2_aggregate_disjoint():
     keeps parking-lot shares; DCQCN underutilises."""
     scn = paper_incast(CFG, roll=1)
     agg = {}
-    for s in CCScheme:
-        res = run(scn, CFG.replace(scheme=s), n_steps=14000)
-        agg[s.name] = res.mean_throughput_while_active().sum()
+    for name, spec in SPECS.items():
+        res = run(scn, spec, n_steps=14000)
+        agg[name] = res.mean_throughput_while_active().sum()
     assert agg["DCQCN_REV"] > 24e9        # paper: 25 GB/s
     assert agg["DCQCN"] < 0.8 * agg["DCQCN_REV"]
 
@@ -111,7 +132,7 @@ def test_fig2_aggregate_disjoint():
 def test_fig3_pfc_parking_lot():
     """roll=0 PFC: F0/F1 (two hops of contention) do worse than F4/F8."""
     scn = paper_incast(CFG, roll=0)
-    res = run(scn, CFG.replace(scheme=CCScheme.PFC_ONLY), n_steps=14000)
+    res = run(scn, SPECS["PFC_ONLY"], n_steps=14000)
     thr = res.mean_throughput_while_active()
     assert thr[0] < 0.7 * thr[2]
     assert thr[1] < 0.7 * thr[3]
@@ -122,7 +143,7 @@ def test_fig3_pfc_parking_lot():
 def test_victim_full_rate_when_disjoint():
     """roll=1: victim reaches ~line rate under Rev (Fig 2's 12.5 GB/s)."""
     scn = paper_incast(CFG, roll=1)
-    res = run(scn, CFG.replace(scheme=CCScheme.DCQCN_REV), n_steps=14000)
+    res = run(scn, SPECS["DCQCN_REV"], n_steps=14000)
     thr = res.mean_throughput_while_active()
     assert thr[4] > 0.97 * CFG.link.line_rate
 
@@ -134,7 +155,7 @@ def test_victim_full_rate_when_disjoint():
 @pytest.mark.parametrize("n", [2, 8, 16])
 def test_rev_fair_share_scales(n):
     scn = incast(CFG, n_senders=n, victim=False)
-    res = run(scn, CFG.replace(scheme=CCScheme.DCQCN_REV), n_steps=10000)
+    res = run(scn, SPECS["DCQCN_REV"], n_steps=10000)
     thr = res.mean_throughput_while_active()
     fair = CFG.link.line_rate / n
     # all senders within 2x of fair share, none starved

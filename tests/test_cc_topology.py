@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 
-from repro.core import (CCConfig, ClosIndex, build_flow_routes, clos_route,
+from repro.core import (ClosIndex, build_flow_routes, clos_route,
                         make_clos3, make_paper_clos)
 from repro.core.routing import route_hops, stage_load, validate_routes
 

@@ -7,10 +7,18 @@ flow count) are compared against ``tests/golden/routing_sweep.json``.
 Kernel or fluid-model refactors that change numerics now fail loudly
 instead of silently drifting the paper's tables.
 
-Regenerate (after an *intentional* numerics change, with a line in the
-commit message saying why):
+A second frozen grid covers the PFC-pathology scenarios (HoL-victim
+incast, pause-storm cascade, dragonfly credit loop) x the three paper
+schemes, pinning the victim-flow metrics (``victim_slowdown``,
+``pause_s``) in ``tests/golden/pfc_pathology.json``.
 
-    PYTHONPATH=src python tests/test_golden.py --regen
+Regenerate (after an *intentional* numerics change, with a line in the
+commit message saying why).  The two files regenerate independently —
+a change that only touches the pathology scenarios must NOT rewrite
+``routing_sweep.json``, and vice versa:
+
+    PYTHONPATH=src python tests/test_golden.py --regen            # routing
+    PYTHONPATH=src python tests/test_golden.py --regen-pathology  # pathology
 
 Tolerances: floats rtol=2e-3 (covers accumulation-order jitter across
 BLAS/jax versions), counters within 2% or +-2 events.
@@ -22,18 +30,28 @@ import os
 import numpy as np
 import pytest
 
-from repro.core import CCScheme, PAPER_CONFIG, ScenarioSpec, Sweep
-from repro.core.workloads import group_shift
+from repro.core import CCScheme, CCSpec, PAPER_CONFIG, ScenarioSpec, Sweep
+from repro.core.workloads import (credit_loop, group_shift,
+                                  hol_victim_incast, pause_storm)
 from repro.net import FabricSpec
 
 GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
                            "routing_sweep.json")
+PATHOLOGY_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                              "pfc_pathology.json")
 N_STEPS = 600
+N_STEPS_PATHOLOGY = 5000
 ROUTINGS = ("min", "valiant", "ugal")
 
 FLOAT_KEYS = ("aggregate_gbps", "completion_ms", "delivered_mb",
               "peak_queue_kb")
 COUNT_KEYS = ("marks", "cnps", "peak_nonmin_flows")
+
+#: completion_ms is deliberately absent — the pathology windows close
+#: right at the horizon, so its NaN-ness is not a stable signature
+PATHOLOGY_FLOAT_KEYS = ("aggregate_gbps", "delivered_mb", "peak_queue_kb",
+                        "victim_slowdown", "pause_s")
+PATHOLOGY_COUNT_KEYS = ("marks", "cnps")
 
 
 def _grid() -> Sweep:
@@ -101,6 +119,84 @@ def test_golden_summaries_match(summaries, routing):
                 f"{name}.{k} drifted (golden {w}, got {g})"
 
 
+# ---------------------------------------------------------------------------
+# PFC-pathology goldens
+# ---------------------------------------------------------------------------
+
+SCHEME_SPECS = {
+    "PFC_ONLY": CCSpec(marking="cp", notification="np", reaction="pfc"),
+    "DCQCN": CCSpec(marking="cp", notification="np", reaction="rp"),
+    "DCQCN_REV": CCSpec(marking="ecp", notification="enp", reaction="erp"),
+}
+
+
+def _pathology_grid() -> Sweep:
+    clos = FabricSpec.clos3(4)                          # 64 hosts
+    dfly = FabricSpec.dragonfly(a=2, p=2, h=2)          # 20 hosts, 5 groups
+    scenarios = {
+        "holvictim": hol_victim_incast(4, 64).spec(fabric=clos),
+        "pausestorm": pause_storm(3, 4, 64).spec(fabric=clos),
+        "creditloop": credit_loop(5, 4).spec(fabric=dfly),
+    }
+    return Sweep.grid(configs=SCHEME_SPECS, scenarios=scenarios)
+
+
+def pathology_summaries() -> dict:
+    res = _pathology_grid().run(n_steps=N_STEPS_PATHOLOGY)
+    return {name: {k: row[k] for k in
+                   PATHOLOGY_FLOAT_KEYS + PATHOLOGY_COUNT_KEYS}
+            for name, row in res.summary().items()}
+
+
+@pytest.fixture(scope="module")
+def pathology():
+    return pathology_summaries()
+
+
+def _golden_pathology() -> dict:
+    if not os.path.exists(PATHOLOGY_PATH):
+        pytest.fail(f"golden file missing: {PATHOLOGY_PATH}; regenerate "
+                    f"with PYTHONPATH=src python tests/test_golden.py "
+                    f"--regen-pathology")
+    with open(PATHOLOGY_PATH) as f:
+        return json.load(f)["summaries"]
+
+
+def test_pathology_summaries_match(pathology):
+    golden = _golden_pathology()
+    assert set(golden) == set(pathology)
+    for name, got in pathology.items():
+        want = golden[name]
+        for k in PATHOLOGY_FLOAT_KEYS:
+            g, w = got[k], want[k]
+            if np.isnan(w):
+                assert np.isnan(g), (name, k, g)
+                continue
+            np.testing.assert_allclose(
+                g, w, rtol=2e-3, atol=1e-9,
+                err_msg=f"{name}.{k} drifted (golden {w}, got {g}); if "
+                        f"intentional: tests/test_golden.py "
+                        f"--regen-pathology")
+        for k in PATHOLOGY_COUNT_KEYS:
+            g, w = got[k], want[k]
+            assert abs(g - w) <= max(2, 0.02 * w), \
+                f"{name}.{k} drifted (golden {w}, got {g})"
+
+
+def test_pathology_golden_encodes_victim_ordering():
+    """The frozen numbers themselves witness the paper's HoL claim:
+    Rev spares the victim, DCQCN collaterally marks it, PFC-only
+    head-of-line blocks it — and only PFC-only propagates pauses."""
+    golden = _golden_pathology()
+    vic = {s: golden[f"{s}/holvictim"]["victim_slowdown"]
+           for s in SCHEME_SPECS}
+    assert vic["DCQCN_REV"] < vic["DCQCN"] < vic["PFC_ONLY"], vic
+    storm = {s: golden[f"{s}/pausestorm"]["pause_s"]
+             for s in SCHEME_SPECS}
+    assert storm["PFC_ONLY"] > 10 * max(storm["DCQCN"],
+                                        storm["DCQCN_REV"], 1e-9), storm
+
+
 def test_legacy_grid_maps_through_stage_registry():
     """Every golden-grid config decomposes into the expected
     ``repro.core.cc`` stages with matching traced codes — the shim
@@ -134,23 +230,26 @@ def test_golden_encodes_the_acceptance_ordering():
         assert u >= m, (s.name, u, m)
 
 
-def _regen() -> None:
-    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+def _regen(path: str, n_steps: int, summaries: dict, flag: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
     doc = {
-        "comment": "frozen by tests/test_golden.py --regen; see module "
+        "comment": f"frozen by tests/test_golden.py {flag}; see module "
                    "docstring for when regeneration is legitimate",
-        "n_steps": N_STEPS,
-        "summaries": current_summaries(),
+        "n_steps": n_steps,
+        "summaries": summaries,
     }
-    with open(GOLDEN_PATH, "w") as f:
+    with open(path, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
         f.write("\n")
-    print(f"wrote {GOLDEN_PATH} ({len(doc['summaries'])} points)")
+    print(f"wrote {path} ({len(doc['summaries'])} points)")
 
 
 if __name__ == "__main__":
     import sys
     if "--regen" in sys.argv:
-        _regen()
+        _regen(GOLDEN_PATH, N_STEPS, current_summaries(), "--regen")
+    elif "--regen-pathology" in sys.argv:
+        _regen(PATHOLOGY_PATH, N_STEPS_PATHOLOGY, pathology_summaries(),
+               "--regen-pathology")
     else:
         print(__doc__)

@@ -34,10 +34,16 @@ def sweep_result():
 
 def _assert_simresults_equal(a, b):
     for f in ("times", "delivered", "rate", "inst_thr", "max_q",
-              "n_paused", "marked", "cnp", "n_nonmin"):
+              "n_paused", "marked", "cnp", "n_nonmin", "ctrl"):
         x, y = getattr(a, f), getattr(b, f)
         assert x.dtype == y.dtype, f
         np.testing.assert_array_equal(x, y, err_msg=f)
+    for f in ("pause_time", "vc_stall"):    # optional: None survives
+        x, y = getattr(a, f), getattr(b, f)
+        if x is None:
+            assert y is None, f
+        else:
+            np.testing.assert_array_equal(x, y, err_msg=f)
     assert a.trace_every == b.trace_every
     fa = {k: np.asarray(v) for k, v in zip(a.final._fields, a.final)
           if not isinstance(v, dict)}
@@ -89,6 +95,54 @@ def test_simresult_traceless_and_decimated(sim_result):
     assert dec["trace_every"] == sim_result.trace_every * 4
     with pytest.raises(ValueError, match="trace"):
         SimResult.from_dict(dec)
+
+
+def test_simresult_victim_metrics_survive_roundtrip(sim_result):
+    """The PFC-pathology numbers are wire-format first-class: the
+    decoded result reports the same victim/pause metrics, and a blob
+    predating the counters degrades to the documented NaN/None."""
+    assert sim_result.scn.victim is not None        # incast designates one
+    wire = json.loads(json.dumps(sim_result.to_dict()))
+    back = SimResult.from_dict(wire)
+    np.testing.assert_equal(back.victim_slowdown(),
+                            sim_result.victim_slowdown())
+    np.testing.assert_equal(back.pause_duration(),
+                            sim_result.pause_duration())
+    np.testing.assert_array_equal(back.vc_stall_time(),
+                                  sim_result.vc_stall_time())
+    # pre-counter blob: optional trace fields absent, not zero-filled
+    old = dict(wire)
+    del old["pause_time"], old["vc_stall"]
+    legacy = SimResult.from_dict(old)
+    assert legacy.pause_time is None and legacy.vc_stall is None
+    assert np.isnan(legacy.pause_duration())
+    assert legacy.vc_stall_time() is None
+    assert legacy.summary()["vc_stall_s"] is None
+
+
+def test_scenario_roundtrip_vc_and_victim():
+    """A multi-VC scenario with designated victims keeps its ``vc`` and
+    ``victim`` tensors (dtype and all) through the wire format."""
+    from repro.core.params import LinkParams
+    from repro.core.workloads import hol_victim_incast
+    from repro.net import FabricSpec
+    cfg = CCSpec(link=LinkParams(n_vcs=2))
+    wl = hol_victim_incast(4, 64)
+    wl = dataclasses.replace(wl, vc=(0,) * 4 + (1,))
+    scn = wl.spec(fabric=FabricSpec.clos3(4)).build(cfg)
+    assert scn.vc is not None and scn.victim is not None
+    back = scenario_from_dict(
+        json.loads(json.dumps(scenario_to_dict(scn))))
+    for f, v in zip(scn._fields, scn):
+        w = getattr(back, f)
+        if v is None:
+            assert w is None, f
+        elif isinstance(v, (int, float)):
+            assert w == v, f
+        else:
+            assert np.asarray(w).dtype == np.asarray(v).dtype, f
+            np.testing.assert_array_equal(np.asarray(w),
+                                          np.asarray(v), err_msg=f)
 
 
 def test_sweepresult_json_roundtrip_bitexact(sweep_result):

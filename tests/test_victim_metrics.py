@@ -1,0 +1,153 @@
+"""Victim-flow metrics, by hand and end-to-end.
+
+The closed-form half builds a synthetic ``SimResult`` whose traces are
+chosen so every PFC-pathology metric has an exact pencil-and-paper
+value (victim slowdown 4.0, pause wire-seconds 4 µs, per-VC stall
+split) — the metric code is arithmetic over traces, so it is tested as
+arithmetic.  The end-to-end half runs the HoL-victim scenario and
+asserts the paper's headline ordering: DCQCN-Rev spares the victim,
+DCQCN collaterally marks it, PFC-only head-of-line blocks it.
+"""
+
+import dataclasses
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import CCSpec, Sweep
+from repro.core.params import LinkParams
+from repro.core.simulator import SimResult
+from repro.core.workloads import hol_victim_incast
+from repro.net import FabricSpec
+
+LINE = 12.5e9
+T, F = 4, 3
+
+
+def _mini_result(*, victim, pause_time=None, vc_stall=None) -> SimResult:
+    """Synthetic 3-flow window-mode result: flows 0/1 run at line rate,
+    flow 2 at line/4 — slowdowns exactly [1, 1, 4]."""
+    cfg = CCSpec(link=LinkParams(line_rate=LINE))
+    times = (np.arange(T) + 1) * cfg.sim.dt
+    scn = SimpleNamespace(
+        gen_rate=np.full(F, LINE),   # f64: keep ideal/thr exact
+        t_start=np.zeros(F),
+        t_stop=np.full(F, (T + 1) * cfg.sim.dt),
+        volume=np.full(F, np.inf),
+        victim=None if victim is None else np.asarray(victim, bool),
+    )
+    inst_thr = np.tile([LINE, LINE, LINE / 4], (T, 1))
+    delivered = np.cumsum(inst_thr * cfg.sim.dt, axis=0)
+    zeros = np.zeros((T, F))
+    return SimResult(
+        cfg=cfg, scn=scn, times=times, delivered=delivered,
+        rate=np.tile([LINE, LINE, LINE / 4], (T, 1)),
+        inst_thr=inst_thr, max_q=np.zeros(T), n_paused=np.zeros(T),
+        marked=zeros, cnp=zeros, n_nonmin=np.zeros(T),
+        final=SimpleNamespace(offered=np.full(F, 1.0),
+                              delivered=delivered[-1]),
+        ctrl=zeros, trace_every=1,
+        pause_time=pause_time, vc_stall=vc_stall)
+
+
+def test_victim_slowdown_closed_form():
+    res = _mini_result(victim=[False, False, True])
+    np.testing.assert_allclose(res.flow_slowdowns(), [1.0, 1.0, 4.0])
+    assert res.victim_slowdown() == 4.0
+    assert res.summary()["victim_slowdown"] == 4.0
+
+
+def test_victim_slowdown_degrades_to_nan():
+    assert np.isnan(_mini_result(victim=None).victim_slowdown())
+    assert np.isnan(
+        _mini_result(victim=[False, False, False]).victim_slowdown())
+    # padding rows (gen_rate 0) never count as victims
+    res = _mini_result(victim=[False, False, True])
+    res.scn.gen_rate = np.asarray([LINE, LINE, 0.0], np.float32)
+    assert np.isnan(res.victim_slowdown())
+
+
+def test_pause_duration_closed_form():
+    pt = np.asarray([0.0, 1.5e-6, 2.5e-6, 0.0])
+    res = _mini_result(victim=None, pause_time=pt)
+    assert res.pause_duration() == pytest.approx(4e-6, rel=1e-12)
+    assert res.summary()["pause_s"] == pytest.approx(4e-6, rel=1e-12)
+    # traces predating the counter degrade, not crash
+    assert np.isnan(_mini_result(victim=None).pause_duration())
+
+
+def test_vc_stall_closed_form():
+    vs = np.asarray([[0.0, 0.0], [1e-6, 0.0], [0.0, 2e-6], [1e-6, 3e-6]])
+    res = _mini_result(victim=None, vc_stall=vs)
+    np.testing.assert_allclose(res.vc_stall_time(), [2e-6, 5e-6])
+    assert res.summary()["vc_stall_s"] == pytest.approx([2e-6, 5e-6])
+    legacy = _mini_result(victim=None)
+    assert legacy.vc_stall_time() is None
+    assert legacy.summary()["vc_stall_s"] is None
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the HoL-victim scenario separates the three schemes
+# ---------------------------------------------------------------------------
+
+SCHEME_SPECS = {
+    "PFC_ONLY": CCSpec(marking="cp", notification="np", reaction="pfc"),
+    "DCQCN": CCSpec(marking="cp", notification="np", reaction="rp"),
+    "DCQCN_REV": CCSpec(marking="ecp", notification="enp", reaction="erp"),
+}
+
+
+@pytest.fixture(scope="module")
+def hol_results():
+    spec = hol_victim_incast(4, 64).spec(fabric=FabricSpec.clos3(4))
+    res = Sweep.grid(configs=SCHEME_SPECS, scenarios={"hol": spec}).run(
+        n_steps=5000)
+    return {s: res[f"{s}/hol"] for s in SCHEME_SPECS}
+
+
+def test_hol_victim_ordering(hol_results):
+    """The ISSUE's acceptance ordering: the victim is spared by Rev's
+    fair-grant marking, collaterally marked by DCQCN's step marking,
+    and head-of-line blocked hardest by PFC alone."""
+    vic = {s: r.victim_slowdown() for s, r in hol_results.items()}
+    assert vic["DCQCN_REV"] < vic["DCQCN"] < vic["PFC_ONLY"], vic
+    # Rev keeps the victim essentially unharmed; PFC-only at least
+    # doubles its finish time — margins, not just ordering
+    assert vic["DCQCN_REV"] < 1.1
+    assert vic["PFC_ONLY"] > 1.5
+
+
+def test_hol_victim_pause_accounting(hol_results):
+    """PFC-only resolves the incast by pausing wires; the CC schemes
+    barely pause at all.  vc_stall is the per-VC split of pause_s."""
+    pause = {s: r.pause_duration() for s, r in hol_results.items()}
+    assert pause["PFC_ONLY"] > pause["DCQCN"]
+    assert pause["PFC_ONLY"] > pause["DCQCN_REV"]
+    for s, r in hol_results.items():
+        stall = r.vc_stall_time()
+        assert stall.shape == (1,)
+        np.testing.assert_allclose(stall.sum(), pause[s], rtol=1e-5)
+
+
+def test_vc_escape_frees_the_hol_victim():
+    """Pinning the victim to its own virtual channel defeats the
+    head-of-line block: per-VC PFC pauses the incast lane, not the
+    victim's — the tentpole's whole point, measured."""
+    wl = hol_victim_incast(4, 64)
+    wl_vc = dataclasses.replace(wl, vc=(0,) * 4 + (1,))
+    cfg1 = SCHEME_SPECS["PFC_ONLY"]
+    cfg2 = cfg1.replace(link=LinkParams(n_vcs=2))
+    fab = FabricSpec.clos3(4)
+    r1 = Sweep.grid(configs={"v1": cfg1},
+                    scenarios={"hol": wl.spec(fabric=fab)}).run(n_steps=5000)
+    r2 = Sweep.grid(configs={"v2": cfg2},
+                    scenarios={"hol": wl_vc.spec(fabric=fab)}).run(
+        n_steps=5000)
+    v1 = r1["v1/hol"].victim_slowdown()
+    v2 = r2["v2/hol"].victim_slowdown()
+    assert v2 < v1 - 0.1, (v1, v2)
+    # and the stall moved onto the incast's channel, not the victim's
+    stall = r2["v2/hol"].vc_stall_time()
+    assert stall.shape == (2,)
+    assert stall[0] >= stall[1]
