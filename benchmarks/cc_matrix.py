@@ -19,8 +19,15 @@ N_STEPS = 4000
 N_STEPS_QUICK = 1200
 
 
-def run_matrix(quick: bool = False) -> dict:
-    """Execute the registry product; returns the BENCH record."""
+def run_matrix(quick: bool = False,
+               use_kernels: "bool | str" = False) -> dict:
+    """Execute the registry product; returns the BENCH record.
+
+    ``use_kernels="mega"`` runs the same matrix through the whole-step
+    megakernel (interpret mode off-TPU): the stage codes are traced
+    data *inside* the kernel, so the full combination product must
+    still resolve to exactly one executable build.
+    """
     import jax
     from repro.core import CCSpec, ScenarioSpec, Sweep, cc
     from repro.core.experiments import SWEEP_EXEC_CACHE
@@ -50,7 +57,8 @@ def run_matrix(quick: bool = False) -> dict:
     misses0 = SWEEP_EXEC_CACHE.stats().misses
     t0 = time.perf_counter()
     res = Sweep.grid(configs=configs, scenarios={"hol": scn}).run(
-        n_steps=n_steps)
+        n_steps=n_steps, use_kernels=use_kernels,
+        interpret=bool(use_kernels))
     wall = time.perf_counter() - t0
     compiles = SWEEP_EXEC_CACHE.stats().misses - misses0
     points = []
@@ -67,6 +75,7 @@ def run_matrix(quick: bool = False) -> dict:
         "unix_time": int(time.time()),
         "backend": jax.default_backend(),
         "quick": quick,
+        "use_kernels": str(use_kernels),
         "n_steps": n_steps,
         "n_points": len(points),
         "compiles": compiles,
@@ -119,6 +128,21 @@ def main(quick: bool = False) -> list[tuple]:
         rows.append(("cc_matrix.one_launch", record["wall_s"] * 1e6,
                      f"{record['n_points']} combos, 1 compile, "
                      f"{record['wall_s']:.1f}s"))
+    # the same matrix through the megakernel: stage dispatch rides the
+    # traced codes inside the single pallas_call, so the whole product
+    # must again be ONE executable build (always at quick depth — this
+    # pass gates the compile counter, not throughput)
+    mega = run_matrix(quick=True, use_kernels="mega")
+    append_matrix_record(mega)
+    if mega["compiles"] != 1:
+        rows.append(("cc_matrix.MEGA_RECOMPILE", 0.0,
+                     f"{mega['n_points']} stage combinations took "
+                     f"{mega['compiles']} megakernel builds; the "
+                     f"matrix must ride ONE kernel build"))
+    else:
+        rows.append(("cc_matrix.mega_one_launch", mega["wall_s"] * 1e6,
+                     f"{mega['n_points']} combos through the "
+                     f"megakernel, 1 compile, {mega['wall_s']:.1f}s"))
     return rows
 
 
@@ -127,5 +151,5 @@ if __name__ == "__main__":
     rows = main(quick="--quick" in sys.argv)
     for row in rows:
         print(",".join(str(x) for x in row))
-    if any("RECOMPILE" in r[0] for r in rows):
+    if any("RECOMPILE" in r[0] for r in rows):   # covers MEGA_RECOMPILE
         raise SystemExit(1)

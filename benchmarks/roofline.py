@@ -140,6 +140,67 @@ def cc_kernel_rows() -> list[dict]:
     return rows
 
 
+def megakernel_rows(blocks: tuple = (1, 10, 100)) -> list[dict]:
+    """Analytic roofline cells for the whole-step megakernel
+    (``repro.kernels.fluid_step``), per substep-block size.
+
+    One launch runs ``block`` substeps with the fluid state
+    VMEM-resident; HBM traffic per launch is one read of state +
+    scenario and one write of state + the decimated ``TraceSample``
+    row, so bytes *per substep* fall as ``1/block`` while in-kernel
+    FLOPs per substep stay constant (the reduction + per-flow update
+    math).  The VMEM footprint (state in + out + scenario — the number
+    ``mega_footprint`` checks against ``MEGA_VMEM_CAP``) is
+    block-independent: blocking buys bandwidth, not residency.
+
+    State model (f32): 2 [F, H] hop tensors (queues + EWMA), ~23 [F]
+    flow vectors (counters, rates, CC state dict), 2 [D, F] delay-line
+    rings (D = 32 slots); scenario: [F, H] routes + 3 [F*K*H]
+    incidence/alt tables + per-link capacity/sink; sample: ~11 [F]
+    trace channels.
+    """
+    D = 32
+    rows = []
+    for F, K, H, L in [(1 << 17, 1, 6, 1 << 14), (1 << 20, 4, 6, 1 << 16)]:
+        state = 4 * (2 * F * H + 23 * F + 2 * D * F)
+        scen = 4 * (F * H + 3 * F * K * H + 2 * (L + 2))
+        sample = 4 * 11 * F
+        n = F * K * H
+        flops = sum(c * n for c in (3, 3, 2)) + 60 * F   # per substep
+        vmem = 2 * state + scen
+        for blk in blocks:
+            byts = (2 * state + scen + sample) / blk
+            t_mem = byts / HBM_BW
+            t_comp = flops / PEAK_FLOPS
+            rows.append({
+                "kernel": f"fluid_megastep_k{blk}",
+                "shape": f"f{F}k{K}l{L}",
+                "block": blk,
+                "bytes_per_step": byts,
+                "flops_per_step": flops,
+                "vmem_bytes": vmem,
+                "memory_s": t_mem,
+                "compute_s": t_comp,
+                "dominant": "memory" if t_mem >= t_comp else "compute",
+                "steps_per_s_ceiling": 1.0 / max(t_mem, t_comp),
+            })
+    return rows
+
+
+def mega_to_markdown(rows: list[dict]) -> str:
+    hdr = ("| kernel | shape | block | MB/step | MFLOP/step | VMEM MB | "
+           "dominant | steps/s ceiling |\n|---|---|---|---|---|---|---|"
+           "---|\n")
+    body = ""
+    for r in rows:
+        body += (f"| {r['kernel']} | {r['shape']} | {r['block']} | "
+                 f"{r['bytes_per_step'] / 2**20:.1f} | "
+                 f"{r['flops_per_step'] / 1e6:.1f} | "
+                 f"{r['vmem_bytes'] / 2**20:.1f} | **{r['dominant']}** | "
+                 f"{r['steps_per_s_ceiling']:.3e} |\n")
+    return hdr + body
+
+
 def cc_to_markdown(rows: list[dict]) -> str:
     hdr = ("| kernel | shape | MB/step | memory s | dominant | "
            "steps/s ceiling |\n|---|---|---|---|---|---|\n")
@@ -155,11 +216,15 @@ def cc_to_markdown(rows: list[dict]) -> str:
 def main() -> list[tuple]:
     rows = build_table()
     cc_rows = cc_kernel_rows()
+    mega_rows = megakernel_rows()
     os.makedirs("artifacts", exist_ok=True)
     with open("artifacts/roofline.md", "w") as f:
         f.write(to_markdown(rows))
         f.write("\n## CC hot-loop kernels (analytic)\n\n")
         f.write(cc_to_markdown(cc_rows))
+        f.write("\n## Whole-step megakernel vs substep block (analytic)"
+                "\n\n")
+        f.write(mega_to_markdown(mega_rows))
     out = []
     for r in rows:
         out.append((f"roofline.{r['arch']}.{r['shape']}",
@@ -171,6 +236,12 @@ def main() -> list[tuple]:
         out.append((f"roofline.cc.{r['kernel']}.{r['shape']}",
                     r["memory_s"] * 1e6,
                     f"dom={r['dominant']} "
+                    f"ceil={r['steps_per_s_ceiling']:.2e}steps/s"))
+    for r in mega_rows:
+        out.append((f"roofline.cc.{r['kernel']}.{r['shape']}",
+                    max(r["memory_s"], r["compute_s"]) * 1e6,
+                    f"dom={r['dominant']} "
+                    f"vmem={r['vmem_bytes'] / 2**20:.0f}MB "
                     f"ceil={r['steps_per_s_ceiling']:.2e}steps/s"))
     return out
 

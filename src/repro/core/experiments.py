@@ -40,13 +40,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import cc
 from .exec_cache import ExecutableCache
 from .fluid import (FluidState, Scenario, check_routing_paths,
                     clamp_dense_rows, delay_depth, dense_reduce_rows,
-                    fluid_step, init_state, scenario_device, step_params)
+                    fluid_step, init_state, kernel_tier, scenario_device,
+                    step_body_fn, step_params)
 from .params import CCConfig, CCSpec
 from .routing import PAD, route_hops
-from .simulator import SimResult, _resolve_steps, decimating_scan
+from .simulator import (SimResult, _acc_update, _resolve_steps,
+                        _window_sample, _zero_accum, decimating_scan)
 from .topology import Topology
 
 if TYPE_CHECKING:           # real import is lazy: repro.net imports core
@@ -481,7 +484,8 @@ SWEEP_EXEC_CACHE = ExecutableCache(capacity=32, name="sweep")
 
 def _sweep_scan_fn(n_samples: int, trace_every: int, dt: float,
                    n_switches: int, reduce: str, dense_rows: int,
-                   use_kernels: bool, interpret: bool, n_vcs: int, mesh):
+                   use_kernels: "bool | str", interpret: bool,
+                   n_vcs: int, substep_block: int, mesh):
     """Build the (unjitted) sweep scan for one static configuration.
 
     The whole sweep is one vmap-of-(decimating)-scan.  With ``mesh`` the
@@ -489,20 +493,53 @@ def _sweep_scan_fn(n_samples: int, trace_every: int, dt: float,
     device advances (and decimates the traces of) its own slice of the
     run batch, with zero cross-device communication, so a sharded sweep
     is bitwise the single-device sweep cut into ``mesh.size`` pieces.
+
+    ``substep_block`` is the megakernel's in-kernel scan depth (0 on the
+    non-mega tiers): with ``use_kernels="mega"`` the inner per-step scan
+    is replaced by one vmapped whole-window ``megastep_block`` launch
+    per trace sample, ``substep_block`` (= ``trace_every``) substeps
+    deep, the fluid state staying kernel-resident throughout.
     """
+    tier = kernel_tier(use_kernels)
+    if tier == "mega":
+        body = step_body_fn(dt=dt, n_switches=n_switches, reduce=reduce,
+                            dense_rows=dense_rows, n_vcs=n_vcs)
+        from repro.kernels.fluid_step import megastep_block
 
-    def scan_fn(st_b, sd_b, par_b):
-        def step(st):
-            return jax.vmap(
-                lambda s, sd, par: fluid_step(
-                    s, sd, par, dt=dt, n_switches=n_switches,
-                    reduce=reduce, dense_rows=dense_rows,
-                    use_kernels=use_kernels, interpret=interpret,
-                    n_vcs=n_vcs)
-            )(st, sd_b, par_b)
+        def scan_fn(st_b, sd_b, par_b):
+            def block(st):
+                return jax.vmap(
+                    lambda s, sd, par: megastep_block(
+                        s, sd, par, body=body,
+                        n_substeps=substep_block,
+                        acc_init=_zero_accum, acc_update=_acc_update,
+                        make_sample=_window_sample, n_vcs=n_vcs, dt=dt,
+                        interpret=interpret)
+                )(st, sd_b, par_b)
 
-        return decimating_scan(step, st_b, n_samples, trace_every, dt,
-                               n_vcs)
+            return decimating_scan(None, st_b, n_samples, trace_every,
+                                   dt, n_vcs, block_fn=block)
+    else:
+        def scan_fn(st_b, sd_b, par_b):
+            # flow tier: hoist the reaction kernels' SMEM param rows out
+            # of the scan — packed once per trace, reused every substep
+            # (None on the other tiers: an empty pytree vmaps freely).
+            packed_b = jax.vmap(
+                lambda par: cc.pack_react_rows(
+                    par.react, par.line_rate, jnp.float32(dt))
+            )(par_b) if tier == "flow" else None
+
+            def step(st):
+                return jax.vmap(
+                    lambda s, sd, par, pk: fluid_step(
+                        s, sd, par, dt=dt, n_switches=n_switches,
+                        reduce=reduce, dense_rows=dense_rows,
+                        use_kernels=use_kernels, interpret=interpret,
+                        n_vcs=n_vcs, packed_react=pk)
+                )(st, sd_b, par_b, packed_b)
+
+            return decimating_scan(step, st_b, n_samples, trace_every,
+                                   dt, n_vcs)
 
     if mesh is None:
         return scan_fn
@@ -618,7 +655,9 @@ class Sweep:
         to the single-device launch, run for run.
 
         ``reduce`` / ``use_kernels`` / ``interpret`` select the per-step
-        reduction engine and Pallas per-flow block (see ``fluid_step``).
+        reduction engine and the Pallas tier (see ``fluid_step``);
+        ``use_kernels="mega"`` runs each trace window as one whole-step
+        megakernel launch per run, ``trace_every`` substeps deep.
 
         The remaining knobs exist for serving (``repro.serve.whatif``),
         which must keep the executable-cache key stable across batches
@@ -645,7 +684,7 @@ class Sweep:
         if temperature and use_kernels:
             raise ValueError(
                 "temperature > 0 needs use_kernels=False: the Pallas "
-                "per-flow kernels implement the hard dynamics only")
+                "kernel tiers implement the hard dynamics only")
         cfg0 = self.points[0].cfg
         n_samples, k = _resolve_steps(cfg0, n_steps, trace_every)
         scns = [p.scenario for p in self.points]
@@ -691,9 +730,13 @@ class Sweep:
                 not 0 < dense_reduce_rows(s, self.n_vcs) <= dense_rows
                 for s in padded):
             dense_rows = 0           # can't cover the batch: safe path
+        # the substep-block depth (the megakernel's in-kernel scan
+        # length) is part of the executable signature: a mega sweep
+        # re-blocked at a different trace_every is a different program
+        substep_block = k if kernel_tier(use_kernels) == "mega" else 0
         static = (n_samples, k, float(cfg0.sim.dt), n_sw, reduce,
                   int(dense_rows), use_kernels, interpret, self.n_vcs,
-                  mesh)
+                  substep_block, mesh)
         exec_fn = _sweep_executable(static, (st_b, sd_b, par_b))
         final, tr = exec_fn(st_b, sd_b, par_b)
         times = (np.arange(n_samples) + 1) * k * cfg0.sim.dt

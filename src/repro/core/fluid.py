@@ -550,10 +550,55 @@ def init_state(scn: Scenario, cfg: "CCConfig | CCSpec",
     )
 
 
+def kernel_tier(use_kernels) -> str:
+    """Normalise the ``use_kernels`` tiers.
+
+    ``False`` -> ``"off"`` (pure jnp step), ``True`` -> ``"flow"`` (the
+    per-flow ``repro.kernels.cc_step`` kernels of PR 4), ``"mega"`` ->
+    the whole-step megakernel (``repro.kernels.fluid_step``).  The
+    string forms are accepted directly so configs can spell the tier.
+    """
+    if use_kernels is False or use_kernels is None:
+        return "off"
+    if use_kernels is True:
+        return "flow"
+    if use_kernels in ("off", "flow", "mega"):
+        return use_kernels
+    raise ValueError(
+        f"use_kernels must be False, True or 'mega' "
+        f"(or the tier names 'off'/'flow'), got {use_kernels!r}")
+
+
+def _refuse_soft_kernels(tier: str, temperature) -> None:
+    """Every Pallas tier implements the *hard* dynamics only.
+
+    A positive soft-relaxation temperature (``repro.tune``) under
+    ``use_kernels`` used to be silently ignored — PR 7 guarded only
+    ``Sweep.run``.  Raise wherever the temperature is statically known
+    to be positive; a traced temperature (batched sweeps) cannot be
+    inspected here and stays guarded at the ``Sweep.run`` entry point.
+    """
+    if tier == "off":
+        return
+    if isinstance(temperature, jax.core.Tracer):
+        return
+    try:
+        tv = float(temperature)
+    except (TypeError, jax.errors.ConcretizationTypeError):
+        return
+    if tv > 0.0:
+        raise ValueError(
+            "temperature > 0 needs use_kernels=False: the Pallas "
+            "kernel tiers implement the hard dynamics only, so the "
+            "soft gates (PFC hysteresis, marking thresholds, CNP "
+            "windows) would be silently ignored")
+
+
 def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
                dt: float, n_switches: int, reduce: str = "fused",
-               dense_rows: int = 0, use_kernels: bool = False,
-               interpret: bool = False, n_vcs: int = 1):
+               dense_rows: int = 0, use_kernels: "bool | str" = False,
+               interpret: bool = False, n_vcs: int = 1,
+               packed_react: dict | None = None):
     """One ``dt`` update: (state, scenario, params) -> (state, trace).
 
     Pure in all array arguments; ``dt`` / ``n_switches`` and the
@@ -580,11 +625,25 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     pathologically skewed, still bit-identical.  Must cover the longest
     per-link contributor list; 0 keeps the segment-sum engine.
 
-    ``use_kernels`` routes the per-flow block (generation, notification
-    timer, RP/ERP reaction) through the Pallas kernels in
-    ``repro.kernels.cc_step`` — one HBM round trip per state vector
-    instead of one per intermediate.  ``interpret=True`` runs every
-    Pallas kernel in interpreter mode (CPU tests).
+    ``use_kernels`` selects the Pallas tier (see ``kernel_tier``):
+      * ``False`` — pure jnp step (the parity reference).
+      * ``True`` — the per-flow block (generation, notification timer,
+        RP/ERP/swift reaction) rides the ``repro.kernels.cc_step``
+        kernels — one HBM round trip per state vector instead of one
+        per intermediate.  ``packed_react`` optionally carries the
+        prepacked per-stage param rows (``cc.pack_react_rows``) so a
+        scanned step doesn't rebuild them every substep.
+      * ``"mega"`` — the ENTIRE step (all phases, link reductions
+        included) runs as ONE ``repro.kernels.fluid_step`` launch with
+        the state VMEM-resident; stage dispatch happens *inside* the
+        kernel on the traced codes, so the whole CCSpec matrix still
+        shares one build.  Requires ``reduce != "pallas"`` (the
+        reduction kernel cannot nest inside the launch).
+
+    Every kernel tier implements the hard dynamics only; combining one
+    with ``temperature > 0`` raises (see ``_refuse_soft_kernels``).
+    ``interpret=True`` runs every Pallas kernel in interpreter mode
+    (CPU tests).
 
     ``n_vcs`` (static, ``LinkParams.n_vcs``) splits every wire's input
     buffer into that many virtual-channel queues with independent
@@ -599,6 +658,60 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     if reduce not in ("fused", "pallas", "scat"):
         raise ValueError(
             f"reduce must be 'fused', 'pallas' or 'scat', got {reduce!r}")
+    tier = kernel_tier(use_kernels)
+    _refuse_soft_kernels(tier, par.temperature)
+    if tier == "mega":
+        from repro.kernels.fluid_step import megastep
+        body = step_body_fn(dt=dt, n_switches=n_switches, reduce=reduce,
+                            dense_rows=dense_rows, n_vcs=n_vcs)
+        return megastep(st, sd, par, body=body, interpret=interpret)
+    return _step_body(st, sd, par, dt=dt, n_switches=n_switches,
+                      reduce=reduce, dense_rows=dense_rows,
+                      use_kernels=(tier == "flow"), interpret=interpret,
+                      n_vcs=n_vcs, packed_react=packed_react)
+
+
+def step_body_fn(*, dt: float, n_switches: int, reduce: str = "fused",
+                 dense_rows: int = 0, n_vcs: int = 1):
+    """The in-kernel step closure: ``(st, sd, par) -> (state, trace)``.
+
+    This is the single definition of the update the megakernel executes
+    — statics baked, stage dispatch through each stage's
+    ``kernel_body`` (falling back to its jnp ``step``), and the dense
+    engine in its tiled on-chip form.  It is the *same* jnp math as the
+    plain path (same primitives, same order), which is what holds the
+    mega tier bit-exact to the reference.
+    """
+    if reduce == "pallas":
+        raise ValueError(
+            "use_kernels='mega' runs the link reductions inside the "
+            "launch; reduce must be 'fused' or 'scat' (the "
+            "fluid_reduce Pallas kernel cannot nest in the megakernel)")
+
+    def body(st, sd, par):
+        return _step_body(st, sd, par, dt=dt, n_switches=n_switches,
+                          reduce=reduce, dense_rows=dense_rows,
+                          use_kernels=False, interpret=False,
+                          n_vcs=n_vcs, dense_tiled=True, in_kernel=True)
+
+    return body
+
+
+def _step_body(st: FluidState, sd: ScenarioDev, par: StepParams, *,
+               dt: float, n_switches: int, reduce: str,
+               dense_rows: int, use_kernels: bool, interpret: bool,
+               n_vcs: int, dense_tiled: bool = False,
+               in_kernel: bool = False,
+               packed_react: dict | None = None):
+    """The step update itself (see ``fluid_step`` for semantics).
+
+    ``dense_tiled`` swaps the dense-CSR accumulation for its
+    ``[S, block]``-tiled on-chip form (bit-identical, see
+    ``repro.kernels.fluid_step.dense_reduce_tiled``); ``in_kernel``
+    marks that this trace runs inside the megakernel launch, which
+    routes every cc dispatch through the stages' ``kernel_body``
+    entries and must not nest further ``pallas_call``s.
+    """
     fused = reduce != "scat"
     F, K, H = sd.alt_routes.shape
     L = sd.cap_ext.shape[0] - 1
@@ -619,9 +732,16 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
     # verbatim, so tau == 0 is bitwise the hard model (repro.tune).
     tau = par.temperature
 
-    _ah, _fi = _index_consts(F, H)
-    arange_h = jnp.asarray(_ah)
-    fidx = jnp.asarray(_fi)
+    if in_kernel:
+        # inside the megakernel trace, numpy-backed constants would be
+        # captured by the kernel jaxpr (pallas_call refuses); iota
+        # generates the same int32 indices on-chip — value-identical.
+        arange_h = jax.lax.iota(jnp.int32, H)[None, :]
+        fidx = jax.lax.iota(jnp.int32, F)
+    else:
+        _ah, _fi = _index_consts(F, H)
+        arange_h = jnp.asarray(_ah)
+        fidx = jnp.asarray(_fi)
     t_sec = st.t.astype(jnp.float32) * dt
 
     def pick_paths(k_idx):
@@ -668,17 +788,22 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
         elif dense_rows:
             data_ext = jnp.concatenate(
                 [data, jnp.zeros((1, C), jnp.float32)])
-            dense = jnp.take(data_ext, dense_idx,
-                             axis=0).reshape(S, dense_rows, C)
+            if dense_tiled:
+                from repro.kernels.fluid_step import dense_reduce_tiled
+                sums = dense_reduce_tiled(data_ext, dense_idx, S,
+                                          dense_rows)
+            else:
+                dense = jnp.take(data_ext, dense_idx,
+                                 axis=0).reshape(S, dense_rows, C)
 
-            def body(p, acc):
-                return acc + jax.lax.dynamic_slice_in_dim(
-                    dense, p, 1, 1)[:, 0]
+                def body(p, acc):
+                    return acc + jax.lax.dynamic_slice_in_dim(
+                        dense, p, 1, 1)[:, 0]
 
-            acc = jax.lax.fori_loop(0, dense_rows, body,
-                                    jnp.zeros((S, C), jnp.float32))
-            sums = jnp.concatenate(
-                [acc, jnp.zeros((1, C), jnp.float32)])
+                acc = jax.lax.fori_loop(0, dense_rows, body,
+                                        jnp.zeros((S, C), jnp.float32))
+                sums = jnp.concatenate(
+                    [acc, jnp.zeros((1, C), jnp.float32)])
         else:
             sums = jax.ops.segment_sum(data, sd.red_seg,
                                        num_segments=S + 1,
@@ -935,7 +1060,7 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
                    dem_next=dem_next, grant_next=grant_next,
                    over_next=over_next, port_buffer=par.port_buffer,
                    line_rate=par.line_rate, tau=tau),
-        st.cc)
+        st.cc, in_kernel=in_kernel)
     # mark_fh is a [F, H] float mark intensity: exact 0/1 in hard mode,
     # sigmoid-graded under the soft model.
     mark_pos = mark_fh > 0.0
@@ -973,7 +1098,7 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
         cc.NOTIFICATION, par.notif_code, par.notif,
         cc.NotifCtx(marked=mark_lvl, mark_fh=mark_fh, np_tmr_t=np_tmr_t,
                     hops=hops, rtt=sd.rtt, t=st.t, D=D, tau=tau),
-        st.cc)
+        st.cc, in_kernel=in_kernel)
     rslot = st.t % D
     if fused:
         # branch-free ring ops: one-hot compare instead of scatters.
@@ -1025,7 +1150,8 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
                     tgt_rx=tgt_rx, qdelay=qdelay, jitter=sd.jitter,
                     gen_rate=sd.gen_rate, line_rate=par.line_rate, dt=dt,
                     tau=tau),
-        st.cc, use_kernels=use_kernels, interpret=interpret)
+        st.cc, use_kernels=use_kernels, interpret=interpret,
+        in_kernel=in_kernel, packed=packed_react)
 
     new = FluidState(
         qh=qh, nicq=nicq, delivered=delivered, offered=offered,
@@ -1052,33 +1178,49 @@ def fluid_step(st: FluidState, sd: ScenarioDev, par: StepParams, *,
 def make_step_fn(scn: Scenario, cfg: "CCConfig | CCSpec",
                  delay_slots: int | None = None, *,
                  reduce: str = "fused", dense_rows: int | None = None,
-                 use_kernels: bool = False, interpret: bool = False):
+                 use_kernels: "bool | str" = False,
+                 interpret: bool = False, temperature: float = 0.0):
     """Returns step(state) -> (state, StepTrace). Pure; closes over statics.
 
     ``delay_slots`` pins a fixed delay-line depth (legacy callers passing
     ``DELAY_SLOTS``); it raises if any flow's RTT would overflow it.  By
     default the depth is sized from the scenario (``delay_depth``).
     ``reduce`` / ``use_kernels`` / ``interpret`` select the reduction
-    engine and the Pallas per-flow block (see ``fluid_step``);
+    engine and the Pallas tier (see ``fluid_step``);
     ``dense_rows=None`` auto-sizes the dense-CSR engine from the
     scenario (``dense_reduce_rows``), 0 forces the segment-sum engine.
+    ``temperature`` selects the soft-relaxed dynamics (``repro.tune``)
+    — only valid on the pure-jnp tier, since the kernels implement the
+    hard model only (a positive value under any kernel tier raises).
     """
     if delay_slots is not None:
         _check_delay(scn, delay_slots)
     check_routing_paths(cfg, scn)
+    tier = kernel_tier(use_kernels)
+    _refuse_soft_kernels(tier, temperature)
+    if tier == "mega" and reduce == "pallas":
+        raise ValueError(
+            "use_kernels='mega' runs the link reductions inside the "
+            "launch; reduce must be 'fused' or 'scat' (the "
+            "fluid_reduce Pallas kernel cannot nest in the megakernel)")
     n_vcs = int(getattr(cfg.link, "n_vcs", 1))
     sd = scenario_device(scn, n_vcs=n_vcs)
-    par = step_params(cfg)
+    par = step_params(cfg, temperature=temperature)
     n_sw = int(scn.n_switches)
     dt = float(cfg.sim.dt)
     if dense_rows is None:
         dense_rows = dense_reduce_rows(scn, n_vcs) \
             if reduce == "fused" else 0
+    # flow tier: prepack the reaction kernels' SMEM param rows once per
+    # step *function*, so a scanned step stops rebuilding them every
+    # substep (they are pure functions of the run's constants).
+    packed = cc.pack_react_rows(par.react, par.line_rate,
+                                jnp.float32(dt)) if tier == "flow" else None
 
     def step(st: FluidState):
         return fluid_step(st, sd, par, dt=dt, n_switches=n_sw,
                           reduce=reduce, dense_rows=dense_rows,
                           use_kernels=use_kernels, interpret=interpret,
-                          n_vcs=n_vcs)
+                          n_vcs=n_vcs, packed_react=packed)
 
     return step

@@ -52,37 +52,63 @@ def _zero_accum(st: FluidState, n_vcs: int = 1):
             jnp.zeros(st.t.shape + (n_vcs,), jnp.float32))  # vc_stall
 
 
+def _acc_update(acc, tr: StepTrace):
+    """Fold one step's trace into the window accumulators.
+
+    Shared by the host-side decimating scan AND the megakernel's
+    in-kernel dt-scan (``repro.kernels.fluid_step.megastep_block``) —
+    the single definition is what keeps the two trace paths bitwise
+    identical."""
+    mq, npz, mk, cn, nm, ct, pt, vs = acc
+    return (jnp.maximum(mq, tr.max_q),
+            jnp.maximum(npz, tr.n_paused),
+            mk + tr.marked.astype(jnp.int32),
+            cn + tr.cnp.astype(jnp.int32),
+            jnp.maximum(nm, tr.n_nonmin),
+            ct + tr.ctrl,
+            pt + tr.pause_time,
+            vs + tr.vc_stall)
+
+
+def _window_sample(st: FluidState, d0, acc, trace_every: int,
+                   dt: float) -> TraceSample:
+    """One TraceSample from the window-end state + accumulators."""
+    mq, npz, mk, cn, nm, ct, pt, vs = acc
+    return TraceSample(
+        delivered=st.delivered, rate=st.rate,
+        inst_thr=(st.delivered - d0) / jnp.float32(trace_every * dt),
+        max_q=mq, n_paused=npz, marked=mk, cnp=cn, n_nonmin=nm,
+        ctrl=ct, pause_time=pt, vc_stall=vs)
+
+
 def decimating_scan(step, st: FluidState, n_samples: int,
-                    trace_every: int, dt: float, n_vcs: int = 1):
+                    trace_every: int, dt: float, n_vcs: int = 1, *,
+                    block_fn=None):
     """Run ``n_samples * trace_every`` steps, emitting one TraceSample
     per ``trace_every`` steps.  Accumulation happens inside the scan, so
-    the full-resolution trace never materialises."""
+    the full-resolution trace never materialises.
+
+    ``block_fn`` replaces the inner per-step scan with one call per
+    trace window (``block_fn(state) -> (state, TraceSample)``) — the
+    megakernel's whole-window launch; the outer scan then just chains
+    windows.  ``step``/``trace_every``/``dt``/``n_vcs`` are unused in
+    that form (the block closes over them)."""
+    if block_fn is not None:
+        return jax.lax.scan(lambda s, _: block_fn(s), st, None,
+                            length=n_samples)
 
     def outer(st, _):
         d0 = st.delivered
 
         def inner(carry, _):
-            stt, mq, npz, mk, cn, nm, ct, pt, vs = carry
+            stt = carry[0]
             st2, tr = step(stt)
-            return (st2,
-                    jnp.maximum(mq, tr.max_q),
-                    jnp.maximum(npz, tr.n_paused),
-                    mk + tr.marked.astype(jnp.int32),
-                    cn + tr.cnp.astype(jnp.int32),
-                    jnp.maximum(nm, tr.n_nonmin),
-                    ct + tr.ctrl,
-                    pt + tr.pause_time,
-                    vs + tr.vc_stall), None
+            return (st2,) + _acc_update(carry[1:], tr), None
 
-        (st, mq, npz, mk, cn, nm, ct, pt, vs), _ = jax.lax.scan(
+        (st, *acc), _ = jax.lax.scan(
             inner, (st,) + _zero_accum(st, n_vcs), None,
             length=trace_every)
-        sample = TraceSample(
-            delivered=st.delivered, rate=st.rate,
-            inst_thr=(st.delivered - d0) / jnp.float32(trace_every * dt),
-            max_q=mq, n_paused=npz, marked=mk, cnp=cn, n_nonmin=nm,
-            ctrl=ct, pause_time=pt, vc_stall=vs)
-        return st, sample
+        return st, _window_sample(st, d0, tuple(acc), trace_every, dt)
 
     return jax.lax.scan(outer, st, None, length=n_samples)
 
@@ -92,6 +118,51 @@ def _run_scan(state: FluidState, step_fn, n_samples: int,
               trace_every: int, dt: float, n_vcs: int = 1):
     return decimating_scan(step_fn, state, n_samples, trace_every, dt,
                            n_vcs)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _run_block_scan(state: FluidState, block_fn, n_samples: int):
+    return decimating_scan(None, state, n_samples, 0, 0.0,
+                           block_fn=block_fn)
+
+
+def make_block_fn(scn: Scenario, cfg: CCConfig, trace_every: int, *,
+                  reduce: str = "fused", dense_rows: int | None = None,
+                  interpret: bool = False):
+    """Megakernel analogue of ``make_step_fn``: one whole trace window
+    per launch.
+
+    Returns ``block(state) -> (state, TraceSample)`` running
+    ``trace_every`` substeps inside a single ``pallas_call`` with the
+    fluid state VMEM-resident throughout (see
+    ``repro.kernels.fluid_step.megastep_block``); only the decimated
+    sample row leaves the kernel.  The accumulation functions are the
+    exact ones ``decimating_scan`` uses, so traces are bit-identical to
+    the per-step path.
+    """
+    from .fluid import (check_routing_paths, dense_reduce_rows,
+                        scenario_device, step_body_fn, step_params)
+    from repro.kernels.fluid_step import megastep_block
+    check_routing_paths(cfg, scn)
+    n_vcs = int(getattr(cfg.link, "n_vcs", 1))
+    sd = scenario_device(scn, n_vcs=n_vcs)
+    par = step_params(cfg)
+    dt = float(cfg.sim.dt)
+    if dense_rows is None:
+        dense_rows = dense_reduce_rows(scn, n_vcs) \
+            if reduce == "fused" else 0
+    body = step_body_fn(dt=dt, n_switches=int(scn.n_switches),
+                        reduce=reduce, dense_rows=dense_rows,
+                        n_vcs=n_vcs)
+
+    def block(st: FluidState):
+        return megastep_block(
+            st, sd, par, body=body, n_substeps=trace_every,
+            acc_init=_zero_accum, acc_update=_acc_update,
+            make_sample=_window_sample, n_vcs=n_vcs, dt=dt,
+            interpret=interpret)
+
+    return block
 
 
 def _resolve_steps(cfg: CCConfig, n_steps: int | None,
@@ -316,22 +387,31 @@ class SimResult:
 
 def run(scn: Scenario, cfg: CCConfig, n_steps: int | None = None,
         trace_every: int | None = None, *, reduce: str = "fused",
-        use_kernels: bool = False, interpret: bool = False) -> SimResult:
+        use_kernels: "bool | str" = False,
+        interpret: bool = False) -> SimResult:
     """Simulate one point and pull (decimated) traces to host.
 
     ``trace_every`` defaults to ``cfg.sim.trace_every``; pass 1 for a
     full-resolution trace.  ``n_steps`` is rounded up to a whole number
     of trace windows.  ``reduce`` / ``use_kernels`` / ``interpret``
-    select the reduction engine and Pallas per-flow block (see
-    ``repro.core.fluid.fluid_step``).
+    select the reduction engine and Pallas tier (see
+    ``repro.core.fluid.fluid_step``); ``use_kernels="mega"`` runs each
+    trace window as one whole-step megakernel launch with the fluid
+    state VMEM-resident across all ``trace_every`` substeps.
     """
     n_samples, k = _resolve_steps(cfg, n_steps, trace_every)
-    step = make_step_fn(scn, cfg, reduce=reduce, use_kernels=use_kernels,
-                        interpret=interpret)
     st0 = init_state(scn, cfg)
     n_vcs = int(getattr(cfg.link, "n_vcs", 1))
-    final, tr = _run_scan(st0, step, n_samples, k, float(cfg.sim.dt),
-                          n_vcs)
+    from .fluid import kernel_tier
+    if kernel_tier(use_kernels) == "mega":
+        block = make_block_fn(scn, cfg, k, reduce=reduce,
+                              interpret=interpret)
+        final, tr = _run_block_scan(st0, block, n_samples)
+    else:
+        step = make_step_fn(scn, cfg, reduce=reduce,
+                            use_kernels=use_kernels, interpret=interpret)
+        final, tr = _run_scan(st0, step, n_samples, k,
+                              float(cfg.sim.dt), n_vcs)
     # (i+1)*k first (exact int), then *dt — so decimated times are the
     # same floats as the strided full-resolution times
     times = (np.arange(n_samples) + 1) * k * cfg.sim.dt

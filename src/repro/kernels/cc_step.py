@@ -66,6 +66,27 @@ def _param_vec(*vals) -> jax.Array:
                       for v in vals]).reshape(1, -1)
 
 
+# Row layouts of each kernel's SMEM param vector.  These are the single
+# definition of the packing order (the kernels unpack by index), and the
+# hoisting entry point: a scanned step packs the rows ONCE per launch
+# via ``repro.core.cc.pack_react_rows`` and passes them back through the
+# ``packed=`` kwarg of the *_step wrappers, instead of re-tracing the
+# stack-and-reshape every substep.
+
+def pack_rp_params(p: RPParams) -> jax.Array:
+    return _param_vec(p.g, p.rate_decrease, p.timer_T, p.byte_B, p.rai,
+                      p.rhai, p.fr_stages, p.min_rate, p.line_rate, p.dt)
+
+
+def pack_erp_params(p: ERPParams) -> jax.Array:
+    return _param_vec(p.settle, p.hold, p.min_rate, p.line_rate, p.dt)
+
+
+def pack_swift_params(p: SwiftKParams) -> jax.Array:
+    return _param_vec(p.target, p.beta, p.ai, p.guard, p.min_rate,
+                      p.line_rate, p.dt)
+
+
 def _flow_call(kernel, inputs, params, n_out, *, interpret: bool):
     """Launch an elementwise per-flow kernel over (8,128)-tiled rows.
 
@@ -185,14 +206,14 @@ def _rp_kernel(par_ref, rate_ref, tgt_ref, alpha_ref, bc_ref, tmr_ref,
 
 
 def rp_step(st: RPState, cnp: jax.Array, p: RPParams,
-            interpret: bool = False) -> RPState:
+            interpret: bool = False,
+            packed: jax.Array | None = None) -> RPState:
     """Vectorised DCQCN RP update for F flows (any F)."""
     outs = _flow_call(
         _rp_kernel,
         [st.rate, st.target, st.alpha, st.byte_cnt, st.tmr, st.alpha_tmr,
          st.bc_stage, st.t_stage, cnp.astype(jnp.float32)],
-        _param_vec(p.g, p.rate_decrease, p.timer_T, p.byte_B, p.rai,
-                   p.rhai, p.fr_stages, p.min_rate, p.line_rate, p.dt),
+        pack_rp_params(p) if packed is None else packed,
         8, interpret=interpret)
     return RPState(*outs)
 
@@ -218,11 +239,12 @@ def _erp_kernel(par_ref, rate_ref, hold_ref, cnp_ref, tgt_ref, slope_ref,
 
 
 def erp_step(rate, hold, cnp, tgt_rx, slope, p: ERPParams,
-             interpret: bool = False):
+             interpret: bool = False,
+             packed: jax.Array | None = None):
     outs = _flow_call(
         _erp_kernel,
         [rate, hold, cnp.astype(jnp.float32), tgt_rx, slope],
-        _param_vec(p.settle, p.hold, p.min_rate, p.line_rate, p.dt),
+        pack_erp_params(p) if packed is None else packed,
         2, interpret=interpret)
     return outs[0], outs[1]
 
@@ -248,7 +270,8 @@ def _swift_kernel(par_ref, rate_ref, cool_ref, qd_ref, o_rate, o_cool):
 
 
 def swift_step(rate, cool, qdelay, p: SwiftKParams,
-               interpret: bool = False):
+               interpret: bool = False,
+               packed: jax.Array | None = None):
     """Vectorised delay-target update for F flows (any F).
 
     Exact f32 mirror of ``ref.swift_update_ref`` — the delay signal
@@ -258,7 +281,6 @@ def swift_step(rate, cool, qdelay, p: SwiftKParams,
     outs = _flow_call(
         _swift_kernel,
         [rate, cool, qdelay],
-        _param_vec(p.target, p.beta, p.ai, p.guard, p.min_rate,
-                   p.line_rate, p.dt),
+        pack_swift_params(p) if packed is None else packed,
         2, interpret=interpret)
     return outs[0], outs[1]

@@ -1,0 +1,270 @@
+"""Whole-step fluid megakernel: VMEM-resident state across the dt-scan.
+
+PR 4 kernelised the *pieces* of the fluid hot loop — the link
+reductions (``fluid_reduce``) and the per-flow CC updates (``cc_step``)
+— but every substep still round-trips ``FluidState`` through HBM
+between four Pallas launches and a few hundred XLA ops.  This module
+fuses the **whole step** into one ``pallas_call``:
+
+  * ``megastep``       — one launch = one ``dt`` update.  The kernel
+    body reconstructs the ``(FluidState, ScenarioDev, StepParams)``
+    pytrees from its refs and runs the exact step math of
+    ``repro.core.fluid`` (phase 1 generation + NP timers, transfers,
+    PFC, and the marking / notification / reaction stage dispatches),
+    selecting stages branchlessly by the traced ``mark_code`` /
+    ``notif_code`` / ``react_code`` scalars riding in the packed SMEM
+    param rows — so the whole 36-combo ``CCSpec`` matrix rides ONE
+    kernel build, exactly like the jnp path's ``jnp.where`` dispatch.
+  * ``megastep_block``  — the dt-scan pulled *inside* the kernel: a
+    ``fori_loop`` over ``n_substeps`` keeps the state (rates, queues,
+    the delay-line ring, per-flow CC state) resident across the whole
+    decimated trace window, spilling only the window's ``TraceSample``
+    accumulators to HBM.  One launch per trace window instead of
+    one-plus per substep.
+  * ``dense_reduce_tiled`` — the in-kernel form of the dense-CSR link
+    reduction: the ``[S, dense_rows]`` position table is walked in
+    ``[S, block]`` tiles with a sequential position loop per tile, so
+    the per-link half of the step stays on-chip too.  Contributors
+    accumulate in the same left-to-right position order as the untiled
+    engine (trailing pad rows are exact ``+0.0``), so the result is
+    bit-identical.
+
+Bit-exactness: the kernel body runs the *same* jnp step function
+(``repro.core.fluid.step_body_fn``) on values loaded from refs — same
+primitives, same order — so the megakernel is held to exact f32
+equality against the ``reduce="scat"`` / ``use_kernels=False``
+reference by the parity suites (``tests/test_fluid_fused.py``,
+``tests/test_kernels.py``), including delay-line ring contents and the
+per-flow CC state dict.
+
+Deployment note: CI runs every kernel with ``interpret=True`` (CPU).
+On real TPU hardware the mega tier additionally requires the
+scatter-free engines — ``reduce="fused"`` with ``dense_rows > 0`` (the
+tiled dense-CSR walk above) — and a state footprint under the ~16 MB
+VMEM budget; ``mega_footprint`` reports the resident bytes and
+``_mega_call`` refuses a non-interpret launch past ``MEGA_VMEM_CAP``
+(the roofline rows in ``benchmarks/roofline.py`` chart footprint vs
+substep block size).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: VMEM budget for a non-interpret megakernel launch: state + scenario
+#: operands must fit on-chip with ~2 MB headroom under the 16 MB/core.
+MEGA_VMEM_CAP = 14 << 20
+
+#: position-tile width of the in-kernel dense-CSR walk ([S, block, C]
+#: resident per tile); 8 keeps the tile within a sublane group at the
+#: common channel counts (C <= 3)
+DENSE_TILE_BLOCK = 8
+
+
+def mega_footprint(st, sd) -> int:
+    """VMEM-resident bytes of one megakernel launch (state + scenario).
+
+    State leaves count twice (input + output residency); scenario
+    tensors once.  The packed param rows are dozens of bytes and are
+    ignored.  This is the number the DESIGN.md §7 budget math and the
+    roofline's footprint-vs-block-size rows are computed from.
+    """
+    n = 0
+    for leaf in jax.tree.leaves(st):
+        n += 2 * leaf.size * leaf.dtype.itemsize
+    for leaf in jax.tree.leaves(sd):
+        n += leaf.size * leaf.dtype.itemsize
+    return int(n)
+
+
+def dense_reduce_tiled(data_ext: jax.Array, dense_idx: jax.Array,
+                       n_queues: int, dense_rows: int,
+                       block: int = DENSE_TILE_BLOCK) -> jax.Array:
+    """Tiled dense-CSR reduction: ``[S + 1, C]`` per-queue sums.
+
+    ``data_ext`` is the queue-sorted ``[N + 1, C]`` contributor table
+    (sentinel zero row last) and ``dense_idx`` the flattened
+    ``[S * dense_rows]`` position table from the CSR offsets.  Where
+    the untiled engine ``dynamic_slice``s one position at a time over
+    the whole ``[S, dense_rows, C]`` table, this walks ``[S, block, C]``
+    tiles — the VMEM-resident unit on TPU — with a sequential position
+    loop per tile.  Real contributors keep their left-to-right order
+    and the pad positions (to a whole number of tiles) gather the
+    sentinel zero row, an exact ``+0.0`` after each queue's real
+    entries: bit-identical to the untiled accumulation.
+    """
+    C = data_ext.shape[-1]
+    n_blk = -(-dense_rows // block)
+    idx = jnp.pad(dense_idx.reshape(n_queues, dense_rows),
+                  ((0, 0), (0, n_blk * block - dense_rows)),
+                  constant_values=data_ext.shape[0] - 1)
+    dense = jnp.take(data_ext, idx.reshape(-1),
+                     axis=0).reshape(n_queues, n_blk, block, C)
+
+    def tile_body(b, acc):
+        tile = jax.lax.dynamic_slice_in_dim(dense, b, 1, 1)[:, 0]
+
+        def pos_body(p, a):
+            return a + jax.lax.dynamic_slice_in_dim(tile, p, 1, 1)[:, 0]
+
+        return jax.lax.fori_loop(0, block, pos_body, acc)
+
+    acc = jax.lax.fori_loop(0, n_blk, tile_body,
+                            jnp.zeros((n_queues, C), jnp.float32))
+    return jnp.concatenate([acc, jnp.zeros((1, C), jnp.float32)])
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> kernel-operand plumbing
+# ---------------------------------------------------------------------------
+
+
+def _lift(x: jax.Array) -> jax.Array:
+    """Kernel-operand shape for one leaf (scalars/vectors become 2-d,
+    the layout TPU refs want; >= 2-d leaves pass through)."""
+    if x.ndim == 0:
+        return x.reshape(1, 1)
+    if x.ndim == 1:
+        return x.reshape(1, -1)
+    return x
+
+
+def _split_params(par):
+    """Pack a scalar-leaf pytree into (1, NF) f32 + (1, NI) int32 rows.
+
+    ``StepParams`` is ~40 traced scalars (stage codes + every family's
+    param union); packing them into two SMEM-sized rows keeps the
+    kernel's operand list flat and — packed once per *launch*, outside
+    any substep loop — hoists the per-step row rebuild the per-flow
+    kernels used to pay.  Returns the rows plus a rebuild closure that
+    reinflates the pytree from the loaded rows inside the kernel.
+    """
+    leaves, treedef = jax.tree.flatten(par)
+    f_idx = [i for i, x in enumerate(leaves) if x.dtype == jnp.float32]
+    i_idx = [i for i, x in enumerate(leaves) if x.dtype != jnp.float32]
+    frow = (jnp.stack([leaves[i].reshape(()) for i in f_idx]).reshape(1, -1)
+            if f_idx else jnp.zeros((1, 1), jnp.float32))
+    irow = (jnp.stack([leaves[i].astype(jnp.int32).reshape(())
+                       for i in i_idx]).reshape(1, -1)
+            if i_idx else jnp.zeros((1, 1), jnp.int32))
+    dtypes = [leaves[i].dtype for i in i_idx]
+
+    def rebuild(fr, ir):
+        out: list = [None] * len(leaves)
+        for j, i in enumerate(f_idx):
+            out[i] = fr[0, j]
+        for j, i in enumerate(i_idx):
+            out[i] = ir[0, j].astype(dtypes[j])
+        return jax.tree.unflatten(treedef, out)
+
+    return frow, irow, rebuild
+
+
+def _mega_call(st, sd, par, inner, *, interpret: bool):
+    """Launch ``inner(st, sd, par) -> (state', out_pytree)`` as ONE
+    ``pallas_call``.
+
+    Every ``FluidState`` / ``ScenarioDev`` leaf becomes a kernel ref;
+    ``StepParams`` rides as two packed scalar rows.  Output leaves are
+    sized by ``jax.eval_shape`` of ``inner`` — bool leaves (the trace's
+    ``marked`` / ``cnp``) travel as int32 through the kernel and are
+    cast back outside, value-exact.
+    """
+    st_leaves, st_def = jax.tree.flatten(st)
+    sd_leaves, sd_def = jax.tree.flatten(sd)
+    frow, irow, rebuild = _split_params(par)
+    if not interpret and mega_footprint(st, sd) > MEGA_VMEM_CAP:
+        raise ValueError(
+            f"megakernel state footprint {mega_footprint(st, sd)} B "
+            f"exceeds MEGA_VMEM_CAP ({MEGA_VMEM_CAP} B); shrink the "
+            f"scenario (F/H/D) or run the flow-kernel tier "
+            f"(use_kernels=True)")
+
+    out_struct = jax.eval_shape(inner, st, sd, par)
+    out_leaves, out_def = jax.tree.flatten(out_struct)
+
+    def _oshape(s):
+        shp = s.shape
+        if len(shp) == 0:
+            shp = (1, 1)
+        elif len(shp) == 1:
+            shp = (1,) + shp
+        dt = jnp.int32 if s.dtype == jnp.bool_ else s.dtype
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    n_st, n_sd = len(st_leaves), len(sd_leaves)
+
+    def kernel(*refs):
+        fr = refs[0][...]
+        ir = refs[1][...]
+        st_k = jax.tree.unflatten(
+            st_def, [r[...].reshape(l.shape)
+                     for r, l in zip(refs[2:2 + n_st], st_leaves)])
+        sd_k = jax.tree.unflatten(
+            sd_def, [r[...].reshape(l.shape)
+                     for r, l in zip(refs[2 + n_st:2 + n_st + n_sd],
+                                     sd_leaves)])
+        res = inner(st_k, sd_k, rebuild(fr, ir))
+        for ref, val, s in zip(refs[2 + n_st + n_sd:],
+                               jax.tree.leaves(res), out_leaves):
+            if s.dtype == jnp.bool_:
+                val = val.astype(jnp.int32)
+            ref[...] = val.reshape(ref.shape)
+
+    outs = pl.pallas_call(
+        kernel,
+        out_shape=[_oshape(s) for s in out_leaves],
+        interpret=interpret,
+    )(frow, irow, *[_lift(x) for x in st_leaves],
+      *[_lift(x) for x in sd_leaves])
+    outs = [o.reshape(s.shape).astype(s.dtype)
+            for o, s in zip(outs, out_leaves)]
+    return jax.tree.unflatten(out_def, outs)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def megastep(st, sd, par, *, body, interpret: bool = False):
+    """One fused whole-step launch: ``(state', StepTrace)``.
+
+    ``body`` is the step closure from ``repro.core.fluid.step_body_fn``
+    (statics baked, ``dense_tiled`` reduction, stage ``kernel_body``
+    dispatch) — the single definition both the jnp path and this kernel
+    execute, which is what makes the tiers bit-identical.
+    """
+    return _mega_call(st, sd, par, body, interpret=interpret)
+
+
+def megastep_block(st, sd, par, *, body, n_substeps: int, acc_init,
+                   acc_update, make_sample, n_vcs: int, dt: float,
+                   interpret: bool = False):
+    """One decimated trace window as ONE launch: the in-kernel dt-scan.
+
+    Runs ``n_substeps`` iterations of ``body`` in a ``fori_loop`` whose
+    carry — the full ``FluidState`` plus the window's trace
+    accumulators — never leaves the kernel, then spills a single
+    ``TraceSample`` row.  ``acc_init`` / ``acc_update`` /
+    ``make_sample`` are the *same* accumulation functions
+    ``repro.core.simulator.decimating_scan`` uses (window maxima,
+    event counts, sums, window-mean ``inst_thr``), so the decimated
+    trace is bit-identical to the per-step scan's.
+    """
+
+    def inner(st_k, sd_k, par_k):
+        d0 = st_k.delivered
+
+        def sub(_, carry):
+            s, acc = carry
+            s2, tr = body(s, sd_k, par_k)
+            return s2, acc_update(acc, tr)
+
+        st_out, acc = jax.lax.fori_loop(
+            0, n_substeps, sub, (st_k, acc_init(st_k, n_vcs)))
+        return st_out, make_sample(st_out, d0, acc, n_substeps, dt)
+
+    return _mega_call(st, sd, par, inner, interpret=interpret)

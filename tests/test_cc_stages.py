@@ -266,6 +266,37 @@ def test_mixed_stage_matrix_one_jit_no_recompile():
     assert marks["slope+enp+erp/hol"] != marks["cp+enp+erp/hol"]
 
 
+def test_mixed_stage_matrix_one_jit_on_kernel_tiers():
+    """The kernel tiers keep the one-jit property across the same
+    3 x 2 x 3 mixed matrix: the flow tier's prepacked SMEM param rows
+    are built from *traced* params (hoisted out of the scan, once per
+    trace), and the megakernel dispatches stages by traced codes inside
+    one pallas_call — so each tier resolves to exactly one executable
+    build, and the megakernel's 18 combos match the jnp engine bit for
+    bit."""
+    import jax
+    from repro.core.experiments import SWEEP_EXEC_CACHE
+    ramp = DCQCNParams(kmin=15 * 1024.0, kmax=90 * 1024.0, pmax=0.3)
+    configs = {f"{m}+{n}+{r}": CCSpec(marking=m, notification=n,
+                                      reaction=r, dcqcn=ramp)
+               for m in ("cp", "ecp", "slope")
+               for n in ("enp", "fncc")
+               for r in ("rp", "erp", "swift")}
+    sweep = Sweep.grid(configs=configs, scenarios={"hol": SCENE})
+    base = sweep.run(n_steps=600)
+    for tier in (True, "mega"):
+        before = SWEEP_EXEC_CACHE.stats()
+        res = sweep.run(n_steps=600, use_kernels=tier, interpret=True)
+        assert (SWEEP_EXEC_CACHE.stats() - before).misses <= 1, \
+            f"use_kernels={tier!r} must build one executable for the " \
+            f"whole mixed matrix"
+        if tier == "mega":
+            for a, b in zip(jax.tree.leaves((base.traces, base.final)),
+                            jax.tree.leaves((res.traces, res.final))):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b))
+
+
 def test_shim_and_spec_share_the_one_jit():
     """Legacy CCConfig points and CCSpec points can ride the same
     launch — the shim is a mapping, not a second code path."""

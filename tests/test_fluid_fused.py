@@ -11,6 +11,8 @@ same 18-point scheme x fabric x routing grid the golden suite runs:
     interpret mode)
   * ``use_kernels=True`` vs jnp per-flow block (gen/np-timer + RP/ERP
     kernels, interpret mode)
+  * ``use_kernels="mega"`` vs ``reduce="scat"`` (the whole-step
+    megakernel, one launch per trace window, interpret mode)
 
 plus unit-level checks of the incidence precompute and the
 content-keyed device-placement cache.
@@ -91,6 +93,87 @@ def test_kernel_flow_block_matches_jnp_on_golden_grid():
         sweep.run(n_steps=60),
         sweep.run(n_steps=60, use_kernels=True, interpret=True),
         "kernels-vs-jnp")
+
+
+def test_megakernel_matches_scat_on_golden_grid():
+    """The whole-step megakernel — every phase of the step plus the
+    in-kernel trace-window scan inside one pallas_call — vs the scatter
+    engine: exact equality of all decimated traces and final states
+    (delay-line ring and per-flow CC state included) across the 18-point
+    grid."""
+    sweep = _grid()
+    _assert_bitwise(
+        sweep.run(n_steps=60, reduce="scat"),
+        sweep.run(n_steps=60, use_kernels="mega", interpret=True),
+        "mega-vs-scat")
+
+
+def test_megakernel_matches_scat_at_two_vcs():
+    """The megakernel carries the per-VC queue axis (and its stall
+    trace) bit-exactly too."""
+    sweep = _grid_v2()
+    _assert_bitwise(
+        sweep.run(n_steps=60, reduce="scat"),
+        sweep.run(n_steps=60, use_kernels="mega", interpret=True),
+        "mega-vs-scat-v2")
+
+
+def test_simulator_run_megakernel_bitexact():
+    """``simulator.run(use_kernels="mega")`` — the single-point entry —
+    matches the per-step scat path sample for sample."""
+    from repro.core import simulator as sim
+    cfg = PAPER_CONFIG
+    scn = ScenarioSpec.paper_incast(
+        roll=0, t_start=0.1e-3, t_stop=1.2e-3).build(cfg)
+    ra = sim.run(scn, cfg, n_steps=60, trace_every=10, reduce="scat")
+    rb = sim.run(scn, cfg, n_steps=60, trace_every=10,
+                 use_kernels="mega", interpret=True)
+    for f in TRACE_FIELDS:
+        assert np.array_equal(np.asarray(getattr(ra, f)),
+                              np.asarray(getattr(rb, f))), f
+    _assert_final_equal(ra.final, rb.final, ("sim-mega",))
+
+
+def test_megakernel_rejects_nested_pallas_reduce():
+    """reduce="pallas" cannot run inside the megakernel (no nested
+    pallas_call); the combination is refused up front."""
+    cfg = PAPER_CONFIG
+    scn = ScenarioSpec.paper_incast(roll=0).build(cfg)
+    with pytest.raises(ValueError, match="mega"):
+        make_step_fn(scn, cfg, reduce="pallas", use_kernels="mega",
+                     interpret=True)
+
+
+def test_kernel_tier_rejects_unknown_string():
+    from repro.core.fluid import kernel_tier
+    assert kernel_tier(False) == "off"
+    assert kernel_tier(True) == "flow"
+    assert kernel_tier("mega") == "mega"
+    with pytest.raises(ValueError, match="use_kernels"):
+        kernel_tier("turbo")
+
+
+@pytest.mark.parametrize("tier", [True, "mega"])
+def test_soft_gates_refused_under_kernels_at_both_entry_points(tier):
+    """temperature > 0 + any kernel tier must raise at *both* entry
+    points (``make_step_fn`` and ``fluid_step``), not silently run the
+    hard dynamics (the kernels implement the hard model only)."""
+    from repro.core.fluid import fluid_step, step_params
+    cfg = PAPER_CONFIG
+    scn = ScenarioSpec.paper_incast(roll=0).build(cfg)
+    with pytest.raises(ValueError, match="temperature"):
+        make_step_fn(scn, cfg, use_kernels=tier, interpret=True,
+                     temperature=0.1)
+    st = init_state(scn, cfg)
+    sd = scenario_device(scn)
+    par = step_params(cfg, temperature=0.1)
+    with pytest.raises(ValueError, match="temperature"):
+        fluid_step(st, sd, par, dt=float(cfg.sim.dt),
+                   n_switches=int(scn.n_switches), use_kernels=tier,
+                   interpret=True)
+    # temperature=0 through the same entry points is fine
+    make_step_fn(scn, cfg, use_kernels=tier, interpret=True,
+                 temperature=0.0)
 
 
 def test_pallas_reduce_matches_fused_single_point():

@@ -248,6 +248,90 @@ def test_cc_kernels_accept_traced_params():
 
 
 # ---------------------------------------------------------------------------
+# fluid_step megakernel: whole-step parity off the tile grid + under vmap
+# ---------------------------------------------------------------------------
+
+def _mega_scn(F):
+    """F same-shaped flows on the legacy CLOS — F straddles the lane /
+    block boundaries the per-flow kernels pad to (1, 127, 129, 8193),
+    so the megakernel's lifted (1, F) layouts see ragged shapes."""
+    from repro.core import PAPER_CONFIG, ScenarioSpec
+    pairs = [(i % 16, 16 + (i * 5) % 16) for i in range(F)]
+    spec = ScenarioSpec.flows(pairs, t_start=0.0, t_stop=0.5e-3,
+                              label=f"mega{F}")
+    return spec.build(PAPER_CONFIG), PAPER_CONFIG
+
+
+def _assert_states_equal(fa, fb, ctx):
+    la = jax.tree_util.tree_flatten_with_path(fa)[0]
+    lb = jax.tree_util.tree_flatten_with_path(fb)[0]
+    assert len(la) == len(lb)
+    for (pa, ga), (pb, gb) in zip(la, lb):
+        assert pa == pb
+        assert np.array_equal(np.asarray(ga), np.asarray(gb)), \
+            (ctx, jax.tree_util.keystr(pa))
+
+
+@pytest.mark.parametrize("F", [1, 127, 129, 8193])
+def test_megakernel_matches_scat_off_tile_grid(F):
+    """Whole-step megakernel vs the scatter engine at non-tile-aligned
+    flow counts: exact equality of state and step trace after a short
+    jitted run (mirrors the rp/erp ragged-shape sweeps above, but for
+    the fused whole-step kernel)."""
+    from repro.core.fluid import init_state, make_step_fn
+    scn, cfg = _mega_scn(F)
+    n = 5 if F > 1000 else 20
+    finals, traces = [], []
+    for kw in (dict(reduce="scat"),
+               dict(use_kernels="mega", interpret=True)):
+        step = jax.jit(make_step_fn(scn, cfg, **kw))
+        st = init_state(scn, cfg)
+        for _ in range(n):
+            st, tr = step(st)
+        finals.append(st)
+        traces.append(tr)
+    _assert_states_equal(finals[0], finals[1], f"mega-F{F}-final")
+    _assert_states_equal(traces[0], traces[1], f"mega-F{F}-trace")
+
+
+def test_megakernel_under_vmap_on_sweep_run_axis():
+    """vmap over the Sweep run axis must batch straight through the
+    megakernel's pallas_call: a 3-point sweep (mixed schemes) through
+    ``use_kernels="mega"`` equals the scatter engine bit for bit."""
+    from repro.core import CCScheme, PAPER_CONFIG, ScenarioSpec, Sweep
+    spec = ScenarioSpec.paper_incast(roll=0, t_start=0.1e-3,
+                                     t_stop=1.2e-3)
+    sweep = Sweep.grid(
+        {s.name: PAPER_CONFIG.replace(scheme=s) for s in CCScheme},
+        {"inc": spec})
+    ra = sweep.run(n_steps=60, trace_every=10, reduce="scat")
+    rb = sweep.run(n_steps=60, trace_every=10, use_kernels="mega",
+                   interpret=True)
+    _assert_states_equal(ra.traces, rb.traces, "mega-vmap-traces")
+    _assert_states_equal(ra.final, rb.final, "mega-vmap-final")
+
+
+def test_megakernel_vmem_guard_refuses_oversized_state():
+    """Off interpret mode the launcher enforces the VMEM budget: a
+    state+scenario footprint beyond ~14 MiB must be refused with the
+    block-size pointer, not handed to the compiler."""
+    from repro.kernels.fluid_step import (MEGA_VMEM_CAP, mega_footprint,
+                                          megastep)
+    from repro.core.fluid import scenario_device, step_body_fn, \
+        init_state, step_params
+    scn, cfg = _mega_scn(127)
+    st = init_state(scn, cfg)
+    sd = scenario_device(scn)
+    assert 0 < mega_footprint(st, sd) < MEGA_VMEM_CAP
+    big = st._replace(
+        qh=jnp.zeros((MEGA_VMEM_CAP // 8 + 1, 2), jnp.float32))
+    body = step_body_fn(dt=float(cfg.sim.dt),
+                        n_switches=int(scn.n_switches))
+    with pytest.raises(ValueError, match="VMEM"):
+        megastep(big, sd, step_params(cfg), body=body, interpret=False)
+
+
+# ---------------------------------------------------------------------------
 # hypothesis property tests (system invariants)
 # ---------------------------------------------------------------------------
 
