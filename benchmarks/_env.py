@@ -1,0 +1,25 @@
+"""Execution-environment honesty for every BENCH_*.json record.
+
+Numbers from a CPU interpreter and numbers from a TPU are different
+experiments; a bench record that omits the platform invites comparing
+them.  Every bench merges :func:`bench_env` into its record so the
+backend, device kind and interpret-mode flag ride with the data.
+"""
+
+from __future__ import annotations
+
+
+def bench_env(interpret: bool = False) -> dict:
+    """Backend/platform facts for a bench record (cheap, no device
+    work beyond enumerating what jax already initialised)."""
+    import jax
+
+    devs = jax.devices()
+    return {
+        "backend": jax.default_backend(),
+        "platform": devs[0].platform if devs else "none",
+        "device_kind": devs[0].device_kind if devs else "none",
+        "n_devices": len(devs),
+        "jax_version": jax.__version__,
+        "interpret": bool(interpret),
+    }

@@ -28,7 +28,6 @@ def run_matrix(quick: bool = False,
     data *inside* the kernel, so the full combination product must
     still resolve to exactly one executable build.
     """
-    import jax
     from repro.core import CCSpec, ScenarioSpec, Sweep, cc
     from repro.core.experiments import SWEEP_EXEC_CACHE
 
@@ -71,9 +70,13 @@ def run_matrix(quick: bool = False,
             "marks": row["marks"],
             "cnps": row["cnps"],
         })
+    try:
+        from ._env import bench_env
+    except ImportError:              # `python benchmarks/cc_matrix.py`
+        from _env import bench_env
     return {
         "unix_time": int(time.time()),
-        "backend": jax.default_backend(),
+        **bench_env(interpret=bool(use_kernels)),
         "quick": quick,
         "use_kernels": str(use_kernels),
         "n_steps": n_steps,

@@ -214,8 +214,13 @@ def append_bench_record(records: list[dict], path: str = BENCH_PATH) -> None:
                 doc = json.load(f)
         except (json.JSONDecodeError, OSError):
             pass
+    try:
+        from ._env import bench_env
+    except ImportError:              # `python benchmarks/net_scale.py`
+        from _env import bench_env
     doc.setdefault("runs", []).append({
         "unix_time": int(time.time()),
+        **bench_env(interpret=False),
         "records": records,
     })
     with open(path, "w") as f:

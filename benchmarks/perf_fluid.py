@@ -182,9 +182,16 @@ def run_perf(quick: bool = False) -> dict:
               f"{rec['ops_per_step']['mega']:g} "
               f"({rec['ops_per_step']['reduction']:.0f}x fewer) "
               f"(F={F} L={rec['L']} K={K} dense_rows={rec['dense_rows']})")
+    try:
+        from ._env import bench_env
+    except ImportError:              # `python benchmarks/perf_fluid.py`
+        from _env import bench_env
     return {
         "unix_time": int(time.time()),
-        "backend": jax.default_backend(),
+        # mega cells run the Pallas interpreter off-TPU (noted in their
+        # sub-records); the scat/fused cells this record gates on are
+        # compiled, so the top-level flag reflects those.
+        **bench_env(interpret=False),
         "quick": quick,
         "points": points,
     }

@@ -113,15 +113,19 @@ def cc_kernel_rows() -> list[dict]:
       * cc_flow_block — gen/np-timer (9 in / 4 out), RP (9/8) and ERP
         (5/5 incl. params) per-flow kernels: 40 [F] vectors total, the
         "one HBM round trip per state vector" budget.
+
+    The bytes model is :func:`repro.fleet.plan.fluid_step_bytes` — the
+    SAME formula the fleet planner balances shards with, imported so
+    the two can never drift.
     """
+    from repro.fleet.plan import fluid_step_bytes
+
     rows = []
     for F, K, H, L in [(1 << 17, 1, 6, 1 << 14), (1 << 20, 4, 6, 1 << 16)]:
         n = F * K * H
-        passes = ((3, n), (3, n), (2, n))
-        red_bytes = sum(c * n * 4 + n * 4 + c * (L + 1) * 4
-                        for c, n in passes)
-        red_flops = sum(c * n for c, n in passes)
         flow_bytes = 40 * F * 4
+        red_bytes = fluid_step_bytes(F, K, H, L) - flow_bytes
+        red_flops = sum(c * n for c in (3, 3, 2))
         flow_flops = 60 * F
         for name, byts, flops in [
                 ("fluid_reduce", red_bytes, red_flops),

@@ -34,6 +34,13 @@ and appends a record to ``BENCH_tune.json``; with ``--check`` it exits
 non-zero when the tuned config no longer beats the paper defaults on
 the hard model, the improvement margin regresses past the committed
 baseline's, or the Pareto front is empty (the CI tune-smoke gate).
+``--fleet`` runs the same ragged grid as a single ``Sweep.run()``
+launch and as a threaded work-stealing fleet (streaming + journal) and
+appends a record to ``BENCH_fleet.json``; with ``--check`` it exits
+non-zero when the merged fleet result is not bitwise the single
+launch, the envelope plan compiled more than once, any shard was
+Abandoned, or the scheduling overhead regresses past the committed
+baseline (the CI fleet-smoke gate).
 ``--cc-matrix`` enumerates the ``repro.core.cc`` stage registries
 (every marking x notification x reaction combination) as ONE Sweep
 launch, appends the rows to ``BENCH_fluid.json`` under ``cc_matrix``
@@ -152,26 +159,33 @@ def main() -> None:
                     help="CC autotuning harness -> BENCH_tune.json "
                          "(--check gates on the tuned-beats-default "
                          "margin and a non-empty Pareto front)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="work-stealing fleet vs single-launch sweep "
+                         "-> BENCH_fleet.json (--check gates on "
+                         "bitwise fidelity, one compile per signature, "
+                         "zero Abandoned shards and the scheduling-"
+                         "overhead regression)")
     ap.add_argument("--cc-matrix", action="store_true", dest="cc_matrix",
                     help="stage-registry combination sweep (marking x "
                          "notification x reaction, one jit) -> "
                          "BENCH_fluid.json")
     ap.add_argument("--quick", action="store_true",
                     help="with --scale/--perf/--cc-matrix/--serve/"
-                         "--tune: CI-sized run")
+                         "--tune/--fleet: CI-sized run")
     args = ap.parse_args()
     if args.smoke:
         raise SystemExit(smoke())
 
     if __package__:
         from . import (ablation, cc_matrix, cc_scale, cosim,
-                       fig2_throughput, fig3_perflow, net_scale,
-                       perf_fluid, roofline, serve_bench, tune_bench)
+                       fig2_throughput, fig3_perflow, fleet_bench,
+                       net_scale, perf_fluid, roofline, serve_bench,
+                       tune_bench)
     else:                    # `python benchmarks/run.py` (no package ctx)
         import ablation, cc_matrix, cc_scale, cosim        # noqa: E401
-        import fig2_throughput, fig3_perflow, net_scale    # noqa: E401
-        import perf_fluid, roofline, serve_bench           # noqa: E401
-        import tune_bench                                  # noqa: E401
+        import fig2_throughput, fig3_perflow, fleet_bench  # noqa: E401
+        import net_scale, perf_fluid, roofline             # noqa: E401
+        import serve_bench, tune_bench                     # noqa: E401
 
     if args.tune:
         rows = _section("tune",
@@ -185,6 +199,15 @@ def main() -> None:
     if args.serve:
         rows = _section("serve",
                         lambda: serve_bench.main(quick=args.quick,
+                                                 check=args.check))
+        _print_rows(rows)
+        if any(".ERROR" in r[0] or "REGRESSION" in r[0] for r in rows):
+            raise SystemExit(1)
+        return
+
+    if args.fleet:
+        rows = _section("fleet",
+                        lambda: fleet_bench.main(quick=args.quick,
                                                  check=args.check))
         _print_rows(rows)
         if any(".ERROR" in r[0] or "REGRESSION" in r[0] for r in rows):

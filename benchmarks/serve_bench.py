@@ -68,7 +68,6 @@ def _mix():
 
 def run_replay(quick: bool = False) -> dict:
     """The replay: returns the BENCH_serve run record."""
-    import jax
     from repro.serve.whatif import (AdmissionConfig, Admitted,
                                     CCQueryEngine, EngineConfig,
                                     Throttled, WhatIfQuery)
@@ -114,9 +113,13 @@ def run_replay(quick: bool = False) -> dict:
           f"{m['exec_cache']['misses']}m "
           f"compile={m['compile_s']:.1f}s run={m['run_s']:.1f}s); "
           f"burst probe: {throttle['throttled']} throttled")
+    try:
+        from ._env import bench_env
+    except ImportError:              # `python benchmarks/serve_bench.py`
+        from _env import bench_env
     return {
         "unix_time": int(time.time()),
-        "backend": jax.default_backend(),
+        **bench_env(interpret=False),
         "quick": quick,
         "n_queries": n_queries,
         "n_steps": n_steps,

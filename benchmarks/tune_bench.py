@@ -66,7 +66,6 @@ def _problem():
 
 def run_tune(quick: bool = False) -> dict:
     """The tuning runs: returns the BENCH_tune run record."""
-    import jax
     from repro.tune import autotune, pareto_autotune
 
     cfg, scn = _problem()
@@ -92,9 +91,13 @@ def run_tune(quick: bool = False) -> dict:
           f"{grad.best_value:+.4f} (margin {grad.improvement:+.4f}), "
           f"es margin {es.improvement:+.4f}, "
           f"pareto front {len(front)} point(s), {wall:.1f}s")
+    try:
+        from ._env import bench_env
+    except ImportError:              # `python benchmarks/tune_bench.py`
+        from _env import bench_env
     return {
         "unix_time": int(time.time()),
-        "backend": jax.default_backend(),
+        **bench_env(interpret=False),
         "quick": quick,
         "scenario": SCENARIO,
         "n_steps": N_STEPS,

@@ -1,7 +1,7 @@
 """repro.ckpt — atomic sharded checkpoints with elastic restore."""
 
-from .checkpoint import (CheckpointManager, load_checkpoint,
-                         save_checkpoint, latest_step)
+from .checkpoint import (CheckpointManager, committed_steps,
+                         load_checkpoint, save_checkpoint, latest_step)
 
-__all__ = ["CheckpointManager", "load_checkpoint", "save_checkpoint",
-           "latest_step"]
+__all__ = ["CheckpointManager", "committed_steps", "load_checkpoint",
+           "save_checkpoint", "latest_step"]

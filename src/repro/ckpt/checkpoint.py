@@ -22,6 +22,7 @@ import json
 import os
 import shutil
 import threading
+import zipfile
 from typing import Any, Optional
 
 import jax
@@ -82,9 +83,29 @@ def _rebuild(template, flat, prefix="", nt_registry=None):
     return seq if k == "list" else tuple(seq)
 
 
+def _fsync_dir(path: str) -> None:
+    """Durably record a directory's entries (renames included)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:                    # platform without dir-open: best
+        return                         # effort, the data fsyncs stand
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save_checkpoint(directory: str, step: int, tree: Any,
                     extra: Optional[dict] = None) -> str:
-    """Atomic synchronous save. Returns the committed path."""
+    """Atomic synchronous save. Returns the committed path.
+
+    Preemption-safe: everything is written and fsynced inside a
+    ``.tmp`` dir, renamed into place, and only then committed by the
+    ``.done`` marker (itself written via temp + atomic rename, so a
+    marker can never exist half-written).  A kill at ANY point leaves
+    either no visible checkpoint for this step or a fully committed
+    one — ``load_checkpoint`` / ``latest_step`` ignore everything else.
+    """
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:09d}")
     tmp = final + ".tmp"
@@ -93,40 +114,48 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     os.makedirs(tmp)
     flat = _flatten(tree)
     arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
     manifest = {"step": step, "template": _tree_template(tree),
                 "extra": extra or {}}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
+    _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
-    with open(final + ".done", "w") as f:   # commit marker
-        f.write("ok")
+    done_tmp = final + ".done.tmp"
+    with open(done_tmp, "w") as f:   # commit marker: temp + rename so
+        f.write("ok")                # it is atomic like everything else
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(done_tmp, final + ".done")
+    _fsync_dir(directory)
     return final
 
 
 def latest_step(directory: str) -> Optional[int]:
+    steps = committed_steps(directory)
+    return steps[-1] if steps else None
+
+
+def committed_steps(directory: str) -> list[int]:
+    """All committed (``.done``-marked) steps, ascending."""
     if not os.path.isdir(directory):
-        return None
+        return []
     steps = []
     for name in os.listdir(directory):
         if name.startswith("step_") and not name.endswith((".tmp", ".done")):
             if os.path.exists(os.path.join(directory, name) + ".done"):
                 steps.append(int(name.split("_")[1]))
-    return max(steps) if steps else None
+    return sorted(steps)
 
 
-def load_checkpoint(directory: str, step: Optional[int] = None,
-                    shardings: Any = None, nt_registry=None):
-    """Load (tree, extra). `shardings`: optional matching tree of
-    NamedShardings — arrays are device_put onto them (elastic restore)."""
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+def _load_step(directory: str, step: int, shardings, nt_registry):
     path = os.path.join(directory, f"step_{step:09d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
@@ -137,6 +166,37 @@ def load_checkpoint(directory: str, step: Optional[int] = None,
         tree = jax.tree.map(
             lambda v, s: jax.device_put(v, s), tree, shardings)
     return tree, manifest["extra"]
+
+
+def load_checkpoint(directory: str, step: Optional[int] = None,
+                    shardings: Any = None, nt_registry=None):
+    """Load (tree, extra). `shardings`: optional matching tree of
+    NamedShardings — arrays are device_put onto them (elastic restore).
+
+    With ``step=None``, walks the committed steps newest-first and
+    skips torn/partial checkpoints (unreadable manifest or arrays —
+    e.g. a ``.done`` marker surviving a corrupted write) instead of
+    crashing, so a fleet resuming after preemption always lands on the
+    newest checkpoint that actually loads.  An explicit ``step`` must
+    be committed (``.done`` marker present) and intact.
+    """
+    if step is not None:
+        path = os.path.join(directory, f"step_{step:09d}")
+        if not os.path.exists(path + ".done"):
+            raise FileNotFoundError(
+                f"checkpoint step {step} in {directory} is missing or "
+                f"uncommitted (no .done marker — torn write?)")
+        return _load_step(directory, step, shardings, nt_registry)
+    errors = []
+    for s in reversed(committed_steps(directory)):
+        try:
+            return _load_step(directory, s, shardings, nt_registry)
+        except (OSError, ValueError, KeyError, EOFError,
+                json.JSONDecodeError, zipfile.BadZipFile) as e:
+            errors.append(f"step {s}: {e!r}")   # torn/corrupt: try older
+    detail = f" (skipped torn: {'; '.join(errors)})" if errors else ""
+    raise FileNotFoundError(
+        f"no loadable committed checkpoint in {directory}{detail}")
 
 
 class CheckpointManager:

@@ -64,6 +64,29 @@ class CacheStats:
                 "build_s": round(self.build_s, 3)}
 
 
+def structural_signature(static: tuple, args) -> tuple:
+    """The full structural cache key for a compiled program.
+
+    ``static`` is the caller's static configuration tuple; ``args`` is
+    the input pytree the executable will be called with.  The returned
+    key appends the pytree's treedef and every leaf's
+    (shape, dtype, weak_type) — exactly what determines the compiled
+    program, so two calls with equal signatures can share one
+    executable and run each other's arrays as-is.
+
+    This is the sweep engine's key, exported so other layers (the fleet
+    planner's structural buckets, the serving engine's compile-once
+    assertion) can group work by "compiles to the same program" without
+    re-deriving the rule.
+    """
+    import jax                     # lazy: the module itself stays free
+
+    leaves, treedef = jax.tree.flatten(args)
+    shapes = tuple((tuple(x.shape), x.dtype.name,
+                    bool(getattr(x, "weak_type", False))) for x in leaves)
+    return static + (treedef, shapes)
+
+
 class ExecutableCache:
     """Bounded, instrumented LRU: key -> built executable.
 

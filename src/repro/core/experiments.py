@@ -41,7 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import cc
-from .exec_cache import ExecutableCache
+from .exec_cache import ExecutableCache, structural_signature
 from .fluid import (FluidState, Scenario, check_routing_paths,
                     clamp_dense_rows, delay_depth, dense_reduce_rows,
                     fluid_step, init_state, kernel_tier, scenario_device,
@@ -432,6 +432,38 @@ def stack_scenarios(scns: Sequence[Scenario], n_vcs: int = 1):
     return batched, padded, n_sw
 
 
+def batch_dense_rows(padded: Sequence[Scenario], n_vcs: int,
+                     reduce: str = "fused",
+                     dense_rows: int | None = None) -> int:
+    """The dense-CSR row count one batch of padded scenarios runs with.
+
+    The static row count must cover every run in the batch; any
+    over-skew scenario disables the dense engine for the batch (0 = the
+    segment-sum path, bit-identical), and the batch-wide max is
+    re-clamped so one skewed run can't force the rest onto an oversized
+    table.  An explicit ``dense_rows`` that cannot cover the batch also
+    falls back to 0.  Shared by ``Sweep.run`` and the fleet planner so
+    a shard pinned to the plan's value runs the exact program the full
+    batch would.
+    """
+    if reduce != "fused":
+        return 0
+    if dense_rows is None:
+        mls = [dense_reduce_rows(s, n_vcs) for s in padded]
+        if 0 in mls:
+            return 0
+        s0 = padded[0]
+        K = 1 if s0.alt_routes is None else s0.alt_routes.shape[1]
+        return clamp_dense_rows(
+            max(mls), s0.capacity.shape[0] * n_vcs,
+            s0.routes.shape[0] * K * s0.routes.shape[1])
+    if dense_rows > 0 and any(
+            not 0 < dense_reduce_rows(s, n_vcs) <= dense_rows
+            for s in padded):
+        return 0                     # can't cover the batch: safe path
+    return int(dense_rows)
+
+
 # ---------------------------------------------------------------------------
 # Sweep — N points, one jitted vmap-of-scan
 # ---------------------------------------------------------------------------
@@ -568,9 +600,6 @@ def _sweep_executable(static: tuple, args: tuple):
     the jitted callable (shard_map AOT is not worth the API risk here —
     serving never passes a mesh).
     """
-    leaves, treedef = jax.tree.flatten(args)
-    shapes = tuple((tuple(x.shape), x.dtype.name,
-                    bool(getattr(x, "weak_type", False))) for x in leaves)
     mesh = static[-1]
 
     def build():
@@ -579,7 +608,8 @@ def _sweep_executable(static: tuple, args: tuple):
             return fn
         return fn.lower(*args).compile()
 
-    return SWEEP_EXEC_CACHE.get_or_build(static + (treedef, shapes), build)
+    return SWEEP_EXEC_CACHE.get_or_build(
+        structural_signature(static, args), build)
 
 
 class Sweep:
@@ -638,13 +668,89 @@ class Sweep:
                 points.append((name, cfg, scn))
         return cls(points)
 
+    @property
+    def names(self) -> list[str]:
+        return [p.name for p in self.points]
+
+    def subset(self, keys: Sequence["str | int"]) -> "Sweep":
+        """A new Sweep over the named (or indexed) points — the grid
+        slicing primitive behind shard-addressable fleet execution.
+        Scenarios pass through as built tensors; order follows ``keys``.
+        """
+        names = self.names
+        pts = []
+        for key in keys:
+            r = key if isinstance(key, int) else names.index(key)
+            p = self.points[r]
+            pts.append((p.name, p.cfg, p.scenario))
+        return Sweep(pts)
+
+    def _prepare(self, n_steps: int | None = None,
+                 trace_every: int | None = None, *, mesh=None,
+                 reduce: str = "fused", use_kernels: bool = False,
+                 interpret: bool = False, pad_runs_to: int | None = None,
+                 min_delay_slots: int | None = None,
+                 dense_rows: int | None = None,
+                 temperature: float = 0.0,
+                 min_switches: int | None = None):
+        """Stack, pad and stage the batch; returns
+        ``(static, (st_b, sd_b, par_b), n_samples, k)`` — everything a
+        launch needs short of resolving the executable.  Shared by
+        :meth:`run` and the fleet's streaming runner
+        (``repro.fleet.stream``), which swaps the scan depth in
+        ``static`` for per-window execution but must otherwise stage
+        the bit-identical program.
+        """
+        if temperature and use_kernels:
+            raise ValueError(
+                "temperature > 0 needs use_kernels=False: the Pallas "
+                "kernel tiers implement the hard dynamics only")
+        cfg0 = self.points[0].cfg
+        n_samples, k = _resolve_steps(cfg0, n_steps, trace_every)
+        scns = [p.scenario for p in self.points]
+        sd_b, padded, n_sw = stack_scenarios(scns, n_vcs=self.n_vcs)
+        if min_switches is not None:
+            n_sw = max(n_sw, int(min_switches))
+        D = max(delay_depth(s) for s in padded)
+        if min_delay_slots is not None:
+            D = max(D, int(min_delay_slots))
+        st_b = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[init_state(s, p.cfg, delay_slots=D)
+              for s, p in zip(padded, self.points)])
+        par_b = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[step_params(p.cfg, temperature=temperature)
+              for p in self.points])
+        R = len(self.points)
+        R_target = R if pad_runs_to is None else max(R, int(pad_runs_to))
+        if mesh is not None and R_target % mesh.size:
+            R_target += mesh.size - R_target % mesh.size
+        if R_target > R:
+            pad_r = R_target - R                 # replicate the last run
+            rep = lambda x: jnp.concatenate(
+                [x] + [x[-1:]] * pad_r, axis=0)
+            st_b, sd_b, par_b = (jax.tree.map(rep, t)
+                                 for t in (st_b, sd_b, par_b))
+        dense_rows = batch_dense_rows(padded, self.n_vcs, reduce,
+                                      dense_rows)
+        # the substep-block depth (the megakernel's in-kernel scan
+        # length) is part of the executable signature: a mega sweep
+        # re-blocked at a different trace_every is a different program
+        substep_block = k if kernel_tier(use_kernels) == "mega" else 0
+        static = (n_samples, k, float(cfg0.sim.dt), n_sw, reduce,
+                  int(dense_rows), use_kernels, interpret, self.n_vcs,
+                  substep_block, mesh)
+        return static, (st_b, sd_b, par_b), n_samples, k
+
     def run(self, n_steps: int | None = None,
             trace_every: int | None = None, *, mesh=None,
             reduce: str = "fused", use_kernels: bool = False,
             interpret: bool = False, pad_runs_to: int | None = None,
             min_delay_slots: int | None = None,
             dense_rows: int | None = None,
-            temperature: float = 0.0) -> "SweepResult":
+            temperature: float = 0.0,
+            min_switches: int | None = None) -> "SweepResult":
         """Execute all points as one device launch.
 
         ``mesh``: a ``jax.sharding.Mesh`` (e.g. ``repro.dist.sweep_mesh()``)
@@ -680,66 +786,23 @@ class Sweep:
         one compiled executable).  Soft runs require
         ``use_kernels=False`` (the Pallas per-flow kernels implement
         the hard path only).
+
+        ``min_switches`` floors the static switch count the scan is
+        built for (normally the batch max) — the fleet planner pins it
+        so every shard of a grid compiles and runs the exact program
+        the full batch would; extra switch rows are inert.
         """
-        if temperature and use_kernels:
-            raise ValueError(
-                "temperature > 0 needs use_kernels=False: the Pallas "
-                "kernel tiers implement the hard dynamics only")
-        cfg0 = self.points[0].cfg
-        n_samples, k = _resolve_steps(cfg0, n_steps, trace_every)
-        scns = [p.scenario for p in self.points]
-        sd_b, padded, n_sw = stack_scenarios(scns, n_vcs=self.n_vcs)
-        D = max(delay_depth(s) for s in padded)
-        if min_delay_slots is not None:
-            D = max(D, int(min_delay_slots))
-        st_b = jax.tree.map(
-            lambda *xs: jnp.stack(xs),
-            *[init_state(s, p.cfg, delay_slots=D)
-              for s, p in zip(padded, self.points)])
-        par_b = jax.tree.map(
-            lambda *xs: jnp.stack(xs),
-            *[step_params(p.cfg, temperature=temperature)
-              for p in self.points])
+        static, args, n_samples, k = self._prepare(
+            n_steps, trace_every, mesh=mesh, reduce=reduce,
+            use_kernels=use_kernels, interpret=interpret,
+            pad_runs_to=pad_runs_to, min_delay_slots=min_delay_slots,
+            dense_rows=dense_rows, temperature=temperature,
+            min_switches=min_switches)
+        st_b, sd_b, par_b = args
         R = len(self.points)
-        R_target = R if pad_runs_to is None else max(R, int(pad_runs_to))
-        if mesh is not None and R_target % mesh.size:
-            R_target += mesh.size - R_target % mesh.size
-        if R_target > R:
-            pad_r = R_target - R                 # replicate the last run
-            rep = lambda x: jnp.concatenate(
-                [x] + [x[-1:]] * pad_r, axis=0)
-            st_b, sd_b, par_b = (jax.tree.map(rep, t)
-                                 for t in (st_b, sd_b, par_b))
-        # dense-CSR engine: static row count must cover every run in
-        # the batch; any over-skew scenario disables it for the batch,
-        # and the batch-wide max is re-clamped so one skewed run can't
-        # force the rest onto an oversized table
-        if reduce != "fused":
-            dense_rows = 0
-        elif dense_rows is None:
-            dense_rows = 0
-            mls = [dense_reduce_rows(s, self.n_vcs) for s in padded]
-            if 0 not in mls:
-                s0 = padded[0]
-                K = (1 if s0.alt_routes is None
-                     else s0.alt_routes.shape[1])
-                dense_rows = clamp_dense_rows(
-                    max(mls), s0.capacity.shape[0] * self.n_vcs,
-                    s0.routes.shape[0] * K * s0.routes.shape[1])
-        elif dense_rows > 0 and any(
-                not 0 < dense_reduce_rows(s, self.n_vcs) <= dense_rows
-                for s in padded):
-            dense_rows = 0           # can't cover the batch: safe path
-        # the substep-block depth (the megakernel's in-kernel scan
-        # length) is part of the executable signature: a mega sweep
-        # re-blocked at a different trace_every is a different program
-        substep_block = k if kernel_tier(use_kernels) == "mega" else 0
-        static = (n_samples, k, float(cfg0.sim.dt), n_sw, reduce,
-                  int(dense_rows), use_kernels, interpret, self.n_vcs,
-                  substep_block, mesh)
-        exec_fn = _sweep_executable(static, (st_b, sd_b, par_b))
+        exec_fn = _sweep_executable(static, args)
         final, tr = exec_fn(st_b, sd_b, par_b)
-        times = (np.arange(n_samples) + 1) * k * cfg0.sim.dt
+        times = (np.arange(n_samples) + 1) * k * self.points[0].cfg.sim.dt
         # scan stacks samples on axis 0 -> [T, R, ...]; runs lead on host
         return SweepResult(
             points=self.points, times=times,

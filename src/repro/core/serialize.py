@@ -251,3 +251,78 @@ def sweepresult_from_dict(d: dict):
                        traces=TraceSample(**tf),
                        final=state_from_dict(d["final"]),
                        trace_every=int(d["trace_every"]))
+
+
+# ---------------------------------------------------------------------------
+# shard-level merge (the fleet coordinator's result assembly)
+# ---------------------------------------------------------------------------
+
+
+def merge_sweepresults(parts, points=None):
+    """Concatenate shard-level ``SweepResult``s back into one grid result.
+
+    ``parts`` are per-shard results over disjoint point subsets of one
+    grid (all sharing the shape envelope, times and ``trace_every`` —
+    the fleet planner pins those, so the arrays concatenate along the
+    run axis without reshaping).  ``points`` optionally supplies the
+    authoritative ``SweepPoint`` list: the merged run axis follows its
+    order, and its (typically unpadded) scenarios replace the shards'
+    padded copies so per-point views trim exactly like the one-launch
+    reference.  Every name in ``points`` must be covered by exactly one
+    shard; with ``points=None`` the merge keeps concatenation order.
+
+    Purely a gather — every run's row is copied bit-for-bit from the
+    shard that computed it, so a merge of bitwise-correct shards is
+    bitwise the uninterrupted ``Sweep.run``.
+    """
+    import jax
+
+    from .experiments import SweepResult
+    from .simulator import TraceSample
+
+    parts = list(parts)
+    if not parts:
+        raise ValueError("merge_sweepresults: no shard results")
+    base = parts[0]
+    for p in parts[1:]:
+        if int(p.trace_every) != int(base.trace_every) or \
+                not np.array_equal(np.asarray(p.times),
+                                   np.asarray(base.times)):
+            raise ValueError(
+                "shard results disagree on times/trace_every; they are "
+                "not shards of one plan")
+    where: dict[str, tuple] = {}
+    for part in parts:
+        for r, pt in enumerate(part.points):
+            if pt.name in where:
+                raise ValueError(f"point {pt.name!r} in two shards")
+            where[pt.name] = (part, r)
+    if points is None:
+        order = [(pt.name, part, r) for part in parts
+                 for r, pt in enumerate(part.points)]
+        out_points = [part.points[r] for _, part, r in order]
+    else:
+        missing = [p.name for p in points if p.name not in where]
+        if missing:
+            raise ValueError(f"no shard produced points {missing}")
+        order = [(p.name, *where[p.name]) for p in points]
+        out_points = list(points)
+    tf = {}
+    for f in _SIM_TRACE_FIELDS:
+        vals = [getattr(part.traces, f, None) for part in parts]
+        if any(v is None for v in vals):
+            if not all(v is None for v in vals):
+                raise ValueError(f"trace field {f!r} present in some "
+                                 f"shards but not others")
+            tf[f] = None
+            continue
+        tf[f] = np.stack([np.asarray(getattr(part.traces, f))[r]
+                          for _, part, r in order])
+    finals = [jax.tree.map(lambda x, r=r: np.asarray(x)[r], part.final)
+              for _, part, r in order]
+    final = jax.tree.map(lambda *xs: np.stack(xs), *finals)
+    return SweepResult(points=out_points,
+                       times=np.asarray(base.times),
+                       traces=TraceSample(**tf),
+                       final=final,
+                       trace_every=int(base.trace_every))

@@ -1,0 +1,38 @@
+"""Multi-process bootstrap for the jax.distributed fleet backend.
+
+Thin, idempotent wrappers over ``jax.distributed`` so fleet code can
+ask "who am I / how many of us are there" without caring whether the
+run is single-process (the answer is then (0, 1)) or a real
+multi-controller job.
+"""
+
+from __future__ import annotations
+
+import jax
+
+_initialized = [False]
+
+
+def init_processes(coordinator_address: str | None = None,
+                   num_processes: int | None = None,
+                   process_id: int | None = None) -> tuple[int, int]:
+    """Join (or start) the distributed runtime; returns (pid, nproc).
+
+    Idempotent — a second call is a no-op.  With all-None arguments
+    jax reads the cluster env vars (as on TPU pods); explicit arguments
+    drive the test harness's ``127.0.0.1`` two-process jobs.
+    """
+    if not _initialized[0]:
+        jax.distributed.initialize(
+            coordinator_address=coordinator_address,
+            num_processes=num_processes, process_id=process_id)
+        _initialized[0] = True
+    return process_info()
+
+
+def process_info() -> tuple[int, int]:
+    """(process_id, process_count); (0, 1) when uninitialized."""
+    try:
+        return jax.process_index(), jax.process_count()
+    except RuntimeError:          # backend not initialized yet
+        return 0, 1

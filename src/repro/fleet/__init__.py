@@ -1,0 +1,38 @@
+"""repro.fleet — pod-scale sweep fabric.
+
+Decomposes a parameter ``Sweep`` into content-addressed, compile-
+signature-bucketed shards (:mod:`~repro.fleet.plan`), schedules them
+over a work-stealing backend — single-host threads or
+``jax.distributed`` processes (:mod:`~repro.fleet.scheduler`) — streams
+each shard's traces device→host through a double buffer
+(:mod:`~repro.fleet.stream`), and journals completions through
+``repro.ckpt`` so a preempted fleet resumes with zero recompute
+(:mod:`~repro.fleet.resume`).  The merged result is bitwise identical
+to the uninterrupted single-host ``Sweep.run()``.
+
+Quickstart::
+
+    from repro.fleet import FleetConfig, run_fleet
+    out = run_fleet(sweep, n_steps=2000, trace_every=100,
+                    config=FleetConfig(n_workers=4),
+                    journal="/tmp/fleet_journal")
+    res = out.result            # a plain SweepResult
+"""
+
+from .plan import (FleetPlan, ShardBucket, ShardSpec, estimate_point_cost,
+                   fluid_step_bytes, plan_sweep, point_digest)
+from .resume import FleetJournal
+from .scheduler import (Abandoned, Backend, DistributedBackend, Done,
+                        FleetConfig, FleetError, FleetResult, FleetRunner,
+                        FleetStats, PreemptedError, Retried, ThreadBackend,
+                        WorkerLost, run_fleet)
+from .stream import stream_sweep
+
+__all__ = [
+    "Abandoned", "Backend", "DistributedBackend", "Done", "FleetConfig",
+    "FleetError", "FleetJournal", "FleetPlan", "FleetResult",
+    "FleetRunner", "FleetStats", "PreemptedError", "Retried",
+    "ShardBucket", "ShardSpec", "ThreadBackend", "WorkerLost",
+    "estimate_point_cost", "fluid_step_bytes", "plan_sweep",
+    "point_digest", "run_fleet", "stream_sweep",
+]

@@ -34,15 +34,28 @@ Quickstart::
                             n_steps=4000))
     print(r.result.summary(), eng.metrics())
 
-The engine is synchronous and single-threaded by design: ``submit``
-admits + enqueues, ``drain`` executes everything queued in micro-
-batches, ``ask`` is submit-then-drain for one query.  An async front
-end can own the loop; the throttling semantics live here either way.
+The synchronous surface is unchanged: ``submit`` admits + enqueues,
+``drain`` executes everything queued in micro-batches, ``ask`` is
+submit-then-drain for one query — that path is bitwise untouched.  Two
+opt-in extensions ride on top:
+
+  * ``CCQueryEngine(auto_drain=True)`` runs ``drain`` on a background
+    thread woken by ``submit``, so callers enqueue and ``wait(ticket)``
+    instead of owning the serve loop.  ``close()`` (or the context
+    manager) shuts the thread down cleanly after finishing in-flight
+    work; all public methods are thread-safe either way.
+  * ``EngineConfig.fleet_threshold`` delegates oversized micro-batches
+    (roofline estimate >= the threshold, in seconds) to ``repro.fleet``
+    — the batch streams device→host in bounded memory instead of
+    holding the whole trace device-resident.  Padding inertness keeps
+    the per-query slices bitwise identical to the inline path
+    (``QueryResult.via_fleet`` flags which road a query took).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import OrderedDict, deque
 from typing import Callable
@@ -150,6 +163,10 @@ class EngineConfig:
     dense_rows: int = 0
     min_flow_bucket: int = 4
     max_results: int = 1024       # completed results retained for poll
+    #: roofline seconds above which a micro-batch is delegated to the
+    #: fleet (streamed, bounded host memory); None = always inline.
+    fleet_threshold: float | None = None
+    fleet_workers: int = 2        # threads for delegated batches
 
     @property
     def width(self) -> int:
@@ -172,6 +189,7 @@ class QueryResult:
     batch_size: int               # real queries in the batch
     batch_width: int              # padded run-axis width
     compiled: bool                # this batch paid an executable build
+    via_fleet: bool = False       # delegated to repro.fleet (streamed)
 
     def to_dict(self, *, traces: bool = False) -> dict:
         """Wire-ready dict: telemetry + headline summary; pass
@@ -184,6 +202,7 @@ class QueryResult:
                "batch_size": self.batch_size,
                "batch_width": self.batch_width,
                "compiled": self.compiled,
+               "via_fleet": self.via_fleet,
                "summary": self.result.summary()}
         if traces:
             out["result"] = self.result.to_dict()
@@ -218,6 +237,7 @@ class CCQueryEngine:
     """
 
     def __init__(self, config: EngineConfig | None = None, *,
+                 auto_drain: bool = False,
                  clock: Callable[[], float] = time.monotonic):
         self.config = config or EngineConfig()
         self._clock = clock
@@ -229,6 +249,20 @@ class CCQueryEngine:
         self._cache_base = SWEEP_EXEC_CACHE.stats()
         self._next_ticket = 0
         self._signatures: set[StructuralSignature] = set()
+        # engine state lock (queue/results/metrics) + a condition that
+        # signals both "work arrived" (drain loop) and "result landed"
+        # (wait); a separate lock serialises drains so a user-called
+        # drain() and the background loop never interleave batches.
+        self._lock = threading.RLock()
+        self._wake = threading.Condition(self._lock)
+        self._drain_lock = threading.Lock()
+        self._closed = False
+        self._drainer: threading.Thread | None = None
+        self.auto_drain = bool(auto_drain)
+        if self.auto_drain:
+            self._drainer = threading.Thread(
+                target=self._drain_loop, name="whatif-drain", daemon=True)
+            self._drainer.start()
 
     # -- signature ----------------------------------------------------------
 
@@ -275,54 +309,126 @@ class CCQueryEngine:
         :class:`QueueFull` — the caller decides whether to retry.
         """
         pending = self._prepare(query)      # validates before charging
-        outcome = self._admission.admit(query.tenant, len(self._queue))
-        if outcome is not None:
-            return outcome
-        ticket = self._next_ticket
-        self._next_ticket += 1
-        pending.ticket = ticket
-        pending.t_submit = self._clock()
-        self._queue.append(pending)
-        self._signatures.add(pending.sig)
-        return Admitted(ticket=ticket, tenant=query.tenant,
-                        queue_depth=len(self._queue))
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("CCQueryEngine is closed")
+            outcome = self._admission.admit(query.tenant,
+                                            len(self._queue))
+            if outcome is not None:
+                return outcome
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            pending.ticket = ticket
+            pending.t_submit = self._clock()
+            self._queue.append(pending)
+            self._signatures.add(pending.sig)
+            self._wake.notify_all()
+            return Admitted(ticket=ticket, tenant=query.tenant,
+                            queue_depth=len(self._queue))
 
     def drain(self) -> list[QueryResult]:
         """Serve the whole queue as signature-grouped micro-batches
-        (FIFO: each batch groups the head's signature)."""
+        (FIFO: each batch groups the head's signature).  Device
+        execution runs outside the state lock, so submitters are never
+        blocked behind a batch."""
         done: list[QueryResult] = []
-        while self._queue:
-            head_sig = self._queue[0].sig
-            width = self.config.width
-            group: list[_Pending] = []
-            rest: deque[_Pending] = deque()
-            for p in self._queue:
-                if p.sig == head_sig and len(group) < width:
-                    group.append(p)
-                else:
-                    rest.append(p)
-            self._queue = rest
-            done.extend(self._execute(group, width))
-        for qr in done:
-            self._results[qr.ticket] = qr
-            while len(self._results) > self.config.max_results:
-                self._results.popitem(last=False)
+        with self._drain_lock:
+            while True:
+                with self._lock:
+                    if not self._queue:
+                        break
+                    head_sig = self._queue[0].sig
+                    width = self.config.width
+                    group: list[_Pending] = []
+                    rest: deque[_Pending] = deque()
+                    for p in self._queue:
+                        if p.sig == head_sig and len(group) < width:
+                            group.append(p)
+                        else:
+                            rest.append(p)
+                    self._queue = rest
+                batch = self._execute(group, width)
+                with self._lock:
+                    for qr in batch:
+                        self._results[qr.ticket] = qr
+                        while len(self._results) > \
+                                self.config.max_results:
+                            self._results.popitem(last=False)
+                    self._wake.notify_all()
+                done.extend(batch)
         return done
 
     def ask(self, query: WhatIfQuery):
         """submit + drain for one query: a ``QueryResult`` if admitted,
         else the ``Throttled`` / ``QueueFull`` outcome.  NOTE: drains
         previously queued queries too (they're answered, retrievable
-        via :meth:`result`)."""
+        via :meth:`result`).  With ``auto_drain`` the background thread
+        owns the loop and this waits for the answer instead."""
         outcome = self.submit(query)
         if not isinstance(outcome, Admitted):
             return outcome
+        if self.auto_drain:
+            return self.wait(outcome.ticket)
         self.drain()
         return self.result(outcome.ticket)
 
     def result(self, ticket: int) -> QueryResult | None:
         """A completed query's result (None while still queued)."""
-        return self._results.get(ticket)
+        with self._lock:
+            return self._results.get(ticket)
+
+    def wait(self, ticket: int,
+             timeout: float | None = None) -> QueryResult | None:
+        """Block until ``ticket``'s result lands (None on timeout, or
+        if the engine closes before serving it)."""
+        deadline = None if timeout is None else \
+            time.monotonic() + timeout
+        with self._wake:
+            while ticket not in self._results:
+                if self._closed and self._drainer is None:
+                    return self._results.get(ticket)
+                left = None if deadline is None else \
+                    deadline - time.monotonic()
+                if left is not None and left <= 0:
+                    return None
+                self._wake.wait(0.1 if left is None else min(left, 0.1))
+            return self._results[ticket]
+
+    # -- background drain / lifecycle ---------------------------------------
+
+    def _drain_loop(self) -> None:
+        while True:
+            with self._wake:
+                while not self._queue and not self._closed:
+                    self._wake.wait(0.1)
+                if self._closed and not self._queue:
+                    return
+            self.drain()
+
+    def close(self, *, drain: bool = True) -> None:
+        """Shut down cleanly: stop admitting, optionally serve what is
+        already queued, and join the background drain thread."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            if not drain:
+                self._queue.clear()
+            self._wake.notify_all()
+        th = self._drainer
+        if th is not None:
+            th.join()
+            self._drainer = None
+        elif drain:
+            self.drain()
+        with self._wake:
+            self._wake.notify_all()
+
+    def __enter__(self) -> "CCQueryEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- execution ----------------------------------------------------------
 
@@ -334,31 +440,56 @@ class CCQueryEngine:
         before = SWEEP_EXEC_CACHE.stats()
         sweep = Sweep([(f"q{p.ticket}", p.query.cfg, p.padded)
                        for p in group])
-        res = sweep.run(
-            n_steps=q0.n_steps, trace_every=q0.trace_every,
-            reduce=self.config.reduce,
-            use_kernels=self.config.use_kernels,
-            interpret=self.config.interpret,
-            pad_runs_to=width,
-            min_delay_slots=max(p.min_delay_slots for p in group),
-            dense_rows=self.config.dense_rows)
+        kw = dict(n_steps=q0.n_steps, trace_every=q0.trace_every,
+                  reduce=self.config.reduce,
+                  use_kernels=self.config.use_kernels,
+                  interpret=self.config.interpret,
+                  min_delay_slots=max(p.min_delay_slots for p in group),
+                  dense_rows=self.config.dense_rows)
+        via_fleet = self._oversized(group)
+        if via_fleet:
+            # fleet road: streamed device->host in bounded memory; the
+            # per-query slices are bitwise the inline path's (padding
+            # is inert; gated in tests/test_whatif_engine.py)
+            from repro.fleet import FleetConfig, run_fleet
+            out = run_fleet(
+                sweep,
+                config=FleetConfig(n_workers=self.config.fleet_workers,
+                                   max_points=max(1, width // 2)),
+                **kw)
+            res = out.result
+        else:
+            res = sweep.run(pad_runs_to=width, **kw)
         t1 = self._clock()
         delta = SWEEP_EXEC_CACHE.stats() - before
         exec_s = t1 - t0
-        self._metrics.record_batch(len(group), width, exec_s)
         out = []
-        for p in group:
-            sim = self._trim(res[f"q{p.ticket}"], p)
-            latency = t1 - p.t_submit
-            wait = t0 - p.t_submit
-            self._metrics.latency.record(latency)
-            self._metrics.queue_wait.record(wait)
-            out.append(QueryResult(
-                ticket=p.ticket, label=p.query.label or q0.label,
-                tenant=p.query.tenant, result=sim, latency_s=latency,
-                queue_wait_s=wait, exec_s=exec_s, batch_size=len(group),
-                batch_width=width, compiled=delta.misses > 0))
+        with self._lock:
+            self._metrics.record_batch(len(group), width, exec_s)
+            for p in group:
+                sim = self._trim(res[f"q{p.ticket}"], p)
+                latency = t1 - p.t_submit
+                wait = t0 - p.t_submit
+                self._metrics.latency.record(latency)
+                self._metrics.queue_wait.record(wait)
+                out.append(QueryResult(
+                    ticket=p.ticket, label=p.query.label or q0.label,
+                    tenant=p.query.tenant, result=sim,
+                    latency_s=latency, queue_wait_s=wait, exec_s=exec_s,
+                    batch_size=len(group), batch_width=width,
+                    compiled=delta.misses > 0, via_fleet=via_fleet))
         return out
+
+    def _oversized(self, group: list[_Pending]) -> bool:
+        """Roofline estimate of the batch vs ``fleet_threshold``."""
+        thr = self.config.fleet_threshold
+        if thr is None:
+            return False
+        from repro.fleet.plan import estimate_point_cost
+        sig = group[0].sig
+        steps = sig.n_samples * sig.trace_every
+        est = sum(estimate_point_cost(p.padded, steps) for p in group)
+        return est >= thr
 
     @staticmethod
     def _trim(sim: SimResult, p: _Pending) -> SimResult:
@@ -379,10 +510,11 @@ class CCQueryEngine:
         """The serving metrics dict: query/batch counters, latency
         percentiles, batch occupancy, executable-cache hit rate and the
         compile/run split — everything ``BENCH_serve.json`` records."""
-        out = self._metrics.to_dict(
-            cache_stats=SWEEP_EXEC_CACHE.stats() - self._cache_base,
-            admission=self._admission.counters())
-        out["queue_depth"] = len(self._queue)
-        out["signatures"] = len(self._signatures)
+        with self._lock:
+            out = self._metrics.to_dict(
+                cache_stats=SWEEP_EXEC_CACHE.stats() - self._cache_base,
+                admission=self._admission.counters())
+            out["queue_depth"] = len(self._queue)
+            out["signatures"] = len(self._signatures)
         out["batch_width"] = self.config.width
         return out

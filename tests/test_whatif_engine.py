@@ -292,3 +292,109 @@ def test_latency_recorder_percentiles():
     assert r.percentile(100) == 1.0
     s = r.summary()
     assert s["count"] == 5 and s["p99"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# background drain (auto_drain) + fleet delegation
+# ---------------------------------------------------------------------------
+
+
+def test_auto_drain_serves_and_closes_cleanly():
+    """Submitters enqueue; the background thread drains; wait() blocks
+    until the answer lands; close() joins the thread."""
+    import threading
+
+    with CCQueryEngine(EngineConfig(
+            max_batch=8,
+            admission=AdmissionConfig(rate=1e9, burst=10_000,
+                                      max_queue=256)),
+            auto_drain=True) as eng:
+        tickets = []
+
+        def sub(i):
+            out = eng.submit(WhatIfQuery(cfg=CFGS["rev"],
+                                         scenario=SPECS["in4"],
+                                         n_steps=N_STEPS,
+                                         label=f"bg{i}"))
+            assert isinstance(out, Admitted), out
+            tickets.append(out.ticket)
+
+        threads = [threading.Thread(target=sub, args=(i,))
+                   for i in range(5)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        results = [eng.wait(t, timeout=600) for t in tickets]
+        assert all(r is not None for r in results)
+        assert eng.metrics()["queue_depth"] == 0
+    # closed: further submissions are refused loudly
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit(WhatIfQuery(cfg=CFGS["rev"], scenario=SPECS["in4"],
+                               n_steps=N_STEPS))
+
+
+def test_auto_drain_bitwise_matches_sync_path():
+    """The background road must not change a single bit vs the
+    synchronous submit+drain road."""
+    sync = _open_engine()
+    r_sync = sync.ask(WhatIfQuery(cfg=CFGS["dcqcn"],
+                                  scenario=SPECS["in6"],
+                                  n_steps=N_STEPS))
+    with CCQueryEngine(EngineConfig(
+            max_batch=8,
+            admission=AdmissionConfig(rate=1e9, burst=10_000,
+                                      max_queue=256)),
+            auto_drain=True) as eng:
+        r_bg = eng.ask(WhatIfQuery(cfg=CFGS["dcqcn"],
+                                   scenario=SPECS["in6"],
+                                   n_steps=N_STEPS))
+    np.testing.assert_array_equal(r_bg.result.delivered,
+                                  r_sync.result.delivered)
+    np.testing.assert_array_equal(r_bg.result.max_q, r_sync.result.max_q)
+    np.testing.assert_array_equal(np.asarray(r_bg.result.final.rate),
+                                  np.asarray(r_sync.result.final.rate))
+
+
+def test_close_drains_pending_queries():
+    eng = CCQueryEngine(EngineConfig(
+        max_batch=8, admission=AdmissionConfig(rate=1e9, burst=10_000,
+                                               max_queue=256)))
+    out = eng.submit(WhatIfQuery(cfg=CFGS["rev"], scenario=SPECS["in4"],
+                                 n_steps=N_STEPS))
+    assert isinstance(out, Admitted)
+    eng.close()                       # sync engine: close() drains
+    assert eng.result(out.ticket) is not None
+
+
+def test_fleet_delegation_bitwise_and_flagged():
+    """fleet_threshold=0 forces every batch onto the fleet road; the
+    per-query result must be bitwise the inline road's."""
+    inline = _open_engine()
+    r_in = inline.ask(WhatIfQuery(cfg=CFGS["swift"],
+                                  scenario=SPECS["in4"],
+                                  n_steps=N_STEPS))
+    assert r_in.via_fleet is False
+
+    fleet_eng = CCQueryEngine(EngineConfig(
+        max_batch=8, fleet_threshold=0.0,
+        admission=AdmissionConfig(rate=1e9, burst=10_000,
+                                  max_queue=256)))
+    r_fl = fleet_eng.ask(WhatIfQuery(cfg=CFGS["swift"],
+                                     scenario=SPECS["in4"],
+                                     n_steps=N_STEPS))
+    assert r_fl.via_fleet is True
+    assert r_fl.to_dict()["via_fleet"] is True
+    for f in ("delivered", "rate", "inst_thr", "max_q", "marked", "cnp"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r_fl.result, f)),
+            np.asarray(getattr(r_in.result, f)), err_msg=f)
+    np.testing.assert_array_equal(np.asarray(r_fl.result.final.qh),
+                                  np.asarray(r_in.result.final.qh))
+
+
+def test_fleet_threshold_none_never_delegates():
+    eng = _open_engine()
+    r = eng.ask(WhatIfQuery(cfg=CFGS["rev"], scenario=SPECS["in4"],
+                            n_steps=N_STEPS))
+    assert r.via_fleet is False
